@@ -1,0 +1,43 @@
+"""Beyond-paper: cluster-sparse attention vs dense flash attention (CPU
+wall-clock at small scale + the flop model at production scale). The LM-side
+analog of Fig. 3: the same reordering machinery applied to attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.configs.base import ClusterKVConfig
+from repro.models import attention as attn
+from repro.launch.analytic import cell_model
+
+
+def run(out):
+    B, Hq, Hkv, S, dh = 1, 8, 2, 2048, 64
+    rng = np.random.default_rng(0)
+    cc = rng.standard_normal((8, dh)) * 4
+    asg = rng.integers(0, 8, S)
+    k = jnp.asarray(cc[asg] + 0.3 * rng.standard_normal((S, dh)),
+                    jnp.float32)[None, None].repeat(Hkv, 1)
+    q = jnp.asarray(rng.standard_normal((B, Hq, S, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, dh)), jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+
+    t_flash = timeit(lambda: attn.flash_attention(q, k, v, pos, pos),
+                     warmup=1, iters=5)
+    out(f"attn_dense_flash_s2048,{t_flash*1e6:.0f},B1H8")
+    for nb in (4, 8, 16):
+        cfg = ClusterKVConfig(enabled=True, block_q=128, block_k=128,
+                              blocks_per_query=nb)
+        t_ck = timeit(lambda: attn.clusterkv_attention(q, k, v, pos, pos,
+                                                       cfg), warmup=1, iters=5)
+        out(f"attn_clusterkv_b{nb}_s2048,{t_ck*1e6:.0f},"
+            f"x{t_flash/t_ck:.2f}_vs_flash")
+
+    # production-scale flop model (mistral-large prefill_32k)
+    dense = cell_model("mistral-large-123b", "prefill_32k", "flash")
+    ck = cell_model("mistral-large-123b", "prefill_32k", "clusterkv")
+    out(f"attn_model_mistral_prefill32k_dense,{dense.flops:.3e},global_flops")
+    out(f"attn_model_mistral_prefill32k_clusterkv,{ck.flops:.3e},"
+        f"x{dense.flops/ck.flops:.2f}_fewer")

@@ -1,0 +1,52 @@
+"""Shared benchmark helpers: timing + the SIFT/GIST-like working sets."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import knn, ordering
+from repro.data.pipeline import gist_like, sift_like
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time (s) of fn(*args) with device sync."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def dataset(name: str, n: int, seed: int = 0) -> np.ndarray:
+    if name == "sift":
+        return sift_like(n, seed)
+    if name == "gist":
+        return gist_like(n, seed)
+    raise ValueError(name)
+
+
+def knn_problem(name: str, n: int, k: int, seed: int = 0):
+    """Returns (x, rows, cols) for a symmetrized kNN interaction pattern."""
+    x = dataset(name, n, seed)
+    rows, cols, _ = knn.knn_coo(jnp.asarray(x), jnp.asarray(x), k,
+                                block=1024, exclude_self=True)
+    rows, cols = np.asarray(rows), np.asarray(cols)
+    # symmetrize (paper Fig. 2 uses symmetrized interactions)
+    r2 = np.concatenate([rows, cols])
+    c2 = np.concatenate([cols, rows])
+    key = r2.astype(np.int64) * n + c2
+    _, first = np.unique(key, return_index=True)
+    return x, r2[first], c2[first]
+
+
+def reorder(name: str, x, rows, cols):
+    pi = ordering.compute_ordering(name, x, rows, cols)
+    r2, c2 = ordering.apply_ordering(rows, cols, pi)
+    order = np.lexsort((c2, r2))
+    return pi, r2[order], c2[order]

@@ -1,0 +1,65 @@
+"""Paper Fig. 3: iterative near-neighbor interaction (t-SNE attractive
+force) throughput under each ordering.
+
+Two execution paths per ordering:
+  csr   gather-based per-edge interaction (what a scattered layout forces)
+  bsr   blockwise-dense interaction over the ELL-BSR tiles (only viable
+        when the ordering concentrates nonzeros into dense tiles — the
+        paper's point; tile fill ratios are reported alongside)
+
+The reference time (paper's convention) is the scattered CSR time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import knn_problem, reorder, timeit
+from repro.core import blocksparse, interact
+
+
+CASES = [("sift", 4096, 30), ("gist", 2048, 45)]
+ORDERINGS = ["scattered", "rcm", "pca_1d", "lex3", "dual_tree"]
+
+
+def tsne_edge_path(rows, cols, p_vals, y, n):
+    """Per-edge (CSR-style) attractive force — the gather baseline."""
+    diff = y[rows] - y[cols]
+    q = 1.0 / (1.0 + jnp.sum(diff * diff, axis=1))
+    w = (p_vals * q)[:, None] * diff
+    return jnp.zeros_like(y).at[rows].add(w)
+
+
+def run(out):
+    for ds, n, k in CASES:
+        x, rows, cols = knn_problem(ds, n, k)
+        rng = np.random.default_rng(0)
+        y_embed = jnp.asarray(rng.standard_normal((n, 2)), jnp.float32)
+        p_raw = rng.random(len(rows)).astype(np.float32)
+
+        edge = jax.jit(tsne_edge_path, static_argnames=("n",))
+        ref_time = None
+        for name in ORDERINGS:
+            pi, r2, c2 = reorder(name, x, rows, cols)
+            y_perm = y_embed[np.argsort(pi)] if False else y_embed
+            rj, cj = jnp.asarray(r2), jnp.asarray(c2)
+            pv = jnp.asarray(p_raw)
+            t_csr = timeit(lambda: edge(rj, cj, pv, y_embed, n))
+            if ref_time is None:
+                ref_time = t_csr
+            line = f"fig3_{ds}_{name}_csr,{t_csr*1e6:.0f},x{ref_time/t_csr:.2f}"
+            out(line)
+            # blockwise path: only meaningful when tiles are dense enough.
+            # kept-tile count == the paper's covering size == the MXU work
+            # a TPU would do — the direct TPU-time proxy for this ordering.
+            bsr = blocksparse.build_bsr(r2, c2, p_raw, n, bs=32, sb=8)
+            kept = int(np.asarray(bsr.nbr_mask).sum())
+            if bsr.max_nbr * bsr.bs <= 16 * k:   # memory guard for scattered
+                t_bsr = timeit(lambda: interact.tsne_attractive(
+                    bsr.vals, bsr.col_idx, bsr.nbr_mask, y_embed, n))
+                out(f"fig3_{ds}_{name}_bsr,{t_bsr*1e6:.0f},"
+                    f"fill={bsr.fill:.3f};tiles={kept};x{ref_time/t_bsr:.2f}")
+            else:
+                out(f"fig3_{ds}_{name}_bsr,skipped,"
+                    f"fill={bsr.fill:.3f};tiles={kept};tiles_too_sparse")

@@ -1,0 +1,42 @@
+"""Benchmark harness: one module per paper table/figure (+ beyond-paper).
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  fig1_orderings   paper Fig. 1  (beta/gamma, four orderings)
+  table1_gamma     paper Table 1 (gamma across orderings, SIFT/GIST-like)
+  fig3_throughput  paper Fig. 3  (interaction throughput per ordering)
+  micro_blas       paper §4.1    (banded best case vs scattered base case)
+  attention_bench  beyond-paper  (cluster-sparse vs dense attention)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (attention_bench, fig1_orderings, fig3_throughput,
+                            micro_blas, table1_gamma)
+    suites = {
+        "fig1_orderings": fig1_orderings.run,
+        "table1_gamma": table1_gamma.run,
+        "fig3_throughput": fig3_throughput.run,
+        "micro_blas": micro_blas.run,
+        "attention_bench": attention_bench.run,
+    }
+    chosen = (args.only.split(",") if args.only else list(suites))
+
+    print("name,us_per_call,derived")
+    for name in chosen:
+        t0 = time.time()
+        suites[name](lambda line: print(line, flush=True))
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Paper Table 1: gamma-score (sigma = k/2) of the SIFT/GIST interaction
+matrices under each ordering. Offline stand-in datasets (DESIGN.md §4);
+the claim reproduced is the ORDERING of the scores: dual_tree > lexical >
+1D/rCM > scattered."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import knn_problem, reorder
+from repro.core import measures
+
+
+from repro.configs.paper_spmv import TABLE1
+
+
+def run(out):
+    for exp in TABLE1:
+        ds, n, k, sigma = (exp.dataset, exp.n_points, exp.k_neighbors,
+                           exp.sigma)
+        x, rows, cols = knn_problem(ds, n, k)
+        for name in exp.orderings:
+            _, r2, c2 = reorder(name, x, rows, cols)
+            g = float(measures.gamma_score(jnp.asarray(r2), jnp.asarray(c2),
+                                           sigma, n))
+            out(f"table1_{ds}_{name},{g:.3f},k={k};sigma={sigma}")

@@ -1,0 +1,63 @@
+"""Mean-shift case study (paper §3.2): iterative kernel-weighted mean
+shifting over a fixed source set, targets migrating — the non-stationary
+interaction case. Neighbor pattern refreshed every few iterations (the
+paper notes target-side clustering "needs not be updated as frequently").
+
+  PYTHONPATH=src python examples/meanshift.py
+"""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blocksparse, interact, knn, ordering
+from repro.data.pipeline import feature_mixture
+
+
+def main():
+    n, d, k = 1024, 32, 32
+    rng = np.random.default_rng(2)
+    basis = rng.standard_normal((6, d)) / np.sqrt(6)
+    centers = rng.standard_normal((6, 6)) @ basis * 4.0
+    labels = rng.integers(0, 6, n)
+    src = (centers[labels] + 0.4 * rng.standard_normal((n, d))
+           ).astype(np.float32)
+
+    # dual-tree ordering of the (fixed) sources: cluster-contiguous memory
+    pi = ordering.dual_tree(src, d=3)
+    src_s = src[pi]
+    t = src_s.copy()                    # targets start at the points
+    h2 = 2.0
+
+    t0 = time.time()
+    for it in range(30):
+        if it % 10 == 0:               # refresh neighbor pattern (cheap-ish)
+            idx, _ = knn.knn_graph(jnp.asarray(t), jnp.asarray(src_s), k)
+            rows = np.repeat(np.arange(n), k)
+            cols = np.asarray(idx).ravel()
+            bsr = blocksparse.build_bsr(rows, cols,
+                                        np.ones(n * k, np.float32), n, bs=32)
+            src_blocked = np.zeros((bsr.n_cb * bsr.bs, d), np.float32)
+            src_blocked[:n] = src_s
+            src_b = jnp.asarray(src_blocked.reshape(bsr.n_cb, bsr.bs, d))
+        t = np.asarray(interact.meanshift_step(
+            bsr.vals, bsr.col_idx, src_b, jnp.asarray(t), h2, n))
+    dt = time.time() - t0
+
+    # targets should have collapsed near the 6 modes
+    from scipy.cluster.vq import kmeans2
+    modes, assign = kmeans2(t, 6, seed=0, minit="++")
+    spread = np.mean([t[assign == c].std(0).mean() for c in range(6)
+                      if (assign == c).any()])
+    print(f"30 mean-shift iterations in {dt:.1f}s")
+    print(f"residual intra-mode spread: {spread:.4f} (start ~0.4)")
+    assert spread < 0.1, "mean shift failed to converge to modes"
+    print("converged to modes OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Serve a small model with batched requests, decoding with the paper's
+cluster-sparse KV selection vs dense attention — the LM-side analog of the
+paper's iterative near-neighbor interaction.
+
+  PYTHONPATH=src python examples/serve_clusterkv.py
+"""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.configs.base import ClusterKVConfig
+from repro.models import model_api
+from repro.train import trainer
+
+
+def main():
+    cfg = reduced_config("qwen2-0.5b").with_(
+        clusterkv=ClusterKVConfig(enabled=True, block_q=32, block_k=32,
+                                  blocks_per_query=4, decode_clusters=4))
+    key = jax.random.PRNGKey(0)
+    params, _ = model_api.init(cfg, key)
+    batch_size, prompt, gen = 4, 256, 32
+
+    batch = model_api.make_small_batch(cfg, key, batch_size, prompt,
+                                       kind="prefill")
+    prefill = jax.jit(trainer.make_prefill_step(cfg, None, "flash"))
+
+    results = {}
+    for backend in ("flash", "clusterkv"):
+        decode = jax.jit(trainer.make_decode_step(cfg, None, backend))
+        cache, logits = prefill(params, batch)
+        cache = dict(cache)
+        for k in ("k", "v"):
+            pads = [(0, 0)] * cache[k].ndim
+            pads[-2] = (0, gen)
+            cache[k] = jnp.pad(cache[k], pads)
+        toks = jnp.argmax(logits, -1)[:, None]
+        seqs = [toks]
+        # warm up compile then time the loop
+        first_logits, _ = decode(params, cache, {"tokens": toks})
+        t0 = time.time()
+        for _ in range(gen - 1):
+            logits, cache = decode(params, cache, {"tokens": toks})
+            toks = jnp.argmax(logits, -1)[:, None]
+            seqs.append(toks)
+        jax.block_until_ready(logits)
+        dt = time.time() - t0
+        results[backend] = (np.asarray(first_logits), dt)
+        print(f"{backend:10s}: {gen} steps x {batch_size} seqs in {dt:.2f}s "
+              f"({batch_size*gen/dt:.0f} tok/s)")
+
+    a, b = results["flash"][0], results["clusterkv"][0]
+    cos = float((a * b).sum() / (np.linalg.norm(a) * np.linalg.norm(b)))
+    rel = float(np.linalg.norm(a - b) / np.linalg.norm(a))
+    print(f"first-step logits: cosine {cos:.4f}, rel-L2 {rel:.3f} "
+          f"(selection covers {4*32}/{prompt} keys; untrained weights)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Train a small LM end-to-end on CPU with the full framework stack
+(config -> data pipeline -> train step -> checkpoint -> restart).
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 60]
+
+Uses the qwen2 family at reduced size; demonstrates checkpoint/restart by
+killing the loop halfway and resuming (the fault-tolerance contract).
+"""
+import argparse
+import shutil
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.configs import reduced_config
+from repro.data import pipeline
+from repro.models import model_api
+from repro.optim.optimizers import make_optimizer
+from repro.train import trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = reduced_config("qwen2-0.5b").with_(n_layers=4, d_model=128,
+                                             d_ff=512, n_heads=8,
+                                             n_kv_heads=4)
+    opt = make_optimizer("adamw", lr=1e-3, warmup=10, total=args.steps)
+    step_fn, _ = trainer.make_train_step(cfg, None, "flash", optimizer=opt)
+    step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    params, _ = model_api.init(cfg, jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    print(f"params: {sum(x.size for x in jax.tree.leaves(params))/1e6:.2f}M")
+
+    tmp = tempfile.mkdtemp()
+    ck = Checkpointer(tmp, keep=2)
+    losses = []
+
+    def run(params, opt_state, start, stop):
+        for s in range(start, stop):
+            batch = {k: jnp.asarray(v) for k, v in
+                     pipeline.token_batch(cfg, s, args.batch, args.seq).items()}
+            params, opt_state, m = step(params, opt_state, batch)
+            losses.append(float(m["loss"]))
+            if s % 10 == 0:
+                print(f"step {s:4d} loss {losses[-1]:.4f}")
+        return params, opt_state
+
+    half = args.steps // 2
+    params, opt_state = run(params, opt_state, 0, half)
+    ck.save(half - 1, {"p": params, "o": opt_state}, blocking=True)
+    print(f"-- simulated failure at step {half}; restoring from checkpoint --")
+    del params, opt_state
+    restored, at = ck.restore({"p": model_api.init(cfg, jax.random.PRNGKey(0))[0],
+                               "o": opt.init(model_api.init(cfg, jax.random.PRNGKey(0))[0])})
+    params, opt_state = restored["p"], restored["o"]
+    params, opt_state = run(params, opt_state, at + 1, args.steps)
+
+    first, last = sum(losses[:5]) / 5, sum(losses[-5:]) / 5
+    print(f"loss {first:.3f} -> {last:.3f}")
+    assert last < first, "training failed to reduce loss"
+    shutil.rmtree(tmp, ignore_errors=True)
+    print("OK: trained through a simulated failure with exact resume")
+
+
+if __name__ == "__main__":
+    main()

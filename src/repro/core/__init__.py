@@ -1,0 +1,17 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+  embedding    PCA principal-axis embedding (paper §2.4 step 1)
+  hierarchy    Morton codes + adaptive 2^d tree (step 2)
+  ordering     the orderings compared in the paper (§4.3)
+  measures     patch-density beta estimate + gamma score (§2.2-2.3)
+  knn          blocked exact kNN graph (the interaction pattern, Eq. 1)
+  blocksparse  two-level ELL-BSR storage (step 3)
+  interact     multi-level block-segment interactions (step 4)
+  dist         shard_map row-block-sharded SpMV
+  clusterkv    the pipeline as an LM attention backend (DESIGN.md §3)
+"""
+from repro.core import (blocksparse, clusterkv, dist, embedding, hierarchy,
+                        interact, knn, measures, ordering)
+
+__all__ = ["blocksparse", "clusterkv", "dist", "embedding", "hierarchy",
+           "interact", "knn", "measures", "ordering"]

@@ -1,0 +1,62 @@
+"""Patch-density-guided autotuning of the cluster-sparse attention budget.
+
+The paper's γ-score measures how much interaction mass concentrates into
+dense patches under an ordering (§2.3). The same quantity tunes the LM
+backend: after cluster-sorting keys, the centroid score mass captured by
+the top-B key tiles per query tile is a direct coverage estimate — pick
+the smallest B whose estimated coverage exceeds the target. Models with
+strongly clustered keys (high patch density) get small B (fast); diffuse
+ones automatically fall back toward dense attention.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ClusterKVConfig
+from repro.core import clusterkv as ckv
+
+
+def coverage_curve(q: jax.Array, k: jax.Array, cfg: ClusterKVConfig
+                   ) -> jax.Array:
+    """Estimated softmax-mass coverage as a function of B (tiles kept).
+
+    q (B,Hq,S,dh), k (B,Hkv,S,dh). Returns (nkb,) monotone curve: entry i =
+    mean over query tiles of the softmax mass (at tile granularity)
+    captured by the top-(i+1) key tiles under the cluster ordering.
+    """
+    b, hq, s, dh = q.shape
+    hkv = k.shape[1]
+    bq = min(cfg.block_q, s)
+    bk = min(cfg.block_k, s)
+    nqb, nkb = s // bq, s // bk
+
+    perm = ckv.cluster_perm(k, d=cfg.embed_dim)
+    k_s = jnp.take_along_axis(k, perm[..., None], axis=-2)
+    cent = ckv.block_centroids(k_s, bk)                    # (B,Hkv,nkb,dh)
+    qc = q.reshape(b, hkv, hq // hkv, nqb, bq, dh).mean(axis=(2, 4))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qc.astype(jnp.float32),
+                        cent.astype(jnp.float32)) / jnp.sqrt(float(dh))
+    # tile-granularity softmax mass, sorted descending per query tile
+    w = jax.nn.softmax(scores * bk, axis=-1)   # bk: tiles hold bk keys
+    w_sorted = -jnp.sort(-w, axis=-1)
+    return jnp.mean(jnp.cumsum(w_sorted, axis=-1), axis=(0, 1, 2))
+
+
+def tune_blocks_per_query(q: jax.Array, k: jax.Array,
+                          cfg: ClusterKVConfig,
+                          target_coverage: float = 0.95
+                          ) -> Tuple[ClusterKVConfig, float]:
+    """Smallest B reaching the target estimated coverage (plus the always-
+    kept local window). Returns (updated config, achieved coverage)."""
+    curve = coverage_curve(q, k, cfg)
+    nkb = curve.shape[0]
+    b_needed = int(jnp.argmax(curve >= target_coverage)) + 1
+    if float(curve[-1]) < target_coverage:
+        b_needed = nkb
+    b_needed = min(b_needed + cfg.local_window_blocks, nkb)
+    return (dataclasses.replace(cfg, blocks_per_query=b_needed),
+            float(curve[min(b_needed, nkb) - 1]))

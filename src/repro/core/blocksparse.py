@@ -1,0 +1,121 @@
+"""Multi-level compressed block-sparse storage (paper §2.4).
+
+TPU adaptation of the paper's multi-level scheme (DESIGN.md §2): the bottom
+level is a fixed MXU-aligned ``bs x bs`` tile; a row-block keeps the list of
+column-block indices of its nonzero tiles (ELL-padded so shapes are static
+for Pallas). The adaptive tree survives as (i) *which* tiles are kept and
+(ii) the second level: tiles are grouped under ``sb x sb``-tile superblocks,
+and the per-row tile lists are ordered by superblock then column — the
+multi-level iteration schedule that improves charge-segment reuse.
+
+``nnz / covered area`` of the kept tiles is exactly the paper's patch-density
+numerator/denominator for this (uniform-grid) covering — reported as
+``fill``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class BSR:
+    bs: int                 # bottom-level tile size
+    sb: int                 # superblock size, in tiles (level above)
+    n: int                  # logical matrix dimension (n x n), pre-padding
+    n_rb: int
+    n_cb: int
+    col_idx: jnp.ndarray    # (n_rb, max_nbr) int32, padded with 0
+    nbr_mask: jnp.ndarray   # (n_rb, max_nbr) bool, False on padding
+    vals: jnp.ndarray       # (n_rb, max_nbr, bs, bs) dense tiles, 0 padded
+    fill: float             # nnz / (kept tiles * bs^2)
+    max_nbr: int
+
+    def to_dense(self) -> np.ndarray:
+        a = np.zeros((self.n_rb * self.bs, self.n_cb * self.bs), np.float32)
+        ci = np.asarray(self.col_idx)
+        mask = np.asarray(self.nbr_mask)
+        v = np.asarray(self.vals)
+        for rb in range(self.n_rb):
+            for t in range(self.max_nbr):
+                if mask[rb, t]:
+                    cb = ci[rb, t]
+                    a[rb * self.bs:(rb + 1) * self.bs,
+                      cb * self.bs:(cb + 1) * self.bs] += v[rb, t]
+        return a[:self.n, :self.n]
+
+
+def build_bsr(rows: np.ndarray, cols: np.ndarray, vals: Optional[np.ndarray],
+              n: int, bs: int = 32, sb: int = 8,
+              max_nbr: Optional[int] = None) -> BSR:
+    """Build the two-level ELL-BSR from COO. numpy preprocessing (one-off,
+    like the paper's tree build); duplicate (i, j) entries are summed."""
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    nnz = len(rows)
+    if vals is None:
+        vals = np.ones(nnz, np.float32)
+    vals = np.asarray(vals, np.float32)
+    n_rb = (n + bs - 1) // bs
+    n_cb = n_rb
+
+    rb, cb = rows // bs, cols // bs
+    tile_id = rb.astype(np.int64) * n_cb + cb
+
+    # per-row-block tile lists, multi-level schedule: superblock-major,
+    # then column within superblock
+    per_row: list[list[int]] = [[] for _ in range(n_rb)]
+    for t in np.unique(tile_id):
+        per_row[int(t) // n_cb].append(int(t) % n_cb)
+    for r in range(n_rb):
+        per_row[r].sort(key=lambda c: (c // sb, c))
+    counts = np.array([len(p) for p in per_row])
+    m = int(counts.max(initial=1))
+    if max_nbr is not None:
+        m = max_nbr
+        if counts.max(initial=0) > m:
+            raise ValueError(f"max_nbr={m} < needed {counts.max()}")
+    col_idx = np.zeros((n_rb, m), np.int32)
+    nbr_mask = np.zeros((n_rb, m), bool)
+    slot_of = {}
+    for r, lst in enumerate(per_row):
+        for s, c in enumerate(lst):
+            col_idx[r, s] = c
+            nbr_mask[r, s] = True
+            slot_of[(r, c)] = s
+
+    dense = np.zeros((n_rb, m, bs, bs), np.float32)
+    slots = np.fromiter((slot_of[(int(a), int(b))] for a, b in zip(rb, cb)),
+                        count=nnz, dtype=np.int64)
+    np.add.at(dense, (rb, slots, rows % bs, cols % bs), vals)
+
+    kept = int(counts.sum())
+    fill = nnz / max(kept * bs * bs, 1)
+    return BSR(bs=bs, sb=sb, n=n, n_rb=n_rb, n_cb=n_cb,
+               col_idx=jnp.asarray(col_idx), nbr_mask=jnp.asarray(nbr_mask),
+               vals=jnp.asarray(dense), fill=fill, max_nbr=m)
+
+
+def random_bsr(key_seed: int, n: int, bs: int, nbr: int, *, banded: bool = False) -> BSR:
+    """Synthetic BSR with exactly ``nbr`` dense tiles per row-block — the
+    micro-benchmark matrices of paper §4.1 (banded best case vs scattered)."""
+    rng = np.random.default_rng(key_seed)
+    n_rb = (n + bs - 1) // bs
+    cols_list = []
+    for r in range(n_rb):
+        if banded:
+            lo = max(0, min(r - nbr // 2, n_rb - nbr))
+            c = np.arange(lo, lo + nbr)
+        else:
+            c = rng.choice(n_rb, size=nbr, replace=False)
+            c.sort()
+        cols_list.append(c)
+    col_idx = np.stack(cols_list).astype(np.int32)
+    vals = rng.standard_normal((n_rb, nbr, bs, bs)).astype(np.float32)
+    return BSR(bs=bs, sb=8, n=n, n_rb=n_rb, n_cb=n_rb,
+               col_idx=jnp.asarray(col_idx),
+               nbr_mask=jnp.ones((n_rb, nbr), bool),
+               vals=jnp.asarray(vals), fill=1.0, max_nbr=nbr)

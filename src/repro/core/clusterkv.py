@@ -1,0 +1,234 @@
+"""Cluster-sparse attention — the paper's pipeline as an LM attention backend.
+
+Mapping (DESIGN.md §3): attention's score matrix *is* a near-neighbor
+interaction matrix (queries = targets, keys = sources). The paper's
+reordering pipeline is applied per (batch, kv-head):
+
+  1. low-dimensional embedding of the keys onto their top-d principal axes
+     (core.embedding, paper §2.4 step 1);
+  2. hierarchical clustering by Morton order in the embedding space
+     (core.hierarchy, step 2) -> keys permuted into cluster order;
+  3. the interaction is computed *block-sparse with dense blocks*: for each
+     128-wide query tile only the top-B key tiles (by centroid score) are
+     kept, and each kept (q-tile, k-tile) pair is a dense MXU block
+     (steps 3-4: multi-level storage + block-segment interaction).
+
+Causality is preserved exactly *within* the computed blocks via gathered
+key positions; block selection always boosts blocks containing the local
+causal window so recent tokens are never dropped. Like the paper's method
+(and kNN attention generally) the set of computed blocks is an
+approximation of full attention; tests bound the error against dense
+attention on clustered data.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hierarchy import morton_codes
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# steps 1+2: embed + cluster order
+# ---------------------------------------------------------------------------
+
+
+def _pca_project(k: jax.Array, d: int, iters: int = 4) -> jax.Array:
+    """Top-d principal projection of k (S, dh) -> (S, d). Deterministic
+    start (first d columns of a fixed rotation) keeps it jit/vmap friendly."""
+    s, dh = k.shape
+    kc = (k - jnp.mean(k, axis=0, keepdims=True)).astype(jnp.float32)
+    q = jnp.eye(dh, d, dtype=jnp.float32)
+
+    def body(q, _):
+        z = kc.T @ (kc @ q)
+        q, _ = jnp.linalg.qr(z)
+        return q, None
+
+    q, _ = jax.lax.scan(body, q, None, length=iters)
+    return kc @ q
+
+
+@functools.partial(jax.jit, static_argnames=("d", "bits"))
+def cluster_perm(k: jax.Array, d: int = 3, bits: int = 10) -> jax.Array:
+    """Cluster ordering of keys ``k`` (..., S, dh) -> perm (..., S).
+
+    perm[i] = index (into original order) of the i-th key in cluster order.
+    """
+    lead = k.shape[:-2]
+    flat = k.reshape((-1,) + k.shape[-2:])
+
+    def one(kh):
+        y = _pca_project(kh, d)
+        return jnp.argsort(morton_codes(y, bits)).astype(jnp.int32)
+
+    return jax.vmap(one)(flat).reshape(lead + (k.shape[-2],))
+
+
+def permute_kv(k: jax.Array, v: jax.Array, pos: jax.Array, perm: jax.Array):
+    """Apply cluster order along the S axis of k, v (B, H, S, dh), pos (B, H, S)."""
+    take = lambda a: jnp.take_along_axis(a, perm[..., None], axis=-2)
+    return take(k), take(v), jnp.take_along_axis(pos, perm, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# step 3: block centroids + top-B causal selection
+# ---------------------------------------------------------------------------
+
+
+def block_centroids(k_sorted: jax.Array, bk: int) -> jax.Array:
+    """(B, H, S, dh) -> (B, H, S/bk, dh) mean key per cluster tile."""
+    b, h, s, dh = k_sorted.shape
+    return k_sorted.reshape(b, h, s // bk, bk, dh).mean(axis=3)
+
+
+@functools.partial(jax.jit, static_argnames=("n_sel", "bq", "causal"))
+def select_blocks(q_cent: jax.Array, k_cent: jax.Array,
+                  kpos_min: jax.Array, kpos_max: jax.Array,
+                  qpos_min: jax.Array, qpos_max: jax.Array,
+                  n_sel: int, bq: int, causal: bool = True,
+                  local_window: int = 128) -> jax.Array:
+    """Top-``n_sel`` key tiles per query tile.
+
+    q_cent (B,H,nqb,dh), k_cent (B,H,nkb,dh); kpos_min/max (B,H,nkb) are the
+    min/max original positions inside each (cluster-sorted) key tile;
+    qpos_min/max (nqb,). Returns idx (B,H,nqb,n_sel) int32.
+    """
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q_cent, k_cent)
+    if causal:
+        # key tile fully in the future of the whole query tile -> never valid
+        invalid = kpos_min[:, :, None, :] > qpos_max[None, None, :, None]
+        scores = jnp.where(invalid, NEG_INF, scores)
+        # boost tiles holding the local causal window (recent tokens)
+        recent = (kpos_max[:, :, None, :] >=
+                  (qpos_min[None, None, :, None] - local_window))
+        near = recent & ~invalid
+        scores = jnp.where(near, scores + 1e4, scores)
+    _, idx = jax.lax.top_k(scores, n_sel)
+    return idx.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# step 4: block-segment interaction (online-softmax over selected tiles)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "causal"))
+def sparse_block_attention(q: jax.Array, k_sorted: jax.Array,
+                           v_sorted: jax.Array, pos_sorted: jax.Array,
+                           qpos: jax.Array, idx: jax.Array,
+                           bq: int, bk: int, causal: bool = True
+                           ) -> jax.Array:
+    """Block-sparse attention with dense MXU tiles (pure-JAX reference path;
+    the Pallas kernel in kernels/block_attention.py implements the same
+    contract).
+
+    q (B,Hq,S,dh); k_sorted/v_sorted (B,Hkv,S,dh) in cluster order;
+    pos_sorted (B,Hkv,S) original positions; qpos (S,) query positions;
+    idx (B,Hkv,nqb,n_sel) selected key tiles per query tile.
+    Hq must be a multiple of Hkv (GQA).
+    """
+    b, hq, s, dh = q.shape
+    hkv = k_sorted.shape[1]
+    g = hq // hkv
+    nqb = s // bq
+    n_sel = idx.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+
+    qb = q.reshape(b, hkv, g, nqb, bq, dh)
+    kb = k_sorted.reshape(b, hkv, s // bk, bk, dh)
+    vb = v_sorted.reshape(b, hkv, s // bk, bk, v_sorted.shape[-1])
+    pb = pos_sorted.reshape(b, hkv, s // bk, bk)
+    qp = qpos.reshape(nqb, bq)
+
+    def gather_tiles(x, i):                    # x (nkb, ...) i (nqb, n_sel)
+        return x[i]                            # (nqb, n_sel, ...)
+
+    def per_bh(qg, kt, vt, pt, it):
+        # qg (g,nqb,bq,dh)  kt/vt (nkb,bk,dh)  pt (nkb,bk)  it (nqb,n_sel)
+        ksel = gather_tiles(kt, it)            # (nqb, n_sel, bk, dh)
+        vsel = gather_tiles(vt, it)
+        psel = gather_tiles(pt, it)            # (nqb, n_sel, bk)
+
+        def over_sel(carry, xs):
+            m, l, acc = carry
+            kt_, vt_, pt_ = xs                 # (nqb,bk,dh),(nqb,bk,dh),(nqb,bk)
+            logit = jnp.einsum("gqtd,qsd->gqts", qg, kt_) * scale
+            if causal:
+                mask = pt_[None, :, None, :] <= qp[None, :, :, None]
+                logit = jnp.where(mask, logit, NEG_INF)
+            m_new = jnp.maximum(m, logit.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logit - m_new[..., None])
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "gqts,qsd->gqtd", p, vt_.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((g, nqb, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((g, nqb, bq), jnp.float32)
+        a0 = jnp.zeros((g, nqb, bq, v_sorted.shape[-1]), jnp.float32)
+        xs = (jnp.swapaxes(ksel, 0, 1), jnp.swapaxes(vsel, 0, 1),
+              jnp.swapaxes(psel, 0, 1))        # scan over n_sel
+        (m, l, acc), _ = jax.lax.scan(over_sel, (m0, l0, a0), xs)
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.vmap(jax.vmap(per_bh))(qb, kb, vb, pb, idx)
+    return out.reshape(b, hq, s, v_sorted.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode: top-c cluster selection + gathered attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n_sel",))
+def decode_select(q: jax.Array, centroids: jax.Array, n_sel: int) -> jax.Array:
+    """q (B,Hq,dh) grouped to kv heads scores centroids (B,Hkv,nkb,dh);
+    returns idx (B,Hkv,n_sel)."""
+    b, hq, dh = q.shape
+    hkv = centroids.shape[1]
+    qg = q.reshape(b, hkv, hq // hkv, dh).mean(axis=2)
+    scores = jnp.einsum("bhd,bhkd->bhk", qg, centroids)
+    _, idx = jax.lax.top_k(scores, n_sel)
+    return idx.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bk",))
+def decode_attend(q: jax.Array, k: jax.Array, v: jax.Array,
+                  pos: jax.Array, qpos: jax.Array, idx: jax.Array,
+                  bk: int) -> jax.Array:
+    """Single-token attention over gathered cluster tiles.
+
+    q (B,Hq,dh); k/v (B,Hkv,S,dh); pos (B,Hkv,S); idx (B,Hkv,c) tile ids.
+    Returns (B,Hq,dh). Entries with pos > qpos are masked (cache slots not
+    yet filled, or future positions).
+    """
+    b, hq, dh = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    g = hq // hkv
+    dv = v.shape[-1]
+    nkb = s // bk
+    kb = k.reshape(b, hkv, nkb, bk, dh)
+    vb = v.reshape(b, hkv, nkb, bk, dv)
+    pb = pos.reshape(b, hkv, nkb, bk)
+
+    def per_bh(qh, kt, vt, pt, it):
+        # qh (g,dh)  kt (nkb,bk,dh)  vt (nkb,bk,dv)  pt (nkb,bk)  it (c,)
+        ksel = kt[it].reshape(-1, dh)          # (c*bk, dh)
+        vsel = vt[it].reshape(-1, dv)
+        psel = pt[it].reshape(-1)
+        logit = (qh.astype(jnp.float32) @ ksel.astype(jnp.float32).T
+                 / jnp.sqrt(jnp.asarray(dh, jnp.float32)))
+        logit = jnp.where(psel[None, :] <= qpos, logit, NEG_INF)
+        w = jax.nn.softmax(logit, axis=-1)
+        return (w @ vsel.astype(jnp.float32)).astype(q.dtype)
+
+    out = jax.vmap(jax.vmap(per_bh))(
+        q.reshape(b, hkv, g, dh), kb, vb, pb, idx)
+    return out.reshape(b, hq, dv)

@@ -1,0 +1,134 @@
+"""Hierarchical partitioning of embedded points with an adaptive 2^d tree.
+
+Paper §2.4 "Hierarchical partitioning": in the d-dimensional embedding space
+we partition points with an adaptive 2^d-tree (quadtree for d=2, octree for
+d=3). The depth-first leaf order of such a tree is exactly the Morton
+(Z-curve) order of the quantized coordinates, so the *ordering* is computed
+as an argsort of Morton codes (jit-friendly); the *tree* (level boundaries,
+used for multi-level blocking) is recovered from code prefixes.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _part1by1(v: jax.Array) -> jax.Array:
+    """Spread bits of a 16-bit int so there is one 0 between each (for d=2)."""
+    v = v & 0xFFFF
+    v = (v | (v << 8)) & 0x00FF00FF
+    v = (v | (v << 4)) & 0x0F0F0F0F
+    v = (v | (v << 2)) & 0x33333333
+    v = (v | (v << 1)) & 0x55555555
+    return v
+
+
+def _part1by2(v: jax.Array) -> jax.Array:
+    """Spread bits of a 10-bit int so there are two 0s between each (d=3)."""
+    v = v & 0x3FF
+    v = (v | (v << 16)) & 0x030000FF
+    v = (v | (v << 8)) & 0x0300F00F
+    v = (v | (v << 4)) & 0x030C30C3
+    v = (v | (v << 2)) & 0x09249249
+    return v
+
+
+MAX_BITS = {1: 30, 2: 16, 3: 10}   # per-dim resolution cap (32-bit codes)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def morton_codes(y: jax.Array, bits: int = 0) -> jax.Array:
+    """Morton codes for points ``y`` (N, d) with d in {1, 2, 3}.
+
+    Coordinates are min-max quantized to ``bits`` bits per dimension
+    (default: the maximum that fits a 32-bit code: 30/16/10 for d=1/2/3).
+    """
+    n, d = y.shape
+    b = min(bits or MAX_BITS[d], MAX_BITS[d])
+    lo = jnp.min(y, axis=0, keepdims=True)
+    hi = jnp.max(y, axis=0, keepdims=True)
+    span = jnp.maximum(hi - lo, 1e-30)
+    q = ((y - lo) / span * (2**b - 1)).astype(jnp.uint32)
+    if d == 1:
+        return q[:, 0]
+    if d == 2:
+        return _part1by1(q[:, 0]) | (_part1by1(q[:, 1]) << 1)
+    if d == 3:
+        return (_part1by2(q[:, 0])
+                | (_part1by2(q[:, 1]) << 1)
+                | (_part1by2(q[:, 2]) << 2))
+    raise ValueError(f"morton_codes supports d<=3, got d={d}")
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def morton_order(y: jax.Array, bits: int = 0) -> jax.Array:
+    """Permutation placing points in 2^d-tree depth-first (Z-curve) order."""
+    return jnp.argsort(morton_codes(y, bits))
+
+
+@dataclass
+class Tree:
+    """Adaptive 2^d tree over Morton-sorted points.
+
+    ``levels[l]`` is an int array of leaf/cluster boundaries (prefix sums of
+    cluster sizes) at level ``l``; level 0 is the root (single cluster).
+    ``perm`` maps sorted position -> original point index.
+    """
+    perm: np.ndarray
+    levels: List[np.ndarray]
+    d: int
+    bits: int
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.levels)
+
+    def clusters(self, level: int) -> np.ndarray:
+        """Boundaries at `level` as (n_clusters+1,) offsets into perm."""
+        return self.levels[level]
+
+
+def build_tree(y: np.ndarray, bits: int = 0, leaf_size: int = 64,
+               max_levels: int = 0) -> Tree:
+    """Adaptive hierarchical partition (paper §2.4).
+
+    Splits every cluster by successive Morton-code prefixes (= 2^d spatial
+    subdivision) until clusters have at most ``leaf_size`` points; clusters
+    already small enough are not split further (adaptivity). Preprocessing
+    runs in numpy: the tree is built once per reordering, like the paper's.
+    """
+    y = np.asarray(y)
+    n, d = y.shape
+    codes = np.asarray(morton_codes(jnp.asarray(y), bits))
+    perm = np.argsort(codes, kind="stable")
+    codes = codes[perm]
+    bits_eff = min(bits or MAX_BITS[d], MAX_BITS[d])
+    total_bits = d * bits_eff
+    max_levels = max_levels or bits_eff   # default: full quantization depth
+
+    levels = [np.array([0, n])]
+    for level in range(1, max_levels + 1):
+        shift = max(total_bits - level * d, 0)
+        prev = levels[-1]
+        bounds = [0]
+        for c in range(len(prev) - 1):
+            lo, hi = int(prev[c]), int(prev[c + 1])
+            if hi - lo <= leaf_size:      # adaptive: leave small clusters be
+                bounds.append(hi)
+                continue
+            seg = codes[lo:hi] >> shift
+            # boundaries where the level-prefix changes
+            cut = np.nonzero(np.diff(seg))[0] + 1 + lo
+            bounds.extend(cut.tolist())
+            bounds.append(hi)
+        nxt = np.unique(np.array(bounds))
+        levels.append(nxt)
+        sizes = np.diff(nxt)
+        if sizes.max(initial=0) <= leaf_size or shift == 0:
+            break
+    return Tree(perm=perm, levels=levels, d=d, bits=bits)

@@ -1,0 +1,154 @@
+"""Multi-level near-neighbor interaction computations (paper §2.4).
+
+The interaction ``y = A x`` is computed block-by-block: every kept tile is a
+dense (bs, bs) block multiplying a contiguous charge segment — the paper's
+"block-segment multiplication". Three paths:
+
+  spmv_csr      element-wise gather baseline (scattered/CSR semantics)
+  spmv_bsr      flat single-level block path (one einsum over kept tiles)
+  spmv_bsr_ml   multi-level path: lax.scan over row-superblocks so the
+                working set per step is a superblock stripe (the TPU analog
+                of the paper's multi-level cache blocking)
+  spmv_pallas   Pallas kernel (kernels/bsr_spmv.py) — MXU tiles with
+                scalar-prefetch column indices
+
+Iterative-application value updates (t-SNE attractive force, mean shift) are
+computed *blockwise dense* from the current coordinates — the TPU-native
+replacement for per-edge gathers (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocksparse import BSR
+
+
+# ---------------------------------------------------------------------------
+# SpMV paths
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def spmv_csr(vals: jax.Array, rows: jax.Array, cols: jax.Array,
+             x: jax.Array, n: int | None = None) -> jax.Array:
+    """Gather-based SpMV over COO/CSR edges: y_i = sum_j a_ij x_j."""
+    n = n if n is not None else x.shape[0]
+    return jnp.zeros((n,) + x.shape[1:], x.dtype).at[rows].add(
+        vals[(...,) + (None,) * (x.ndim - 1)] * x[cols])
+
+
+def _pad_x(x: jax.Array, n_cb: int, bs: int) -> jax.Array:
+    pad = n_cb * bs - x.shape[0]
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def spmv_bsr(bsr_vals: jax.Array, col_idx: jax.Array, x: jax.Array,
+             n: int) -> jax.Array:
+    """Flat block path. bsr_vals (n_rb, nbr, bs, bs); x (n,) or (n, f)."""
+    n_rb, nbr, bs, _ = bsr_vals.shape
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    xp = _pad_x(x, n_rb, bs)
+    xb = xp.reshape(n_rb, bs, -1)                       # (n_cb, bs, f)
+    seg = xb[col_idx]                                   # (n_rb, nbr, bs, f)
+    y = jnp.einsum("rnij,rnjf->rif", bsr_vals, seg)
+    y = y.reshape(n_rb * bs, -1)[:n]
+    return y[:, 0] if squeeze else y
+
+
+@functools.partial(jax.jit, static_argnames=("n", "sb"))
+def spmv_bsr_ml(bsr_vals: jax.Array, col_idx: jax.Array, x: jax.Array,
+                n: int, sb: int = 8) -> jax.Array:
+    """Multi-level block path: scan over row-superblocks (stripes of ``sb``
+    row-blocks); each step touches only that stripe's tiles + segments."""
+    n_rb, nbr, bs, _ = bsr_vals.shape
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    pad_rb = (-n_rb) % sb
+    if pad_rb:
+        bsr_vals = jnp.pad(bsr_vals, ((0, pad_rb), (0, 0), (0, 0), (0, 0)))
+        col_idx = jnp.pad(col_idx, ((0, pad_rb), (0, 0)))
+    xp = _pad_x(x, n_rb, bs)
+    xb = xp.reshape(n_rb, bs, -1)
+
+    v = bsr_vals.reshape(-1, sb, nbr, bs, bs)
+    c = col_idx.reshape(-1, sb, nbr)
+
+    def step(_, vc):
+        vt, ct = vc
+        seg = xb[ct]                                    # (sb, nbr, bs, f)
+        return None, jnp.einsum("rnij,rnjf->rif", vt, seg)
+
+    _, ys = jax.lax.scan(step, None, (v, c))
+    y = ys.reshape(-1, bs, ys.shape[-1]).reshape(-1, ys.shape[-1])[:n]
+    return y[:, 0] if squeeze else y
+
+
+def spmv(bsr: BSR, x: jax.Array, path: str = "bsr") -> jax.Array:
+    if path == "bsr":
+        return spmv_bsr(bsr.vals, bsr.col_idx, x, bsr.n)
+    if path == "bsr_ml":
+        return spmv_bsr_ml(bsr.vals, bsr.col_idx, x, bsr.n, bsr.sb)
+    if path == "pallas":
+        from repro.kernels.ops import bsr_spmv
+        return bsr_spmv(bsr.vals, bsr.col_idx, x, bsr.n)
+    raise ValueError(path)
+
+
+# ---------------------------------------------------------------------------
+# Iterative applications: blockwise-dense value recomputation
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def tsne_attractive(p_vals: jax.Array, col_idx: jax.Array, nbr_mask: jax.Array,
+                    y: jax.Array, n: int) -> jax.Array:
+    """t-SNE attractive force (paper §3.1), blockwise.
+
+    F_i = sum_j p_ij q_ij (y_i - y_j), q_ij = 1/(1 + |y_i - y_j|^2), with
+    p the (fixed-profile) kNN-based affinity stored as dense tiles. Values
+    p_ij q_ij are recomputed dense per tile from the current embedding y.
+    """
+    n_rb, nbr, bs, _ = p_vals.shape
+    d = y.shape[1]
+    yp = _pad_x(y, n_rb, bs).reshape(n_rb, bs, d)
+    ysrc = yp[col_idx]                                   # (n_rb, nbr, bs, d)
+    ytgt = yp[:, None, :, None, :]                       # (n_rb, 1, bs, 1, d)
+    diff = ytgt - ysrc[:, :, None, :, :]                 # (n_rb, nbr, bs_t, bs_s, d)
+    q = 1.0 / (1.0 + jnp.sum(diff * diff, axis=-1))
+    w = p_vals * q                       # p tile is (target, source) = (t, s)
+    f = jnp.einsum("rnts,rntsd->rtd", w, diff)
+    return f.reshape(-1, d)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("h2", "n"))
+def meanshift_step(w_pattern: jax.Array, col_idx: jax.Array,
+                   sources_blocked: jax.Array, t: jax.Array,
+                   h2: float, n: int) -> jax.Array:
+    """One mean-shift iteration (paper §3.2), blockwise.
+
+    New mean m_i = sum_j w_ij s_j / sum_j w_ij with Gaussian weights
+    w_ij = exp(-|t_i - s_j|^2 / h2) over the (fixed) neighbor pattern;
+    weights are recomputed dense per tile from current targets t.
+    ``w_pattern`` (n_rb, nbr, bs, bs) is the 0/1 neighbor-pattern tile.
+    ``sources_blocked`` (n_cb, bs, d) are sources in cluster order.
+    """
+    n_rb, nbr, bs, _ = w_pattern.shape
+    d = t.shape[1]
+    tp = _pad_x(t, n_rb, bs).reshape(n_rb, bs, d)
+    s = sources_blocked[col_idx]                         # (n_rb, nbr, bs, d)
+    diff = tp[:, None, :, None, :] - s[:, :, None, :, :]
+    w = jnp.exp(-jnp.sum(diff * diff, axis=-1) / h2) * w_pattern
+    num = jnp.einsum("rnts,rnsd->rtd", w, s)
+    den = jnp.sum(w, axis=(1, 3))[..., None]
+    m = num / jnp.maximum(den, 1e-12)
+    return m.reshape(-1, d)[:n]

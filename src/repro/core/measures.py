@@ -1,0 +1,116 @@
+"""Patch-density measures (paper §2.2–2.3).
+
+``beta_estimate``  — lower bound of the combinatorial patch-density measure
+    beta(A) (Eq. 2) obtained from a family of feasible patch coverings:
+    uniform b x b grid tiles shrunk to the bounding box of their nonzeros
+    (disjoint by construction), maximized over b. Exact beta is NP-hard
+    (paper §2.3); any feasible covering lower-bounds it.
+
+``gamma_exact`` / ``gamma_score`` — the numerical relaxation (Eq. 4):
+    gamma(A; sigma) = 1/(sigma nnz) * sum_{p,q in Inz} exp(-|p-q|^2/sigma^2).
+    ``gamma_exact`` is the O(nnz^2) literal sum; ``gamma_score`` bins the
+    nonzero coordinates into sigma-sized cells and evaluates the double sum
+    by a truncated Gaussian stencil convolution — O(nnz + cells) with error
+    only from within-cell quantization.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# gamma score (Eq. 4)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def gamma_exact(rows: jax.Array, cols: jax.Array, sigma: float) -> jax.Array:
+    """Literal Eq. 4 over all nnz^2 pairs. Use only for small matrices."""
+    p = jnp.stack([rows, cols], axis=1).astype(jnp.float32)
+    d2 = jnp.sum((p[:, None, :] - p[None, :, :]) ** 2, axis=-1)
+    return jnp.sum(jnp.exp(-d2 / sigma**2)) / (sigma * rows.shape[0])
+
+
+def _gauss_stencil(sigma: float, cell: float, radius_cells: int) -> jax.Array:
+    r = radius_cells
+    ax = jnp.arange(-r, r + 1, dtype=jnp.float32) * cell
+    d2 = ax[:, None] ** 2 + ax[None, :] ** 2
+    return jnp.exp(-d2 / sigma**2)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sigma", "n", "cells", "radius_cells"))
+def gamma_score(rows: jax.Array, cols: jax.Array, sigma: float, n: int,
+                cells: int = 0, radius_cells: int = 4) -> jax.Array:
+    """Histogram/convolution estimate of Eq. 4.
+
+    Bins nonzeros into a (G, G) grid with cell size ~sigma (so the Gaussian
+    is well resolved), then sum_{p,q} exp ~= <h, g * h> with g the truncated
+    stencil.
+    """
+    nnz = rows.shape[0]
+    g = cells or max(8, min(2048, int(np.ceil(n / max(sigma, 1.0)))))
+    cell = n / g
+    ri = jnp.clip((rows.astype(jnp.float32) / cell).astype(jnp.int32), 0, g - 1)
+    ci = jnp.clip((cols.astype(jnp.float32) / cell).astype(jnp.int32), 0, g - 1)
+    hist = jnp.zeros((g, g), jnp.float32).at[ri, ci].add(1.0)
+    stencil = _gauss_stencil(sigma, cell, radius_cells)
+    smooth = jax.lax.conv_general_dilated(
+        hist[None, None], stencil[None, None],
+        window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))[0, 0]
+    return jnp.sum(hist * smooth) / (sigma * nnz)
+
+
+# ---------------------------------------------------------------------------
+# beta estimate (Eq. 2 lower bound from feasible grid coverings)
+# ---------------------------------------------------------------------------
+
+
+def beta_estimate(rows: np.ndarray, cols: np.ndarray, n: int,
+                  block_sizes=(4, 8, 16, 20, 32, 64, 128)) -> dict:
+    """Best feasible patch covering over a family of shrunk grid coverings.
+
+    For each tile size b: tiles of the uniform b-grid that contain nonzeros
+    become patches, each shrunk to the bounding box of its nonzeros (still
+    disjoint). score(b) = (1/count) * nnz / sum(bbox areas). Returns the max
+    and the per-b scores.
+    """
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    nnz = len(rows)
+    out = {}
+    best = 0.0
+    best_b = None
+    for b in block_sizes:
+        if b > n:
+            continue
+        rb, cb = rows // b, cols // b
+        tid = rb.astype(np.int64) * ((n + b - 1) // b) + cb
+        order = np.argsort(tid, kind="stable")
+        tid_s = tid[order]
+        bnd = np.concatenate([[0], np.nonzero(np.diff(tid_s))[0] + 1, [nnz]])
+        count = len(bnd) - 1
+        r_s, c_s = rows[order], cols[order]
+        area = 0
+        for t in range(count):
+            lo, hi = bnd[t], bnd[t + 1]
+            rr = r_s[lo:hi]
+            cc = c_s[lo:hi]
+            area += (rr.max() - rr.min() + 1) * (cc.max() - cc.min() + 1)
+        score = (1.0 / count) * nnz / area
+        out[b] = score
+        if score > best:
+            best, best_b = score, b
+    return {"beta": best, "block": best_b, "per_block": out}
+
+
+def fill_ratio(rows: np.ndarray, cols: np.ndarray, n: int, b: int) -> float:
+    """nnz / area of the uniform-b covering — density of the kept tiles."""
+    rb, cb = rows // b, cols // b
+    tid = rb.astype(np.int64) * ((n + b - 1) // b) + cb
+    count = len(np.unique(tid))
+    return len(rows) / (count * b * b)

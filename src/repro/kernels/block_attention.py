@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: cluster-block-sparse flash attention.
+
+One (batch, head) slice per pallas_call (vmapped in ops.py): for each query
+tile, the scalar-prefetched index list names the top-B cluster-sorted key
+tiles; each grid step stages one (bq, dh) q tile, one (bk, dh) k/v tile and
+its positions into VMEM, updates the online softmax (m, l, acc) scratch, and
+writes the output tile on the last selected block. Causality is enforced
+elementwise via the gathered original positions — exactly the contract of
+core.clusterkv.sparse_block_attention (the jnp oracle in ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(idx_ref, q_ref, k_ref, v_ref, kpos_ref, qpos_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale, causal):
+    j = pl.program_id(1)
+    n_sel = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32)           # (bq, dh)
+    k = k_ref[...].astype(jnp.float32)           # (bk, dh)
+    v = v_ref[...].astype(jnp.float32)           # (bk, dv)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        ok = kpos_ref[...][None, :] <= qpos_ref[...][:, None]
+        s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_scr[...] * alpha + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == n_sel - 1)
+    def _fin():
+        o_ref[...] = (acc_scr[...]
+                      / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bk", "causal", "interpret"))
+def block_attention(q: jax.Array, k_sorted: jax.Array, v_sorted: jax.Array,
+                    kpos: jax.Array, qpos: jax.Array, idx: jax.Array,
+                    *, bq: int, bk: int, causal: bool = True,
+                    interpret: bool = False) -> jax.Array:
+    """q (S, dh); k/v_sorted (S_k, dh) in cluster order; kpos (S_k,) original
+    positions; qpos (S,); idx (S/bq, n_sel) int32 selected key tiles.
+    Returns (S, dv)."""
+    s, dh = q.shape
+    dv = v_sorted.shape[-1]
+    nqb = s // bq
+    n_sel = idx.shape[-1]
+    scale = 1.0 / (dh ** 0.5)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nqb, n_sel),
+        in_specs=[
+            pl.BlockSpec((bq, dh), lambda i, j, idx: (i, 0)),
+            pl.BlockSpec((bk, dh), lambda i, j, idx: (idx[i, j], 0)),
+            pl.BlockSpec((bk, dv), lambda i, j, idx: (idx[i, j], 0)),
+            pl.BlockSpec((bk,), lambda i, j, idx: (idx[i, j],)),
+            pl.BlockSpec((bq,), lambda i, j, idx: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bq, dv), lambda i, j, idx: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dv), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_kernel, scale=scale, causal=causal)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, dv), q.dtype),
+        interpret=interpret,
+    )(idx, q, k_sorted, v_sorted, kpos, qpos)

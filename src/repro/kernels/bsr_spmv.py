@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: ELL-BSR block-sparse matrix x dense (multi-)vector.
+
+The paper's bottom-level "block-segment multiplication" (§2.4) on the MXU:
+each grid step stages one dense (bs, bs) tile of A and the (bs, f) charge
+segment selected by the scalar-prefetched column index into VMEM, and
+accumulates the (bs, f) response tile. Column indices arrive via
+PrefetchScalarGridSpec so the index_map — not the kernel body — performs the
+indirection (the TPU analog of the paper's indirect block addressing).
+
+Grid: (n_rb, nbr) — row blocks outer, ELL slots inner; the y tile is
+accumulated across the inner dimension and written once.
+Padding slots carry zero tiles, so no masking is needed in the body.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, a_ref, x_ref, y_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    a = a_ref[0, 0]                      # (bs, bs)
+    x = x_ref[...]                       # (bs, f)
+    y_ref[...] += jnp.dot(a, x, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bsr_spmv(vals: jax.Array, col_idx: jax.Array, x: jax.Array,
+             *, interpret: bool = False) -> jax.Array:
+    """vals (n_rb, nbr, bs, bs); col_idx (n_rb, nbr) int32; x (n_cb*bs, f).
+
+    Returns y (n_rb*bs, f) = A @ x with A the ELL-BSR matrix.
+    """
+    n_rb, nbr, bs, _ = vals.shape
+    f = x.shape[-1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_rb, nbr),
+        in_specs=[
+            pl.BlockSpec((1, 1, bs, bs), lambda i, j, idx: (i, j, 0, 0)),
+            pl.BlockSpec((bs, f), lambda i, j, idx: (idx[i, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, f), lambda i, j, idx: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rb * bs, f), jnp.float32),
+        interpret=interpret,
+    )(col_idx, vals, x)

@@ -1,0 +1,92 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute with interpret=True — the kernel
+body runs in Python for correctness validation; on TPU they compile to
+Mosaic. The wrappers handle batching (vmap over batch/head slices) and
+padding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import block_attention as _ba
+from repro.kernels import bsr_spmv as _bsr
+from repro.kernels import gamma_score as _gs
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def bsr_spmv(vals: jax.Array, col_idx: jax.Array, x: jax.Array,
+             n: int | None = None) -> jax.Array:
+    """ELL-BSR SpMV/SpMM. x (n,) or (n, f); returns same leading length."""
+    n_rb, nbr, bs, _ = vals.shape
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    pad_rows = n_rb * bs - x.shape[0]
+    if pad_rows > 0:
+        x = jnp.pad(x, ((0, pad_rows), (0, 0)))
+    y = _bsr.bsr_spmv(vals.astype(jnp.float32), col_idx.astype(jnp.int32),
+                      x.astype(jnp.float32), interpret=_interpret())
+    if n is not None:
+        y = y[:n]
+    return y[:, 0] if squeeze else y
+
+
+def block_attention(q, k_sorted, v_sorted, kpos, qpos, idx, *, bq, bk,
+                    causal=True):
+    """Batched cluster-block-sparse attention.
+
+    q (B,Hq,S,dh); k/v_sorted (B,Hkv,S,dh); kpos (B,Hkv,S); qpos (S,);
+    idx (B,Hkv,nqb,n_sel). GQA: q heads grouped onto kv heads."""
+    b, hq, s, dh = q.shape
+    hkv = k_sorted.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b * hkv, g, s, dh)
+    kf = k_sorted.reshape(b * hkv, s, dh)
+    vf = v_sorted.reshape(b * hkv, s, v_sorted.shape[-1])
+    pf = kpos.reshape(b * hkv, s)
+    idxf = idx.reshape(b * hkv, *idx.shape[2:])
+
+    def one(qs, ks, vs, ps, ix):
+        def per_head(qh):
+            return _ba.block_attention(qh, ks, vs, ps, qpos, ix,
+                                       bq=bq, bk=bk, causal=causal,
+                                       interpret=_interpret())
+        return jax.vmap(per_head)(qs)
+
+    out = jax.vmap(one)(qg, kf, vf, pf, idxf)
+    return out.reshape(b, hq, s, -1)
+
+
+def gamma_exact(rows: jax.Array, cols: jax.Array, sigma: float,
+                bn: int = 256) -> jax.Array:
+    """Exact Eq. 4 via the tiled Pallas kernel; pads with far-away points."""
+    nnz = rows.shape[0]
+    coords = jnp.stack([rows, cols], 1).astype(jnp.float32)
+    pad = (-nnz) % bn
+    if pad:
+        far = jnp.full((pad, 2), 1e9, jnp.float32) \
+            + jnp.arange(pad, dtype=jnp.float32)[:, None] * 1e6
+        coords = jnp.concatenate([coords, far])
+    total = _gs.gamma_pairs(coords, sigma, bn, interpret=_interpret())
+    total = total - pad  # each far point contributes exactly its self-pair
+    return total / (sigma * nnz)
+
+
+def tsne_force(p_vals: jax.Array, col_idx: jax.Array, y: jax.Array,
+               n: int | None = None) -> jax.Array:
+    """Blockwise t-SNE attractive force via the Pallas kernel."""
+    from repro.kernels import tsne_force as _tf
+    n_rb, nbr, bs, _ = p_vals.shape
+    pad = n_rb * bs - y.shape[0]
+    yp = jnp.pad(y, ((0, max(pad, 0)), (0, 0))) if pad > 0 else y
+    f = _tf.tsne_force(p_vals.astype(jnp.float32),
+                       col_idx.astype(jnp.int32),
+                       yp.astype(jnp.float32), interpret=_interpret())
+    return f[:n] if n is not None else f

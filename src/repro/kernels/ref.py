@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bsr_spmv_ref(vals: jax.Array, col_idx: jax.Array, x: jax.Array
+                 ) -> jax.Array:
+    """vals (n_rb, nbr, bs, bs); col_idx (n_rb, nbr); x (n_cb*bs, f)."""
+    n_rb, nbr, bs, _ = vals.shape
+    xb = x.reshape(-1, bs, x.shape[-1])          # (n_cb, bs, f)
+    seg = xb[col_idx]                            # (n_rb, nbr, bs, f)
+    y = jnp.einsum("rnij,rnjf->rif", vals, seg)
+    return y.reshape(n_rb * bs, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "causal"))
+def block_attention_ref(q, k_sorted, v_sorted, kpos, qpos, idx,
+                        *, bq, bk, causal=True):
+    """Single-slice oracle matching kernels.block_attention."""
+    s, dh = q.shape
+    dv = v_sorted.shape[-1]
+    nqb = s // bq
+    n_sel = idx.shape[-1]
+    scale = 1.0 / (dh ** 0.5)
+    kb = k_sorted.reshape(-1, bk, dh)
+    vb = v_sorted.reshape(-1, bk, dv)
+    pb = kpos.reshape(-1, bk)
+    out = []
+    for i in range(nqb):
+        qi = q[i * bq:(i + 1) * bq].astype(jnp.float32)
+        ks = kb[idx[i]].reshape(-1, dh).astype(jnp.float32)
+        vs = vb[idx[i]].reshape(-1, dv).astype(jnp.float32)
+        ps = pb[idx[i]].reshape(-1)
+        logit = qi @ ks.T * scale
+        if causal:
+            ok = ps[None, :] <= qpos[i * bq:(i + 1) * bq][:, None]
+            logit = jnp.where(ok, logit, -1e30)
+        w = jax.nn.softmax(logit, axis=-1)
+        out.append((w @ vs).astype(q.dtype))
+    return jnp.concatenate(out, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("sigma",))
+def gamma_pairs_ref(coords: jax.Array, sigma: float) -> jax.Array:
+    c = coords.astype(jnp.float32)
+    d2 = jnp.sum((c[:, None, :] - c[None, :, :]) ** 2, axis=-1)
+    return jnp.sum(jnp.exp(-d2 / (sigma * sigma)))
+
+
+@jax.jit
+def tsne_force_ref(p_vals: jax.Array, col_idx: jax.Array, y: jax.Array
+                   ) -> jax.Array:
+    """Oracle for kernels.tsne_force (pure jnp, same contract)."""
+    n_rb, nbr, bs, _ = p_vals.shape
+    d = y.shape[-1]
+    yb = y.reshape(-1, bs, d)
+    ys = yb[col_idx]                                  # (n_rb, nbr, bs, d)
+    yt = yb[:n_rb]
+    diff = yt[:, None, :, None, :] - ys[:, :, None, :, :]
+    q = 1.0 / (1.0 + jnp.sum(diff * diff, axis=-1))
+    w = p_vals * q
+    f = jnp.einsum("rnts,rntsd->rtd", w, diff)
+    return f.reshape(n_rb * bs, d)

@@ -1,0 +1,266 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs (no allocation), record memory_analysis,
+cost_analysis and the per-device collective bytes parsed from the
+SPMD-partitioned HLO.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, all_cells, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models import model_api
+from repro.models.sharding import resolve_tree, shardings_for
+from repro.optim.optimizers import make_optimizer
+from repro.train import trainer
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# collective ops and ring-model link traffic factors (x local bytes)
+# def lines look like:  %all-reduce.140 = f32[8192,9496]{1,0} all-reduce(...)
+_COLL_RE = re.compile(
+    r" (all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|f64|s32|u32|s8|u8|pred|s64|u64)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
+          "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8}
+_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device result bytes of collective ops in the partitioned HLO,
+    weighted by a ring-model traffic factor (all-reduce ~ 2x).
+
+    Ops are attributed to 'entry' (ENTRY computation — executed once) vs
+    'body' (non-entry computations — while/scan bodies, counted ONCE in the
+    text but executed trip-count times). The roofline reader scales 'body'
+    by the model's layer-scan trip count.
+    """
+    def fresh():
+        return {"bytes_by_op": {k: 0.0 for k in _FACTOR},
+                "counts": {k: 0 for k in _FACTOR}, "weighted_bytes": 0.0}
+
+    sections = {"entry": fresh(), "body": fresh()}
+    current = "body"
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if ls.startswith("ENTRY "):
+            current = "entry"
+        elif ls.endswith("{") and not ls.startswith("ENTRY") and "=" not in ls:
+            current = "body"
+        m = _COLL_RE.search(line)
+        if not m or " = " not in line:
+            continue
+        op = m.group(1)
+        # result shape = last shape before the op token
+        shapes = [(sm.start(), sm.group(1), sm.group(2))
+                  for sm in _SHAPE_RE.finditer(line[:m.start()])]
+        if not shapes:
+            continue
+        _, dtype, dims = shapes[-1]
+        size = _BYTES[dtype]
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        sec = sections[current]
+        sec["bytes_by_op"][op] += size
+        sec["counts"][op] += 1
+        sec["weighted_bytes"] += size * _FACTOR[op]
+    total = {k: sections["entry"]["bytes_by_op"][k]
+             + sections["body"]["bytes_by_op"][k] for k in _FACTOR}
+    return {"entry": sections["entry"], "body": sections["body"],
+            "bytes_by_op": total,
+            "weighted_bytes": sections["entry"]["weighted_bytes"]
+            + sections["body"]["weighted_bytes"]}
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               backend: str | None = None, microbatch: int = 1,
+               layout: str = "2d", expert_parallel: bool = False,
+               param_dtype: str | None = None, remat: str | None = None):
+    """Returns (jitted_fn, example_args) ready to .lower()."""
+    from repro.models.sharding import set_layout
+    set_layout(layout)
+    cfg = get_config(arch)
+    if expert_parallel and cfg.moe is not None:
+        import dataclasses
+        cfg = cfg.with_(moe=dataclasses.replace(cfg.moe, expert_parallel=True))
+    if param_dtype:
+        cfg = cfg.with_(param_dtype=param_dtype)
+    if remat == "none":
+        cfg = cfg.with_(remat=False)
+    elif remat in ("dots", "full"):
+        cfg = cfg.with_(remat=True, remat_policy=remat)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    seq, batch, kind = SHAPES[shape_name]
+    backend = backend or model_api.backend_for(cfg, shape_name)
+    pshapes = model_api.param_shapes(cfg)
+    pspecs = shardings_for(pshapes, model_api.param_specs(cfg), mesh)
+    bshapes, bparts = model_api.input_specs(cfg, shape_name)
+    bspecs = shardings_for(bshapes, bparts, mesh)
+
+    if kind == "train":
+        step, opt = trainer.make_train_step(cfg, mesh, backend,
+                                            microbatch=microbatch)
+        oshapes = jax.eval_shape(opt.init, pshapes)
+        ospecs = shardings_for(oshapes,
+                               opt.state_specs(model_api.param_specs(cfg)),
+                               mesh)
+        mspecs = resolve_tree({"loss": P(), "grad_norm": P()}, mesh)
+        fn = jax.jit(step,
+                     in_shardings=(pspecs, ospecs, bspecs),
+                     out_shardings=(pspecs, ospecs, mspecs),
+                     donate_argnums=(0, 1))
+        args = (pshapes, oshapes, bshapes)
+    elif kind == "prefill":
+        step = trainer.make_prefill_step(cfg, mesh, backend)
+        cshapes = jax.eval_shape(
+            lambda: model_api.module_for(cfg).init_cache(cfg, batch, seq))
+        cspecs = shardings_for(cshapes,
+                               model_api.module_for(cfg).cache_specs(cfg),
+                               mesh)
+        lshape = jax.ShapeDtypeStruct((batch, cfg.vocab), jnp.float32)
+        lspec = shardings_for(lshape, P("dp", "tp"), mesh)
+        fn = jax.jit(step, in_shardings=(pspecs, bspecs),
+                     out_shardings=(cspecs, lspec))
+        args = (pshapes, bshapes)
+    else:  # decode
+        long_ctx = shape_name.startswith("long")
+        step = trainer.make_decode_step(cfg, mesh, backend,
+                                        sharded_long=long_ctx)
+        cshapes, cparts = model_api.cache_shapes(cfg, shape_name)
+        cspecs = shardings_for(cshapes, cparts, mesh)
+        lshape = jax.ShapeDtypeStruct((batch, cfg.vocab), jnp.float32)
+        lspec = shardings_for(lshape, P("dp", "tp"), mesh)
+        fn = jax.jit(step, in_shardings=(pspecs, cspecs, bspecs),
+                     out_shardings=(lspec, cspecs),
+                     donate_argnums=(1,))
+        args = (pshapes, cshapes, bshapes)
+    return fn, args, mesh, backend
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             backend: str | None = None, save: bool = True,
+             microbatch: int = 1, tag: str = "", layout: str = "2d",
+             expert_parallel: bool = False,
+             param_dtype: str | None = None,
+             remat: str | None = None) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "status": "error", "layout": layout, "ep": expert_parallel,
+           "microbatch": microbatch, "param_dtype": param_dtype,
+           "remat": remat}
+    try:
+        fn, args, mesh, backend = build_cell(arch, shape_name, multi_pod,
+                                             backend, microbatch, layout,
+                                             expert_parallel, param_dtype,
+                                             remat)
+        rec["backend"] = backend
+        with mesh:
+            lowered = fn.lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        text = compiled.as_text()
+        coll = parse_collectives(text)
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t1 - t0, 1),
+            "compile_s": round(t2 - t1, 1),
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+                "generated_code_bytes":
+                    getattr(mem, "generated_code_size_in_bytes", None),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            },
+            "cost": {k: cost.get(k) for k in
+                     ("flops", "bytes accessed", "transcendentals",
+                      "optimal_seconds") if k in cost},
+            "collectives": coll,
+        })
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=20)
+    rec["total_s"] = round(time.time() - t0, 1)
+    if save:
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        stem = f"{arch}__{shape_name}__{mesh_name}{suffix}"
+        (RESULTS / f"{stem}.json").write_text(json.dumps(rec, indent=2))
+        if rec["status"] == "ok":
+            import gzip
+            with gzip.open(RESULTS / f"{stem}.hlo.gz", "wt") as fh:
+                fh.write(text)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--backend", default=None)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--layout", default="2d")
+    ap.add_argument("--ep", action="store_true")
+    ap.add_argument("--param-dtype", default=None)
+    ap.add_argument("--remat", default=None, choices=["full", "dots", "none"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch, shape, _, _, _ in all_cells():
+            cells.append((arch, shape))
+    else:
+        cells.append((args.arch, args.shape))
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_name = "pod2x16x16" if mp else "pod16x16"
+            suffix = f"__{args.tag}" if args.tag else ""
+            out = RESULTS / f"{arch}__{shape}__{mesh_name}{suffix}.json"
+            if args.skip_done and out.exists() \
+                    and json.loads(out.read_text()).get("status") == "ok":
+                print(f"SKIP {arch} {shape} {mesh_name}")
+                continue
+            rec = run_cell(arch, shape, mp, args.backend,
+                           microbatch=args.microbatch, tag=args.tag,
+                           layout=args.layout, expert_parallel=args.ep,
+                           param_dtype=args.param_dtype, remat=args.remat)
+            flops = (rec.get("cost") or {}).get("flops")
+            print(f"{rec['status']:5s} {arch:28s} {shape:12s} {mesh_name:10s} "
+                  f"compile={rec.get('compile_s')}s flops/dev={flops} "
+                  f"{rec.get('error', '')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Pipeline parallelism (GPipe-style) over a mesh axis.
+
+Stages live one-per-device along ``axis``; microbatches stream through with
+``lax.ppermute`` hops. With M microbatches and S stages the schedule runs
+M + S - 1 ticks (bubble fraction (S-1)/(M+S-1)); activations hop
+stage->stage instead of weights moving — the collective per tick is one
+microbatch of activations per link, the PP trade the roofline notes for
+very deep models on slow inter-stage links.
+
+This is the demonstration/ablation path (used by tests and available to
+configs with uniform layer stacks); the production cells in EXPERIMENTS.md
+use DP/TP/EP/SP, where the fixed (16,16) mesh favors them.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(stage_params, x, stage_fn: Callable, mesh: Mesh,
+                   axis: str = "model", microbatches: int = 4) -> jax.Array:
+    """Apply ``stages`` sequential stages to ``x`` (B, ...) with GPipe.
+
+    stage_params: pytree whose leaves have a leading stage axis of size
+    mesh.shape[axis] (sharded over ``axis``: one stage per device).
+    stage_fn(local_params, x_mb) -> y_mb, same shape as x_mb.
+    """
+    n_stages = mesh.shape[axis]
+    b = x.shape[0]
+    assert b % microbatches == 0, "batch must divide into microbatches"
+    mb = b // microbatches
+    xm = x.reshape((microbatches, mb) + x.shape[1:])
+
+    fwd_perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def local(params_local, xm_local):
+        # params_local leaves: (1, ...) — this device's stage
+        p_here = jax.tree.map(lambda a: a[0], params_local)
+        stage_id = jax.lax.axis_index(axis)
+        ticks = microbatches + n_stages - 1
+
+        def tick(carry, t):
+            buf, outs = carry            # buf: activation arriving here
+            # stage 0 injects microbatch t (when valid)
+            inject = jnp.where(t < microbatches, t, microbatches - 1)
+            x_in = jnp.where(stage_id == 0, xm_local[inject], buf)
+            y = stage_fn(p_here, x_in)
+            # last stage records its output for microbatch t-(S-1)
+            out_slot = t - (n_stages - 1)
+            valid = (out_slot >= 0) & (stage_id == n_stages - 1)
+            slot = jnp.clip(out_slot, 0, microbatches - 1)
+            outs = jnp.where(
+                valid,
+                jax.lax.dynamic_update_index_in_dim(outs, y, slot, 0),
+                outs)
+            buf = jax.lax.ppermute(y, axis, fwd_perm)
+            return (buf, outs), None
+
+        buf0 = jnp.zeros_like(xm_local[0])
+        outs0 = jnp.zeros_like(xm_local)
+        (_, outs), _ = jax.lax.scan(tick, (buf0, outs0), jnp.arange(ticks))
+        # broadcast final outputs from the last stage to all (psum of masked)
+        outs = jnp.where(stage_id == n_stages - 1, outs, jnp.zeros_like(outs))
+        outs = jax.lax.psum(outs, axis)
+        return outs
+
+    f = shard_map(local, mesh=mesh,
+                  in_specs=(P(axis), P()),
+                  out_specs=P(),
+                  check_vma=False)
+    ym = f(stage_params, xm)
+    return ym.reshape((b,) + x.shape[1:])

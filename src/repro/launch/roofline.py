@@ -1,0 +1,136 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh).
+
+  compute    = FLOPs / (chips x 197e12)
+  memory     = HBM bytes / (chips x 819e9)
+  collective = weighted collective bytes / link_bw  (already per-device)
+
+Sources: the dry-run JSON records (results/dryrun/*.json) for the
+HLO-derived numbers, scaled for scan-body undercounting (XLA cost analysis
+counts while bodies once; 'body'-attributed collectives are multiplied by
+the layer-scan trip count), cross-checked against the closed-form analytic
+model (launch/analytic.py). FLOPs and HBM bytes use max(HLO-derived,
+analytic) — the analytic model is exact for matmul work, the HLO number
+catches anything the model misses outside scans.
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--mesh pod16x16]
+Writes results/roofline.json and prints the table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+from repro.launch.analytic import (HBM_BW, LINK_BW, PEAK_FLOPS,
+                                   analytic_collectives, cell_model,
+                                   n_active_params, n_params)
+
+RESULTS = Path(__file__).resolve().parents[3] / "results"
+
+
+def scan_trips(arch: str, shape: str) -> int:
+    """Trip count of the dominant (layer) scan for body-collective scaling."""
+    cfg = get_config(arch)
+    if cfg.family == "hybrid":
+        return cfg.shared_attn_every          # python loop over groups
+    kind = SHAPES[shape][2]
+    trips = cfg.n_layers
+    if cfg.family == "encdec" and kind != "decode":
+        trips = cfg.n_layers + cfg.n_enc_layers
+    return trips
+
+
+def analyse(rec: dict) -> dict:
+    arch, shape, mesh = rec["arch"], rec["shape"], rec["mesh"]
+    chips = 512 if mesh == "pod2x16x16" else 256
+    cfg = get_config(arch)
+    model = cell_model(arch, shape, rec.get("backend"),
+                       layout=rec.get("layout", "2d"), chips=chips,
+                       param_dtype=rec.get("param_dtype"),
+                       remat=rec.get("remat"), ep=rec.get("ep", False))
+
+    hlo_flops_dev = (rec.get("cost") or {}).get("flops") or 0.0
+    trips = scan_trips(arch, shape)
+    hlo_flops_scaled = hlo_flops_dev * trips      # upper-ish bound
+    ana_flops_dev = model.flops / chips
+    flops_dev = max(ana_flops_dev, min(hlo_flops_scaled, ana_flops_dev * 4)) \
+        if hlo_flops_dev else ana_flops_dev
+
+    hbm_dev = model.hbm_bytes / chips
+    coll = rec.get("collectives") or {}
+    entry_b = (coll.get("entry") or {}).get("weighted_bytes", 0.0)
+    body_b = (coll.get("body") or {}).get("weighted_bytes", 0.0)
+    coll_hlo = entry_b + body_b * trips          # evidence, body x layer-scan
+    coll_ana = analytic_collectives(arch, shape, mesh == "pod2x16x16",
+                                    rec.get("backend"),
+                                    layout=rec.get("layout", "2d"),
+                                    ep=rec.get("ep", False))["total"]
+    coll_dev = coll_ana
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = hbm_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(t_compute, t_memory, t_coll)
+    mf = model.model_flops / chips
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "chips": chips,
+        "backend": rec.get("backend"),
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops_dev": mf,
+        "hlo_flops_dev_raw": hlo_flops_dev,
+        "flops_dev_corrected": flops_dev,
+        "coll_bytes_hlo_scaled": coll_hlo,
+        "coll_bytes_analytic": coll_ana,
+        "useful_ratio": mf / flops_dev if flops_dev else None,
+        "roofline_fraction": (mf / PEAK_FLOPS) / bound if bound else None,
+        "peak_bytes_dev": (rec.get("memory") or {}).get("peak_bytes"),
+        "status": rec["status"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None,
+                    help="pod16x16 (default: both)")
+    ap.add_argument("--tag", default="", help="analyse tagged variant runs")
+    args = ap.parse_args()
+
+    rows = []
+    for f in sorted((RESULTS / "dryrun").glob("*.json")):
+        parts = f.stem.split("__")
+        tag = parts[3] if len(parts) > 3 else ""
+        if tag != args.tag:
+            continue
+        rec = json.loads(f.read_text())
+        if rec["status"] != "ok":
+            continue
+        if args.mesh and rec["mesh"] != args.mesh:
+            continue
+        rows.append(analyse(rec))
+
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    out = RESULTS / (f"roofline{('_' + args.tag) if args.tag else ''}.json")
+    out.write_text(json.dumps(rows, indent=2))
+
+    hdr = (f"{'arch':28s} {'shape':12s} {'mesh':10s} {'backend':9s} "
+           f"{'compute':>9s} {'memory':>9s} {'collect':>9s} {'dom':>7s} "
+           f"{'useful':>6s} {'roof%':>6s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['arch']:28s} {r['shape']:12s} {r['mesh']:10s} "
+              f"{(r['backend'] or ''):9s} "
+              f"{r['compute_s']*1e3:8.2f}m {r['memory_s']*1e3:8.2f}m "
+              f"{r['collective_s']*1e3:8.2f}m {r['dominant']:>7s} "
+              f"{(r['useful_ratio'] or 0)*100:5.1f}% "
+              f"{(r['roofline_fraction'] or 0)*100:5.1f}%")
+    print(f"\nwrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.models import (attention, encdec, hybrid, mamba, mla, model_api,
+                          moe, param, sharding, ssm_lm, transformer)
+
+__all__ = ["attention", "encdec", "hybrid", "mamba", "mla", "model_api",
+           "moe", "param", "sharding", "ssm_lm", "transformer"]

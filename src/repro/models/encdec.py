@@ -1,0 +1,248 @@
+"""Whisper-style encoder-decoder. The conv/mel frontend is a STUB: the
+encoder consumes precomputed frame embeddings (input_specs provides them).
+Positional encoding is RoPE in both stacks (deviation from Whisper's
+sinusoidal/learned absolute — noted in DESIGN.md; irrelevant to the
+system-level questions studied here)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import param as pm
+from repro.models.sharding import ShardCtx
+from repro.models.transformer import ce_loss
+
+
+def _init_attn(key, cfg: ModelConfig, d_kv_src: int = 0):
+    d = cfg.d_model
+    hq, dh = cfg.n_heads, cfg.head_dim
+    dkv = d_kv_src or d
+    ks = jax.random.split(key, 4)
+    pq, sq = pm.linear(ks[0], d, hq * dh, spec=("fsdp", "tp"))
+    pk, sk = pm.linear(ks[1], dkv, hq * dh, spec=("fsdp", "tp"))
+    pv, sv = pm.linear(ks[2], dkv, hq * dh, spec=("fsdp", "tp"))
+    po, so = pm.linear(ks[3], hq * dh, d, spec=("tp", "fsdp"))
+    return ({"wq": pq, "wk": pk, "wv": pv, "wo": po},
+            {"wq": sq, "wk": sk, "wv": sv, "wo": so})
+
+
+def _init_mlp(key, cfg):
+    ks = jax.random.split(key, 2)
+    p1, s1 = pm.linear(ks[0], cfg.d_model, cfg.d_ff, spec=("fsdp", "tp"))
+    p2, s2 = pm.linear(ks[1], cfg.d_ff, cfg.d_model, spec=("tp", "fsdp"))
+    return {"w1": p1, "w2": p2}, {"w1": s1, "w2": s2}
+
+
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 2)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = pm.rmsnorm(cfg.d_model)
+    p["attn"], s["attn"] = _init_attn(ks[0], cfg)
+    p["ln2"], s["ln2"] = pm.rmsnorm(cfg.d_model)
+    p["mlp"], s["mlp"] = _init_mlp(ks[1], cfg)
+    return p, s
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = pm.rmsnorm(cfg.d_model)
+    p["self"], s["self"] = _init_attn(ks[0], cfg)
+    p["ln_x"], s["ln_x"] = pm.rmsnorm(cfg.d_model)
+    p["cross"], s["cross"] = _init_attn(ks[1], cfg)
+    p["ln2"], s["ln2"] = pm.rmsnorm(cfg.d_model)
+    p["mlp"], s["mlp"] = _init_mlp(ks[2], cfg)
+    return p, s
+
+
+def init_lm(cfg: ModelConfig, key) -> Tuple[dict, dict]:
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["embed"], s["embed"] = pm.embedding(ks[0], cfg.vocab, cfg.d_model)
+    p["enc"], s["enc"] = pm.stacked(lambda k: _init_enc_layer(k, cfg),
+                                    cfg.n_enc_layers, ks[1])
+    p["dec"], s["dec"] = pm.stacked(lambda k: _init_dec_layer(k, cfg),
+                                    cfg.n_layers, ks[2])
+    p["ln_enc"], s["ln_enc"] = pm.rmsnorm(cfg.d_model)
+    p["ln_f"], s["ln_f"] = pm.rmsnorm(cfg.d_model)
+    p["head"], s["head"] = pm.linear(ks[3], cfg.d_model, cfg.vocab,
+                                     spec=("fsdp", "tp"))
+    return p, s
+
+
+def _mha(lp, xq, xkv, cfg, qpos, kpos, shd, *, causal, backend="flash"):
+    b, sq_, d = xq.shape
+    skv = xkv.shape[1]
+    hq, dh = cfg.n_heads, cfg.head_dim
+    q = pm.apply_linear(lp["wq"], xq).reshape(b, sq_, hq, dh).transpose(0, 2, 1, 3)
+    k = pm.apply_linear(lp["wk"], xkv).reshape(b, skv, hq, dh).transpose(0, 2, 1, 3)
+    v = pm.apply_linear(lp["wv"], xkv).reshape(b, skv, hq, dh).transpose(0, 2, 1, 3)
+    q = attn.rope(q, qpos[None, None, :], cfg.rope_theta)
+    k = attn.rope(k, kpos[None, None, :], cfg.rope_theta)
+    q = shd.cst(q, "dp", "tp", None, None)
+    k = shd.cst(k, "dp", "tp", None, None)
+    if backend == "dense":
+        o = attn.dense_attention(q, k, v, qpos, kpos, causal=causal)
+    else:
+        o = attn.flash_attention(q, k, v, qpos, kpos, causal=causal)
+    return pm.apply_linear(lp["wo"], o.transpose(0, 2, 1, 3).reshape(b, sq_, -1))
+
+
+def _mlp_apply(lp, x):
+    return pm.apply_linear(lp["w2"], jax.nn.gelu(pm.apply_linear(lp["w1"], x)))
+
+
+def encode(p, cfg: ModelConfig, frames, shd: ShardCtx,
+           backend: str = "flash") -> jax.Array:
+    h = shd.cst(frames.astype(cfg.dtype), "dp", None, None)
+    s = h.shape[1]
+    pos = jnp.arange(s, dtype=jnp.int32)
+
+    def body(x, lp):
+        x = x + _mha(lp["attn"], pm.apply_rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                     pm.apply_rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg,
+                     pos, pos, shd, causal=False, backend=backend)
+        x = x + _mlp_apply(lp["mlp"], pm.apply_rmsnorm(lp["ln2"], x, cfg.norm_eps))
+        return x, None
+
+    body = pm.maybe_remat(body, cfg)
+    h, _ = jax.lax.scan(body, h, p["enc"])
+    return pm.apply_rmsnorm(p["ln_enc"], h, cfg.norm_eps)
+
+
+def forward(p, cfg: ModelConfig, batch, shd: ShardCtx,
+            backend: str = "flash"):
+    enc_out = encode(p, cfg, batch["frames"], shd, backend)
+    h = p["embed"]["table"][batch["tokens"]].astype(cfg.dtype)
+    h = shd.cst(h, "dp", None, None)
+    s = h.shape[1]
+    pos = jnp.arange(s, dtype=jnp.int32)
+    epos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+
+    def body(x, lp):
+        x = x + _mha(lp["self"], pm.apply_rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                     pm.apply_rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg,
+                     pos, pos, shd, causal=True, backend=backend)
+        x = x + _mha(lp["cross"], pm.apply_rmsnorm(lp["ln_x"], x, cfg.norm_eps),
+                     enc_out, cfg, pos, epos, shd, causal=False,
+                     backend=backend)
+        x = x + _mlp_apply(lp["mlp"], pm.apply_rmsnorm(lp["ln2"], x, cfg.norm_eps))
+        return x, None
+
+    body = pm.maybe_remat(body, cfg)
+    h, _ = jax.lax.scan(body, h, p["dec"])
+    return pm.apply_rmsnorm(p["ln_f"], h, cfg.norm_eps), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(p, cfg: ModelConfig, batch, shd: ShardCtx,
+            backend: str = "flash") -> jax.Array:
+    h, _ = forward(p, cfg, batch, shd, backend)
+    return ce_loss(h, p["head"]["w"].astype(cfg.dtype), batch["labels"],
+                   cfg.loss_chunk)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int,
+               dtype=None) -> Dict[str, Any]:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    l, hq, dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((l, batch_size, hq, max_seq, dh), dtype),
+        "v": jnp.zeros((l, batch_size, hq, max_seq, dh), dtype),
+        "xk": jnp.zeros((l, batch_size, hq, max_seq, dh), dtype),
+        "xv": jnp.zeros((l, batch_size, hq, max_seq, dh), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, long_context: bool = False):
+    kv = P(None, "dp", "tp", None, None)
+    return {"k": kv, "v": kv, "xk": kv, "xv": kv, "pos": P()}
+
+
+def prefill(p, cfg: ModelConfig, batch, shd: ShardCtx,
+            backend: str = "flash"):
+    """Encoder pass + decoder prompt pass; caches self-KV and cross-KV."""
+    enc_out = encode(p, cfg, batch["frames"], shd, backend)
+    h = p["embed"]["table"][batch["tokens"]].astype(cfg.dtype)
+    b, s, _ = h.shape
+    hq, dh = cfg.n_heads, cfg.head_dim
+    pos = jnp.arange(s, dtype=jnp.int32)
+    epos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+
+    def body(x, lp):
+        hn = pm.apply_rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        k = pm.apply_linear(lp["self"]["wk"], hn).reshape(b, s, hq, dh)\
+            .transpose(0, 2, 1, 3)
+        k = attn.rope(k, pos[None, None, :], cfg.rope_theta)
+        v = pm.apply_linear(lp["self"]["wv"], hn).reshape(b, s, hq, dh)\
+            .transpose(0, 2, 1, 3)
+        xk = pm.apply_linear(lp["cross"]["wk"], enc_out)\
+            .reshape(b, -1, hq, dh).transpose(0, 2, 1, 3)
+        xk = attn.rope(xk, epos[None, None, :], cfg.rope_theta)
+        xv = pm.apply_linear(lp["cross"]["wv"], enc_out)\
+            .reshape(b, -1, hq, dh).transpose(0, 2, 1, 3)
+        x = x + _mha(lp["self"], hn, hn, cfg, pos, pos, shd, causal=True,
+                     backend=backend)
+        x = x + _mha(lp["cross"], pm.apply_rmsnorm(lp["ln_x"], x, cfg.norm_eps),
+                     enc_out, cfg, pos, epos, shd, causal=False,
+                     backend=backend)
+        x = x + _mlp_apply(lp["mlp"], pm.apply_rmsnorm(lp["ln2"], x, cfg.norm_eps))
+        return x, (k.astype(cfg.dtype), v.astype(cfg.dtype),
+                   xk.astype(cfg.dtype), xv.astype(cfg.dtype))
+
+    body = pm.maybe_remat(body, cfg)
+    h, (ks, vs, xks, xvs) = jax.lax.scan(body, h, p["dec"])
+    h = pm.apply_rmsnorm(p["ln_f"], h, cfg.norm_eps)
+    logits = (h[:, -1] @ p["head"]["w"].astype(cfg.dtype)).astype(jnp.float32)
+    cache = {"k": ks, "v": vs, "xk": xks, "xv": xvs,
+             "pos": jnp.asarray(s, jnp.int32)}
+    return cache, logits
+
+
+def decode_step(p, cfg: ModelConfig, cache, tokens, shd: ShardCtx,
+                backend: str = "flash", sharded_long: bool = False):
+    h = p["embed"]["table"][tokens].astype(cfg.dtype)
+    b = h.shape[0]
+    hq, dh = cfg.n_heads, cfg.head_dim
+    qpos = cache["pos"]
+    s_max = cache["k"].shape[3]
+    kpos = jnp.arange(s_max, dtype=jnp.int32)
+
+    def body(x, xs):
+        lp, kc, vc, xk, xv = xs
+        hn = pm.apply_rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q = pm.apply_linear(lp["self"]["wq"], hn).reshape(b, 1, hq, dh)\
+            .transpose(0, 2, 1, 3)
+        k1 = pm.apply_linear(lp["self"]["wk"], hn).reshape(b, 1, hq, dh)\
+            .transpose(0, 2, 1, 3)
+        v1 = pm.apply_linear(lp["self"]["wv"], hn).reshape(b, 1, hq, dh)\
+            .transpose(0, 2, 1, 3)
+        q = attn.rope(q, qpos[None, None, None].astype(jnp.int32), cfg.rope_theta)
+        k1 = attn.rope(k1, qpos[None, None, None].astype(jnp.int32), cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k1.astype(kc.dtype), (0, 0, qpos, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v1.astype(vc.dtype), (0, 0, qpos, 0))
+        o = attn.decode_attention(q[:, :, 0], kc, vc, kpos, qpos)
+        x = x + pm.apply_linear(lp["self"]["wo"], o.reshape(b, 1, -1))
+        # cross attention over cached encoder KV
+        hn = pm.apply_rmsnorm(lp["ln_x"], x, cfg.norm_eps)
+        qx = pm.apply_linear(lp["cross"]["wq"], hn).reshape(b, 1, hq, dh)\
+            .transpose(0, 2, 1, 3)
+        qx = attn.rope(qx, qpos[None, None, None].astype(jnp.int32), cfg.rope_theta)
+        ox = attn.decode_attention(qx[:, :, 0], xk, xv,
+                                   jnp.arange(xk.shape[2], dtype=jnp.int32),
+                                   jnp.iinfo(jnp.int32).max - 1)
+        x = x + pm.apply_linear(lp["cross"]["wo"], ox.reshape(b, 1, -1))
+        x = x + _mlp_apply(lp["mlp"], pm.apply_rmsnorm(lp["ln2"], x, cfg.norm_eps))
+        return x, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(body, h, (p["dec"], cache["k"], cache["v"],
+                                         cache["xk"], cache["xv"]))
+    h = pm.apply_rmsnorm(p["ln_f"], h, cfg.norm_eps)
+    logits = (h[:, 0] @ p["head"]["w"].astype(cfg.dtype)).astype(jnp.float32)
+    cache = dict(cache, k=ks, v=vs, pos=cache["pos"] + 1)
+    return logits, cache

@@ -1,0 +1,276 @@
+"""Zamba2-style hybrid: a stack of mamba2 layers with one SHARED attention
+block (params reused) applied every ``shared_attn_every`` layers on
+concat(h, x_embed) — so the shared block always sees both the residual
+stream and the original embedding (Zamba2 design).
+
+Structure per group g: shared_attn(concat(h, x0)) -> 2d -> proj to d, added
+residually; then ``shared_attn_every`` mamba2 layers (lax.scan over the
+group's stacked params).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba
+from repro.models import param as pm
+from repro.models.sharding import ShardCtx
+from repro.models.transformer import ce_loss
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    return -(-cfg.n_layers // cfg.shared_attn_every)
+
+
+def _init_shared(key, cfg: ModelConfig):
+    """Shared transformer block over the 2*d concat stream."""
+    d2 = 2 * cfg.d_model
+    hq = cfg.n_heads
+    dh = d2 // hq
+    ks = jax.random.split(key, 7)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = pm.rmsnorm(d2)
+    p["wq"], s["wq"] = pm.linear(ks[0], d2, hq * dh, spec=("fsdp", "tp"))
+    p["wk"], s["wk"] = pm.linear(ks[1], d2, hq * dh, spec=("fsdp", "tp"))
+    p["wv"], s["wv"] = pm.linear(ks[2], d2, hq * dh, spec=("fsdp", "tp"))
+    p["wo"], s["wo"] = pm.linear(ks[3], hq * dh, d2, spec=("tp", "fsdp"))
+    p["ln2"], s["ln2"] = pm.rmsnorm(d2)
+    p["wg"], s["wg"] = pm.linear(ks[4], d2, cfg.d_ff, spec=("fsdp", "tp"))
+    p["wu"], s["wu"] = pm.linear(ks[5], d2, cfg.d_ff, spec=("fsdp", "tp"))
+    p["wd"], s["wd"] = pm.linear(ks[6], cfg.d_ff, d2, spec=("tp", "fsdp"))
+    p["out"], s["out"] = pm.linear(jax.random.fold_in(key, 9), d2,
+                                   cfg.d_model, spec=("fsdp", "tp"))
+    return p, s
+
+
+def init_lm(cfg: ModelConfig, key) -> Tuple[dict, dict]:
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["embed"], s["embed"] = pm.embedding(ks[0], cfg.vocab, cfg.d_model)
+    p["shared"], s["shared"] = _init_shared(ks[1], cfg)
+
+    def layer_init(k):
+        lp, ls = {}, {}
+        lp["ln"], ls["ln"] = pm.rmsnorm(cfg.d_model)
+        lp["mixer"], ls["mixer"] = mamba.init_mamba2(k, cfg)
+        return lp, ls
+
+    groups = _n_groups(cfg)
+    per = cfg.shared_attn_every
+    p["layers"], s["layers"] = pm.stacked(layer_init, groups * per, ks[2])
+    p["ln_f"], s["ln_f"] = pm.rmsnorm(cfg.d_model)
+    p["head"], s["head"] = pm.linear(ks[3], cfg.d_model, cfg.vocab,
+                                     spec=("fsdp", "tp"))
+    return p, s
+
+
+def _shared_qkv(sp, h2, cfg, pos, shd: ShardCtx):
+    b, s, d2 = h2.shape
+    hq = cfg.n_heads
+    dh = d2 // hq
+    hn = pm.apply_rmsnorm(sp["ln1"], h2, cfg.norm_eps)
+    q = pm.apply_linear(sp["wq"], hn).reshape(b, s, hq, dh).transpose(0, 2, 1, 3)
+    k = pm.apply_linear(sp["wk"], hn).reshape(b, s, hq, dh).transpose(0, 2, 1, 3)
+    v = pm.apply_linear(sp["wv"], hn).reshape(b, s, hq, dh).transpose(0, 2, 1, 3)
+    q = attn.rope(q, pos[None, None, :], cfg.rope_theta)
+    k = attn.rope(k, pos[None, None, :], cfg.rope_theta)
+    q = shd.cst(q, "dp", "tp", None, None)
+    k = shd.cst(k, "dp", "tp", None, None)
+    return q, k, v
+
+
+def _shared_block(sp, h, x0, pos, cfg, shd, backend) -> jax.Array:
+    """Returns the d-dim residual contribution of the shared block."""
+    h2 = jnp.concatenate([h, x0], axis=-1)
+    q, k, v = _shared_qkv(sp, h2, cfg, pos, shd)
+    if backend == "clusterkv" and cfg.clusterkv.enabled:
+        o = attn.clusterkv_attention(q, k, v, pos, pos, cfg.clusterkv)
+    elif backend == "dense":
+        o = attn.dense_attention(q, k, v, pos, pos)
+    else:
+        o = attn.flash_attention(q, k, v, pos, pos)
+    b, s, d2 = h2.shape
+    a = pm.apply_linear(sp["wo"], o.transpose(0, 2, 1, 3).reshape(b, s, -1))
+    h2 = h2 + a
+    hn = pm.apply_rmsnorm(sp["ln2"], h2, cfg.norm_eps)
+    f = jax.nn.silu(pm.apply_linear(sp["wg"], hn)) * pm.apply_linear(sp["wu"], hn)
+    h2 = h2 + pm.apply_linear(sp["wd"], f)
+    return pm.apply_linear(sp["out"], h2)
+
+
+def _group_params(p, g: int, per: int):
+    return jax.tree.map(lambda a: a[g * per:(g + 1) * per], p["layers"])
+
+
+def forward(p, cfg: ModelConfig, batch, shd: ShardCtx,
+            backend: str = "flash"):
+    x0 = p["embed"]["table"][batch["tokens"]].astype(cfg.dtype)
+    x0 = shd.cst(x0, "dp", None, None)
+    h = x0
+    s = h.shape[1]
+    pos = jnp.arange(s, dtype=jnp.int32)
+    per = cfg.shared_attn_every
+
+    def mamba_body(x, lp):
+        y, _, _, _ = mamba.mamba2_forward(
+            lp["mixer"], pm.apply_rmsnorm(lp["ln"], x, cfg.norm_eps), cfg, shd)
+        return x + y, None
+
+    mamba_body = pm.maybe_remat(mamba_body, cfg)
+
+    for g in range(_n_groups(cfg)):
+        h = h + _shared_block(p["shared"], h, x0, pos, cfg, shd, backend)
+        h, _ = jax.lax.scan(mamba_body, h, _group_params(p, g, per))
+    return pm.apply_rmsnorm(p["ln_f"], h, cfg.norm_eps), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(p, cfg: ModelConfig, batch, shd: ShardCtx,
+            backend: str = "flash") -> jax.Array:
+    h, _ = forward(p, cfg, batch, shd, backend)
+    return ce_loss(h, p["head"]["w"].astype(cfg.dtype), batch["labels"],
+                   cfg.loss_chunk)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int,
+               dtype=None) -> Dict[str, Any]:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    groups = _n_groups(cfg)
+    d2 = 2 * cfg.d_model
+    hq = cfg.n_heads
+    dh = d2 // hq
+    st = mamba.mamba2_state(cfg, groups * cfg.shared_attn_every, batch_size)
+    return {
+        "ssm": st,
+        "k": jnp.zeros((groups, batch_size, hq, max_seq, dh), dtype),
+        "v": jnp.zeros((groups, batch_size, hq, max_seq, dh), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, long_context: bool = False):
+    kv = (P(None, "dp", None, "seq", None) if long_context
+          else P(None, "dp", "tp", None, None))
+    return {
+        "ssm": {"h": P(None, "dp", "tp", None, None),
+                "conv_x": P(None, "dp", None, "tp"),
+                "conv_bc": P(None, "dp", None, None)},
+        "k": kv, "v": kv, "pos": P(),
+    }
+
+
+def prefill(p, cfg: ModelConfig, batch, shd: ShardCtx,
+            backend: str = "flash"):
+    x0 = p["embed"]["table"][batch["tokens"]].astype(cfg.dtype)
+    x0 = shd.cst(x0, "dp", None, None)
+    h = x0
+    s = h.shape[1]
+    pos = jnp.arange(s, dtype=jnp.int32)
+    per = cfg.shared_attn_every
+
+    def mamba_body(x, lp):
+        y, h_fin, cx, cbc = mamba.mamba2_forward(
+            lp["mixer"], pm.apply_rmsnorm(lp["ln"], x, cfg.norm_eps), cfg, shd)
+        return x + y, (h_fin, cx, cbc)
+
+    mamba_body = pm.maybe_remat(mamba_body, cfg)
+
+    ks, vs, hs, cxs, cbcs = [], [], [], [], []
+    for g in range(_n_groups(cfg)):
+        h2 = jnp.concatenate([h, x0], axis=-1)
+        q, k, v = _shared_qkv(p["shared"], h2, cfg, pos, shd)
+        ks.append(k.astype(cfg.dtype))
+        vs.append(v.astype(cfg.dtype))
+        h = h + _shared_block(p["shared"], h, x0, pos, cfg, shd, backend)
+        h, (hf, cx, cbc) = jax.lax.scan(mamba_body, h, _group_params(p, g, per))
+        hs.append(hf)
+        cxs.append(cx)
+        cbcs.append(cbc)
+    h = pm.apply_rmsnorm(p["ln_f"], h, cfg.norm_eps)
+    logits = (h[:, -1] @ p["head"]["w"].astype(cfg.dtype)).astype(jnp.float32)
+    cache = {
+        "ssm": {"h": jnp.concatenate(hs, 0),
+                "conv_x": jnp.concatenate(cxs, 0).astype(jnp.float32),
+                "conv_bc": jnp.concatenate(cbcs, 0).astype(jnp.float32)},
+        "k": jnp.stack(ks), "v": jnp.stack(vs),
+        "pos": jnp.asarray(s, jnp.int32),
+    }
+    return cache, logits
+
+
+def decode_step(p, cfg: ModelConfig, cache, tokens, shd: ShardCtx,
+                backend: str = "flash", sharded_long: bool = False):
+    x0 = p["embed"]["table"][tokens].astype(cfg.dtype)
+    h = x0
+    b = h.shape[0]
+    qpos = cache["pos"]
+    s_max = cache["k"].shape[3]
+    kpos = jnp.arange(s_max, dtype=jnp.int32)
+    per = cfg.shared_attn_every
+    d2 = 2 * cfg.d_model
+    hq = cfg.n_heads
+    dh = d2 // hq
+    sp = p["shared"]
+
+    def mamba_body(x, xs):
+        lp, hst, cx, cbc = xs
+        y, hst, cx, cbc = mamba.mamba2_step(
+            lp["mixer"], pm.apply_rmsnorm(lp["ln"], x, cfg.norm_eps),
+            hst, cx, cbc, cfg)
+        return x + y, (hst, cx, cbc)
+
+    new_k, new_v, new_h, new_cx, new_cbc = [], [], [], [], []
+    for g in range(_n_groups(cfg)):
+        h2 = jnp.concatenate([h, x0], axis=-1)
+        hn = pm.apply_rmsnorm(sp["ln1"], h2, cfg.norm_eps)
+        q = pm.apply_linear(sp["wq"], hn).reshape(b, 1, hq, dh).transpose(0, 2, 1, 3)
+        k1 = pm.apply_linear(sp["wk"], hn).reshape(b, 1, hq, dh).transpose(0, 2, 1, 3)
+        v1 = pm.apply_linear(sp["wv"], hn).reshape(b, 1, hq, dh).transpose(0, 2, 1, 3)
+        q = attn.rope(q, qpos[None, None, None].astype(jnp.int32), cfg.rope_theta)
+        k1 = attn.rope(k1, qpos[None, None, None].astype(jnp.int32), cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(cache["k"][g], k1.astype(cache["k"].dtype),
+                                          (0, 0, qpos, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"][g], v1.astype(cache["v"].dtype),
+                                          (0, 0, qpos, 0))
+        new_k.append(kc)
+        new_v.append(vc)
+        q1 = q[:, :, 0]
+        if backend == "clusterkv" and cfg.clusterkv.enabled:
+            if sharded_long and shd.mesh is not None:
+                o = attn.clusterkv_decode_sharded(q1, kc, vc, kpos, qpos,
+                                                  cfg.clusterkv, shd.mesh)
+            else:
+                o = attn.clusterkv_decode(q1, kc, vc, kpos, qpos, cfg.clusterkv)
+        else:
+            o = attn.decode_attention(q1, kc, vc, kpos, qpos)
+        a = pm.apply_linear(sp["wo"], o.reshape(b, 1, -1))
+        h2a = h2 + a
+        hn2 = pm.apply_rmsnorm(sp["ln2"], h2a, cfg.norm_eps)
+        f = jax.nn.silu(pm.apply_linear(sp["wg"], hn2)) * pm.apply_linear(sp["wu"], hn2)
+        h2a = h2a + pm.apply_linear(sp["wd"], f)
+        h = h + pm.apply_linear(sp["out"], h2a)
+
+        gp = _group_params(p, g, per)
+        sl = lambda a: a[g * per:(g + 1) * per]
+        h, (hs_, cx_, cbc_) = jax.lax.scan(
+            mamba_body, h, (gp, sl(cache["ssm"]["h"]),
+                            sl(cache["ssm"]["conv_x"]),
+                            sl(cache["ssm"]["conv_bc"])))
+        new_h.append(hs_)
+        new_cx.append(cx_)
+        new_cbc.append(cbc_)
+
+    h = pm.apply_rmsnorm(p["ln_f"], h, cfg.norm_eps)
+    logits = (h[:, 0] @ p["head"]["w"].astype(cfg.dtype)).astype(jnp.float32)
+    cache = {
+        "ssm": {"h": jnp.concatenate(new_h, 0),
+                "conv_x": jnp.concatenate(new_cx, 0),
+                "conv_bc": jnp.concatenate(new_cbc, 0)},
+        "k": jnp.stack(new_k), "v": jnp.stack(new_v),
+        "pos": cache["pos"] + 1,
+    }
+    return logits, cache

@@ -1,0 +1,333 @@
+"""Mamba blocks: mamba1 selective scan (falcon-mamba) and mamba2 SSD
+(zamba2), in chunked forms.
+
+TPU adaptation notes (DESIGN.md §2): the recurrence is evaluated chunk-wise —
+within a chunk, mamba1 uses a parallel associative scan and mamba2 uses the
+SSD matmul form (dense (l x l) decay kernels on the MXU); across chunks a
+lax.scan carries the (B, H, P, N) state. Inner channels are TP-sharded
+("tp"); the scan carries only O(B * d_inner * N) state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import param as pm
+from repro.models.sharding import ShardCtx
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d
+# ---------------------------------------------------------------------------
+
+
+def conv1d_init(key, channels: int, width: int):
+    p = {"w": jax.random.normal(key, (width, 1, channels), jnp.float32)
+             / math.sqrt(width),
+         "b": jnp.zeros((channels,), jnp.float32)}
+    s = {"w": P(None, None, "tp"), "b": P("tp")}
+    return p, s
+
+
+def conv1d_apply(p, x: jax.Array) -> jax.Array:
+    """x (B, S, C), causal depthwise conv."""
+    width = p["w"].shape[0]
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype),
+        window_strides=(1,), padding=[(width - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return y + p["b"].astype(x.dtype)
+
+
+def conv1d_step(p, buf: jax.Array, x1: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Decode: buf (B, width-1, C) history, x1 (B, 1, C) new token."""
+    window = jnp.concatenate([buf, x1], axis=1)          # (B, width, C)
+    w = p["w"][:, 0, :].astype(x1.dtype)                 # (width, C)
+    y = jnp.einsum("bwc,wc->bc", window, w) + p["b"].astype(x1.dtype)
+    return window[:, 1:], y[:, None]
+
+
+# ---------------------------------------------------------------------------
+# mamba1 (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba1(key, cfg: ModelConfig):
+    d = cfg.d_model
+    m = cfg.ssm
+    di = m.expand * d
+    dt_rank = m.dt_rank or -(-d // 16)
+    n = m.d_state
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["in_proj"], s["in_proj"] = pm.linear(ks[0], d, 2 * di, spec=("fsdp", "tp"))
+    p["conv"], s["conv"] = conv1d_init(ks[1], di, m.d_conv)
+    p["x_proj"], s["x_proj"] = pm.linear(ks[2], di, dt_rank + 2 * n,
+                                         spec=("tp", None))
+    p["dt_proj"], s["dt_proj"] = pm.linear(ks[3], dt_rank, di,
+                                           spec=(None, "tp"), bias=True)
+    p["A_log"] = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, n + 1, dtype=jnp.float32), (di, n)))
+    s["A_log"] = P("tp", None)
+    p["D"] = jnp.ones((di,), jnp.float32)
+    s["D"] = P("tp")
+    p["out_proj"], s["out_proj"] = pm.linear(ks[4], di, d, spec=("tp", "fsdp"))
+    return p, s
+
+
+def selective_scan(xc, dt, a_mat, bc, cc, chunk: int):
+    """Chunked mamba1 scan.
+
+    xc/dt (B,S,di); a_mat (di,N); bc/cc (B,S,N). Returns y (B,S,di)."""
+    b, s, di = xc.shape
+    n = a_mat.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bc = jnp.pad(bc, ((0, 0), (0, pad), (0, 0)))
+        cc = jnp.pad(cc, ((0, 0), (0, pad), (0, 0)))
+    da = jnp.exp(dt[..., None] * a_mat)                  # (B,S,di,N)
+    dbx = dt[..., None] * bc[:, :, None, :] * xc[..., None]
+
+    def chunks(t):
+        return jnp.moveaxis(t.reshape((b, nc, chunk) + t.shape[2:]), 1, 0)
+
+    def outer(h, inp):
+        dac, dbxc, ccc = inp                             # (B,l,di,N) x2, (B,l,N)
+        op = lambda e1, e2: (e2[0] * e1[0], e2[0] * e1[1] + e2[1])
+        acum, bcum = jax.lax.associative_scan(op, (dac, dbxc), axis=1)
+        hs = acum * h[:, None] + bcum                    # (B,l,di,N)
+        y = jnp.einsum("bldn,bln->bld", hs, ccc)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((b, di, n), xc.dtype)
+    h_fin, ys = jax.lax.scan(outer, h0, (chunks(da), chunks(dbx), chunks(cc)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * chunk, di)
+    return y[:, :s], h_fin
+
+
+def mamba1_forward(lp, x, cfg: ModelConfig, shd: ShardCtx) -> jax.Array:
+    """One mamba1 block (post-norm residual handled by caller). x (B,S,d)."""
+    m = cfg.ssm
+    d = cfg.d_model
+    di = m.expand * d
+    dt_rank = m.dt_rank or -(-d // 16)
+    n = m.d_state
+    xz = pm.apply_linear(lp["in_proj"], x)
+    xin, z = xz[..., :di], xz[..., di:]
+    xin = shd.cst(xin, "dp", None, "tp")
+    xc = jax.nn.silu(conv1d_apply(lp["conv"], xin))
+    proj = pm.apply_linear(lp["x_proj"], xc)
+    dt = jax.nn.softplus(pm.apply_linear(lp["dt_proj"], proj[..., :dt_rank]))
+    bc = proj[..., dt_rank:dt_rank + n]
+    cc = proj[..., dt_rank + n:]
+    a_mat = -jnp.exp(lp["A_log"]).astype(xc.dtype)
+    y, h_fin = selective_scan(xc.astype(jnp.float32), dt.astype(jnp.float32),
+                              a_mat.astype(jnp.float32), bc.astype(jnp.float32),
+                              cc.astype(jnp.float32), m.chunk)
+    y = y.astype(x.dtype) + lp["D"].astype(x.dtype) * xc
+    y = y * jax.nn.silu(z)
+    conv_buf = xin[:, -(m.d_conv - 1):, :]
+    return pm.apply_linear(lp["out_proj"], y), h_fin, conv_buf
+
+
+def mamba1_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    m = cfg.ssm
+    di = m.expand * cfg.d_model
+    return {"h": jnp.zeros((cfg.n_layers, batch, di, m.d_state), dtype),
+            "conv": jnp.zeros((cfg.n_layers, batch, m.d_conv - 1, di), dtype)}
+
+
+def mamba1_step(lp, x1, h, conv_buf, cfg: ModelConfig):
+    """Decode: x1 (B,1,d); h (B,di,N); conv_buf (B,width-1,di)."""
+    m = cfg.ssm
+    d = cfg.d_model
+    di = m.expand * d
+    dt_rank = m.dt_rank or -(-d // 16)
+    n = m.d_state
+    xz = pm.apply_linear(lp["in_proj"], x1)
+    xin, z = xz[..., :di], xz[..., di:]
+    conv_buf, xc = conv1d_step(lp["conv"], conv_buf, xin)
+    xc = jax.nn.silu(xc)
+    proj = pm.apply_linear(lp["x_proj"], xc)
+    dt = jax.nn.softplus(pm.apply_linear(lp["dt_proj"], proj[..., :dt_rank]))
+    bc = proj[..., dt_rank:dt_rank + n]
+    cc = proj[..., dt_rank + n:]
+    a_mat = -jnp.exp(lp["A_log"]).astype(jnp.float32)
+    da = jnp.exp(dt[:, 0, :, None].astype(jnp.float32) * a_mat)
+    dbx = (dt[:, 0, :, None] * bc[:, 0, None, :] * xc[:, 0, :, None]
+           ).astype(jnp.float32)
+    h = da * h + dbx
+    y = jnp.einsum("bdn,bn->bd", h, cc[:, 0].astype(jnp.float32))
+    y = (y + lp["D"].astype(jnp.float32) * xc[:, 0].astype(jnp.float32))
+    y = (y * jax.nn.silu(z[:, 0]).astype(jnp.float32)).astype(x1.dtype)
+    return pm.apply_linear(lp["out_proj"], y[:, None]), h, conv_buf
+
+
+# ---------------------------------------------------------------------------
+# mamba2 (SSD) — zamba2
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    d = cfg.d_model
+    m = cfg.ssm
+    di = m.expand * d
+    n = m.d_state
+    nh = di // m.head_dim
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    # separate projections keep every sharded dim aligned (no mid-shard splits)
+    p["z_proj"], s["z_proj"] = pm.linear(ks[0], d, di, spec=("fsdp", "tp"))
+    p["x_proj"], s["x_proj"] = pm.linear(ks[1], d, di, spec=("fsdp", "tp"))
+    p["bc_proj"], s["bc_proj"] = pm.linear(ks[2], d, 2 * n, spec=("fsdp", None))
+    p["dt_proj"], s["dt_proj"] = pm.linear(ks[3], d, nh, spec=("fsdp", None))
+    p["conv_x"], s["conv_x"] = conv1d_init(ks[4], di, m.d_conv)
+    p["conv_bc"], s["conv_bc"] = conv1d_init(ks[5], 2 * n, m.d_conv)
+    s["conv_bc"] = {"w": P(None, None, None), "b": P(None)}
+    p["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32))
+    s["A_log"] = P("tp")
+    p["D"] = jnp.ones((nh,), jnp.float32)
+    s["D"] = P("tp")
+    p["dt_bias"] = jnp.zeros((nh,), jnp.float32)
+    s["dt_bias"] = P(None)
+    p["norm"], s["norm"] = pm.rmsnorm(di)
+    p["out_proj"], s["out_proj"] = pm.linear(
+        jax.random.fold_in(ks[5], 1), di, d, spec=("tp", "fsdp"))
+    return p, s
+
+
+def _segsum(a):
+    """a (..., l) -> (..., l, l) with [i, j] = sum_{k=j+1..i} a_k (i >= j)."""
+    l = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    seg = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd(x, dt, a_head, bmat, cmat, chunk: int):
+    """Mamba2 SSD. x (B,S,H,P); dt (B,S,H); a_head (H,) negative;
+    bmat/cmat (B,S,N). Returns y (B,S,H,P)."""
+    b, s, h, pdim = x.shape
+    n = bmat.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    ch = lambda t: t.reshape((b, nc, chunk) + t.shape[2:])
+    xc, dtc = ch(x), ch(dt)
+    bc, cc = ch(bmat), ch(cmat)
+    xbar = xc * dtc[..., None]                           # (b,c,l,h,p)
+    a = dtc * a_head                                     # (b,c,l,h) log decay
+    a_t = jnp.moveaxis(a, -1, -2)                        # (b,c,h,l)
+    acum = jnp.cumsum(a_t, axis=-1)                      # (b,c,h,l)
+
+    # intra-chunk (diagonal blocks): dense (l,l) decay kernel on the MXU
+    ldec = jnp.exp(_segsum(a_t))                         # (b,c,h,l,l)
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp", cc, bc, ldec, xbar)
+
+    # per-chunk output states
+    dstate = jnp.exp(acum[..., -1:] - acum)              # (b,c,h,l)
+    states = jnp.einsum("bcln,bchl,bclhp->bchpn", bc, dstate, xbar)
+
+    # inter-chunk recurrence
+    cdecay = jnp.exp(acum[..., -1])                      # (b,c,h)
+
+    def outer(carry, inp):
+        st, dec = inp                                    # (b,h,p,n), (b,h)
+        out = carry
+        carry = carry * dec[..., None, None] + st
+        return carry, out
+
+    init = jnp.zeros((b, h, pdim, n), x.dtype)
+    h_fin, prev = jax.lax.scan(outer, init,
+                               (jnp.moveaxis(states, 1, 0),
+                                jnp.moveaxis(cdecay, 1, 0)))
+    prev = jnp.moveaxis(prev, 0, 1)                      # (b,c,h,p,n)
+    y_off = jnp.einsum("bcln,bchl,bchpn->bclhp", cc, jnp.exp(acum), prev)
+    y = (y_diag + y_off).reshape(b, nc * chunk, h, pdim)
+    return y[:, :s], h_fin
+
+
+def mamba2_forward(lp, x, cfg: ModelConfig, shd: ShardCtx) -> jax.Array:
+    m = cfg.ssm
+    d = cfg.d_model
+    di = m.expand * d
+    n = m.d_state
+    nh = di // m.head_dim
+    z = pm.apply_linear(lp["z_proj"], x)
+    xraw = pm.apply_linear(lp["x_proj"], x)
+    bcraw = pm.apply_linear(lp["bc_proj"], x)
+    dt = pm.apply_linear(lp["dt_proj"], x)
+    xin = jax.nn.silu(conv1d_apply(lp["conv_x"], xraw))
+    bcin = jax.nn.silu(conv1d_apply(lp["conv_bc"], bcraw))
+    bmat = bcin[..., :n]
+    cmat = bcin[..., n:]
+    dt = jax.nn.softplus(dt + lp["dt_bias"].astype(dt.dtype))
+    a_head = -jnp.exp(lp["A_log"]).astype(jnp.float32)
+    bsz, s, _ = x.shape
+    xh = xin.reshape(bsz, s, nh, m.head_dim)
+    y, h_fin = ssd(xh.astype(jnp.float32), dt.astype(jnp.float32), a_head,
+                   bmat.astype(jnp.float32), cmat.astype(jnp.float32), m.chunk)
+    y = y + lp["D"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = pm.apply_rmsnorm(lp["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    w = m.d_conv - 1
+    return (pm.apply_linear(lp["out_proj"], y), h_fin,
+            xraw[:, -w:, :], bcraw[:, -w:, :])
+
+
+def mamba2_state(cfg: ModelConfig, n_layers: int, batch: int,
+                 dtype=jnp.float32):
+    m = cfg.ssm
+    di = m.expand * cfg.d_model
+    nh = di // m.head_dim
+    return {"h": jnp.zeros((n_layers, batch, nh, m.head_dim, m.d_state), dtype),
+            "conv_x": jnp.zeros((n_layers, batch, m.d_conv - 1, di), dtype),
+            "conv_bc": jnp.zeros((n_layers, batch, m.d_conv - 1,
+                                  2 * m.d_state), dtype)}
+
+
+def mamba2_step(lp, x1, h, conv_x_buf, conv_bc_buf, cfg: ModelConfig):
+    """Decode: x1 (B,1,d); h (B,H,P,N); conv bufs (B,w-1,*)."""
+    m = cfg.ssm
+    d = cfg.d_model
+    di = m.expand * d
+    n = m.d_state
+    nh = di // m.head_dim
+    z = pm.apply_linear(lp["z_proj"], x1)
+    xin = pm.apply_linear(lp["x_proj"], x1)
+    bcin = pm.apply_linear(lp["bc_proj"], x1)
+    dt = pm.apply_linear(lp["dt_proj"], x1)
+    conv_x_buf, xin = conv1d_step(lp["conv_x"], conv_x_buf, xin)
+    conv_bc_buf, bcin = conv1d_step(lp["conv_bc"], conv_bc_buf, bcin)
+    xin = jax.nn.silu(xin)
+    bcin = jax.nn.silu(bcin)
+    bmat = bcin[..., :n]
+    cmat = bcin[..., n:]
+    dt = jax.nn.softplus(dt + lp["dt_bias"].astype(dt.dtype))[:, 0]  # (B,H)
+    a_head = -jnp.exp(lp["A_log"]).astype(jnp.float32)
+    xh = xin[:, 0].reshape(-1, nh, m.head_dim).astype(jnp.float32)
+    dec = jnp.exp(dt.astype(jnp.float32) * a_head)       # (B,H)
+    xbar = xh * dt.astype(jnp.float32)[..., None]
+    h = (h * dec[..., None, None]
+         + jnp.einsum("bn,bhp->bhpn", bmat[:, 0].astype(jnp.float32), xbar))
+    y = jnp.einsum("bhpn,bn->bhp", h, cmat[:, 0].astype(jnp.float32))
+    y = y + lp["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(x1.shape[0], di).astype(x1.dtype)
+    y = pm.apply_rmsnorm(lp["norm"], y * jax.nn.silu(z[:, 0]), cfg.norm_eps)
+    return (pm.apply_linear(lp["out_proj"], y[:, None]), h,
+            conv_x_buf, conv_bc_buf)

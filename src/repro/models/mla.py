@@ -1,0 +1,285 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+Train/prefill expand the latent into full per-head K/V and reuse the shared
+attention backends. Decode runs the ABSORBED form: the cache holds only the
+(normalized) latent c (rank) + shared RoPE key (dr) per token, query-side
+projections are absorbed into the latent space, and attention operates on
+the latent directly.
+
+ClusterKV on MLA clusters in the *latent* space (DESIGN.md §6): the paper's
+"embed first" step is literally MLA's latent projection, so centroids/top-c
+selection run on c-blocks — both in the single-device decode path and the
+seq-sharded shard_map path for long_500k.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import param as pm
+from repro.models.sharding import ShardCtx
+
+NEG_INF = -1e30
+
+
+def _dims(cfg: ModelConfig):
+    m = cfg.mla
+    return (m.q_lora_rank, m.kv_lora_rank, m.qk_nope_head_dim,
+            m.qk_rope_head_dim, m.v_head_dim)
+
+
+def init_mla(key, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kr, dn, dr, dv = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["q_a"], s["q_a"] = pm.linear(ks[0], d, qr, spec=("fsdp", None))
+    p["q_ln"], s["q_ln"] = pm.rmsnorm(qr)
+    p["q_b"], s["q_b"] = pm.linear(ks[1], qr, h * (dn + dr), spec=(None, "tp"))
+    p["kv_a"], s["kv_a"] = pm.linear(ks[2], d, kr + dr, spec=("fsdp", None))
+    p["kv_ln"], s["kv_ln"] = pm.rmsnorm(kr)
+    p["kv_b"], s["kv_b"] = pm.linear(ks[3], kr, h * (dn + dv), spec=(None, "tp"))
+    p["wo"], s["wo"] = pm.linear(ks[4], h * dv, d, spec=("tp", "fsdp"))
+    return p, s
+
+
+def _q_proj(lp, x, cfg: ModelConfig, pos):
+    """x (B,S,d) -> q_nope (B,H,S,dn), q_rope (B,H,S,dr) (roped)."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qr, kr, dn, dr, dv = _dims(cfg)
+    q = pm.apply_linear(lp["q_b"],
+                        pm.apply_rmsnorm(lp["q_ln"],
+                                         pm.apply_linear(lp["q_a"], x)))
+    q = q.reshape(b, s, h, dn + dr).transpose(0, 2, 1, 3)
+    qn, qrope = q[..., :dn], q[..., dn:]
+    qrope = attn.rope(qrope, pos[None, None, :], cfg.rope_theta)
+    return qn, qrope
+
+
+def _kv_latent(lp, x, cfg: ModelConfig, pos):
+    """x (B,S,d) -> cn (B,S,rank) normalized latent, krope (B,S,dr) roped."""
+    qr, kr, dn, dr, dv = _dims(cfg)
+    kv = pm.apply_linear(lp["kv_a"], x)
+    c, krope = kv[..., :kr], kv[..., kr:]
+    cn = pm.apply_rmsnorm(lp["kv_ln"], c)
+    krope = attn.rope(krope, pos[None, :], cfg.rope_theta)
+    return cn, krope
+
+
+def _expand_kv(lp, cn, cfg: ModelConfig):
+    """cn (B,S,rank) -> k_nope (B,H,S,dn), v (B,H,S,dv)."""
+    b, s, _ = cn.shape
+    h = cfg.n_heads
+    qr, kr, dn, dr, dv = _dims(cfg)
+    kv = pm.apply_linear(lp["kv_b"], cn).reshape(b, s, h, dn + dv)
+    kv = kv.transpose(0, 2, 1, 3)
+    return kv[..., :dn], kv[..., dn:]
+
+
+def mla_attention(lp, x, pos, cfg: ModelConfig, shd: ShardCtx,
+                  backend: str) -> jax.Array:
+    """Full (train/prefill) MLA attention, returns (B,S,d) incl. wo."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qn, qrope = _q_proj(lp, x, cfg, pos)
+    cn, krope = _kv_latent(lp, x, cfg, pos)
+    kn, v = _expand_kv(lp, cn, cfg)
+    q = jnp.concatenate([qn, qrope], axis=-1)
+    k = jnp.concatenate(
+        [kn, jnp.broadcast_to(krope[:, None], kn.shape[:-1] + (krope.shape[-1],))],
+        axis=-1)
+    q = shd.cst(q, "dp", "tp", None, None)
+    k = shd.cst(k, "dp", "tp", None, None)
+    if backend == "clusterkv" and cfg.clusterkv.enabled:
+        o = attn.clusterkv_attention(q, k, v, pos, pos, cfg.clusterkv,
+                                     causal=True)
+    elif backend == "dense":
+        o = attn.dense_attention(q, k, v, pos, pos, causal=True)
+    else:
+        o = attn.flash_attention(q, k, v, pos, pos, causal=True)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return pm.apply_linear(lp["wo"], o)
+
+
+# ---------------------------------------------------------------------------
+# cache / prefill / absorbed decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int,
+               dtype=None) -> Dict[str, Any]:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    qr, kr, dn, dr, dv = _dims(cfg)
+    return {
+        "c": jnp.zeros((cfg.n_layers, batch_size, max_seq, kr), dtype),
+        "kr": jnp.zeros((cfg.n_layers, batch_size, max_seq, dr), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, long_context: bool = False):
+    if long_context:
+        c = P(None, "dp", "seq", None)
+    else:
+        c = P(None, "dp", None, None)
+    return {"c": c, "kr": c, "pos": P()}
+
+
+def _mlp(lp, x):
+    h = jax.nn.silu(pm.apply_linear(lp["wg"], x)) * pm.apply_linear(lp["wu"], x)
+    return pm.apply_linear(lp["wd"], h)
+
+
+def _embed(p, cfg, batch):
+    return p["embed"]["table"][batch["tokens"]].astype(cfg.dtype)
+
+
+def prefill(p, cfg: ModelConfig, batch, shd: ShardCtx,
+            backend: str = "flash"):
+    h = _embed(p, cfg, batch)
+    b, s, _ = h.shape
+    pos = jnp.arange(s, dtype=jnp.int32)
+
+    def body(x, lp):
+        hn = pm.apply_rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        a = mla_attention(lp["attn"], hn, pos, cfg, shd, backend)
+        cn, krope = _kv_latent(lp["attn"], hn, cfg, pos)
+        x = x + a
+        hn = pm.apply_rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + _mlp(lp["ffn"], hn)
+        return x, (cn.astype(cfg.dtype), krope.astype(cfg.dtype))
+
+    body = pm.maybe_remat(body, cfg)
+    h, (cs, krs) = jax.lax.scan(body, h, p["layers"])
+    h = pm.apply_rmsnorm(p["ln_f"], h, cfg.norm_eps)
+    w = (p["embed"]["table"].T if cfg.tie_embeddings else p["head"]["w"])
+    logits = (h[:, -1] @ w.astype(cfg.dtype)).astype(jnp.float32)
+    return {"c": cs, "kr": krs, "pos": jnp.asarray(s, jnp.int32)}, logits
+
+
+def _absorbed_scores_attend(lp, qn, qrope, cc, krc, kpos, qpos, cfg,
+                            shd: ShardCtx, backend: str, sharded_long: bool):
+    """Absorbed-form attention over latent cache.
+
+    qn (B,H,dn), qrope (B,H,dr); cc (B,S,rank); krc (B,S,dr).
+    Returns o_lat (B,H,rank)."""
+    qr_, kr_, dn, dr, dv = _dims(cfg)
+    h = cfg.n_heads
+    wkv = lp["kv_b"]["w"].reshape(kr_, h, dn + dv)
+    wk = wkv[..., :dn]                                   # (rank, H, dn)
+    q_lat = jnp.einsum("bhd,rhd->bhr", qn.astype(jnp.float32),
+                       wk.astype(jnp.float32))
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    if backend == "clusterkv" and cfg.clusterkv.enabled and shd.mesh is not None \
+            and sharded_long:
+        return _latent_decode_sharded(q_lat, qrope, cc, krc, kpos, qpos,
+                                      cfg, shd, scale)
+    logits = (jnp.einsum("bhr,bsr->bhs", q_lat, cc.astype(jnp.float32))
+              + jnp.einsum("bhd,bsd->bhs", qrope.astype(jnp.float32),
+                           krc.astype(jnp.float32))) * scale
+    ok = kpos[None, None, :] <= qpos
+    logits = jnp.where(ok, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bsr->bhr", w, cc.astype(jnp.float32))
+
+
+def _latent_decode_sharded(q_lat, qrope, cc, krc, kpos, qpos, cfg,
+                           shd: ShardCtx, scale):
+    """ClusterKV decode on the latent cache, seq sharded over 'data':
+    per-shard latent-block centroids -> top-c -> partial softmax -> psum."""
+    mesh = shd.mesh
+    axis = "data"
+    b, s, rank = cc.shape
+    hq = q_lat.shape[1]
+    shards = mesh.shape[axis]
+    s_local = s // shards
+    bk = min(cfg.clusterkv.block_k, s_local)
+    n_sel = min(cfg.clusterkv.decode_clusters, s_local // bk)
+
+    def local(ql, qr2, cl, krl, pl):
+        nkb = cl.shape[1] // bk
+        cb = cl.reshape(b, nkb, bk, rank)
+        krb = krl.reshape(b, nkb, bk, -1)
+        pb = pl.reshape(nkb, bk)
+        cent_c = cb.mean(axis=2)                          # (b, nkb, rank)
+        cent_k = krb.mean(axis=2)
+        sc = (jnp.einsum("bhr,bkr->bhk", ql, cent_c.astype(jnp.float32))
+              + jnp.einsum("bhd,bkd->bhk", qr2.astype(jnp.float32),
+                           cent_k.astype(jnp.float32)))
+        sc = sc.mean(axis=1)                              # (b, nkb) shared sel
+        _, idx = jax.lax.top_k(sc, n_sel)
+
+        def per_b(qlb, qrb, cbb, krbb, it):
+            csel = cbb[it].reshape(-1, rank).astype(jnp.float32)
+            ksel = krbb[it].reshape(-1, krbb.shape[-1]).astype(jnp.float32)
+            psel = pb.reshape(-1)[(it[:, None] * bk
+                                   + jnp.arange(bk)[None, :]).reshape(-1)]
+            lg = (qlb @ csel.T + qrb.astype(jnp.float32) @ ksel.T) * scale
+            lg = jnp.where(psel[None, :] <= qpos, lg, NEG_INF)
+            m = lg.max(axis=-1)
+            pexp = jnp.exp(lg - m[:, None])
+            return m, pexp.sum(-1), pexp @ csel
+
+        m, l, o = jax.vmap(per_b)(ql, qr2, cb, krb, idx)
+        mm = jax.lax.pmax(m, axis)
+        alpha = jnp.exp(m - mm)
+        ll = jax.lax.psum(l * alpha, axis)
+        oo = jax.lax.psum(o * alpha[..., None], axis)
+        return oo / jnp.maximum(ll, 1e-30)[..., None]
+
+    f = shard_map(local, mesh=mesh,
+                  in_specs=(P(), P(), P(None, axis, None),
+                            P(None, axis, None), P(axis)),
+                  out_specs=P(), check_vma=False)
+    return f(q_lat, qrope, cc, krc, kpos)
+
+
+def decode_step(p, cfg: ModelConfig, cache, tokens, shd: ShardCtx,
+                backend: str = "flash", sharded_long: bool = False):
+    h = _embed(p, cfg, {"tokens": tokens})
+    b = h.shape[0]
+    qpos = cache["pos"]
+    s_max = cache["c"].shape[2]
+    kpos = jnp.arange(s_max, dtype=jnp.int32)
+    qr_, kr_, dn, dr, dv = _dims(cfg)
+    nheads = cfg.n_heads
+
+    def body(x, xs):
+        lp, cc, krc = xs                      # cc (B,S,rank), krc (B,S,dr)
+        hn = pm.apply_rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        qn, qrope = _q_proj(lp["attn"], hn, cfg, qpos[None].astype(jnp.int32))
+        cn1, kr1 = _kv_latent(lp["attn"], hn, cfg,
+                              qpos[None].astype(jnp.int32))
+        cc = jax.lax.dynamic_update_slice(cc, cn1.astype(cc.dtype),
+                                          (0, qpos, 0))
+        krc = jax.lax.dynamic_update_slice(krc, kr1.astype(krc.dtype),
+                                           (0, qpos, 0))
+        o_lat = _absorbed_scores_attend(
+            lp["attn"], qn[:, :, 0], qrope[:, :, 0], cc, krc, kpos, qpos,
+            cfg, shd, backend, sharded_long)
+        wkv = lp["attn"]["kv_b"]["w"].reshape(kr_, nheads, dn + dv)
+        wv = wkv[..., dn:]
+        o = jnp.einsum("bhr,rhd->bhd", o_lat, wv.astype(jnp.float32))
+        a = pm.apply_linear(lp["attn"]["wo"],
+                            o.reshape(b, 1, -1).astype(cfg.dtype))
+        x = x + a
+        hn = pm.apply_rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + _mlp(lp["ffn"], hn)
+        return x, (cc, krc)
+
+    h, (cs, krs) = jax.lax.scan(body, h, (p["layers"], cache["c"],
+                                          cache["kr"]))
+    h = pm.apply_rmsnorm(p["ln_f"], h, cfg.norm_eps)
+    w = (p["embed"]["table"].T if cfg.tie_embeddings else p["head"]["w"])
+    logits = (h[:, 0] @ w.astype(cfg.dtype)).astype(jnp.float32)
+    return logits, {"c": cs, "kr": krs, "pos": cache["pos"] + 1}

@@ -1,0 +1,146 @@
+"""Model API: family dispatch + input specs for every (arch x shape) cell.
+
+Every family module exposes:
+  init_lm(cfg, key) -> (params, spec_tree)
+  loss_fn(params, cfg, batch, shd, backend) -> scalar
+  forward(params, cfg, batch, shd, backend) -> (hidden, aux)
+  init_cache(cfg, batch, max_seq) / cache_specs(cfg, long_context)
+  prefill(params, cfg, batch, shd, backend) -> (cache, logits)
+  decode_step(params, cfg, cache, tokens, shd, backend, sharded_long)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig
+from repro.models import encdec, hybrid, ssm_lm, transformer
+from repro.models import param as pm
+from repro.models.sharding import ShardCtx
+
+_FAMILY = {
+    "dense": transformer,
+    "vlm": transformer,
+    "moe": transformer,
+    "ssm": ssm_lm,
+    "hybrid": hybrid,
+    "encdec": encdec,
+}
+
+
+def module_for(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+def init(cfg: ModelConfig, key) -> Tuple[dict, dict]:
+    p, s = module_for(cfg).init_lm(cfg, key)
+    if cfg.param_dtype != "float32":
+        p = pm.cast_tree(p, jnp.dtype(cfg.param_dtype))
+    return p, s
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    """Spec tree without allocating params (init under eval_shape discards
+    array work; specs are data-independent)."""
+    out = {}
+
+    def capture(key):
+        p, s = module_for(cfg).init_lm(cfg, key)
+        out["specs"] = s
+        return p
+
+    jax.eval_shape(capture, jax.random.PRNGKey(0))
+    return out["specs"]
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    shapes = jax.eval_shape(lambda k: init(cfg, k)[0], jax.random.PRNGKey(0))
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# input specs per (family, shape)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape_name: str
+                ) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, P]]:
+    """ShapeDtypeStruct stand-ins + logical PartitionSpecs for every model
+    input of the given shape cell (weak-type-correct, no allocation)."""
+    seq, batch, kind = SHAPES[shape_name]
+    d = cfg.d_model
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    S = jax.ShapeDtypeStruct
+
+    if kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            specs = {"embeddings": S((batch, seq, d), bf16)}
+            parts = {"embeddings": P("dp", None, None)}
+        elif cfg.family == "encdec":
+            specs = {"frames": S((batch, seq, d), bf16),
+                     "tokens": S((batch, seq), i32)}
+            parts = {"frames": P("dp", None, None), "tokens": P("dp", None)}
+        else:
+            specs = {"tokens": S((batch, seq), i32)}
+            parts = {"tokens": P("dp", None)}
+        if kind == "train":
+            specs["labels"] = S((batch, seq), i32)
+            parts["labels"] = P("dp", None)
+        return specs, parts
+
+    # decode: one new token against a seq-long cache
+    if cfg.family == "vlm":
+        specs = {"tokens": S((batch, 1, d), bf16)}
+        parts = {"tokens": P("dp", None, None)}
+    else:
+        specs = {"tokens": S((batch, 1), i32)}
+        parts = {"tokens": P("dp", None)}
+    return specs, parts
+
+
+def cache_shapes(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStructs + logical specs of the decode cache for a cell."""
+    seq, batch, kind = SHAPES[shape_name]
+    assert kind == "decode"
+    mod = module_for(cfg)
+    shapes = jax.eval_shape(lambda: mod.init_cache(cfg, batch, seq))
+    long_ctx = shape_name.startswith("long")
+    specs = mod.cache_specs(cfg, long_context=long_ctx)
+    return shapes, specs
+
+
+def make_small_batch(cfg: ModelConfig, key, batch: int = 2, seq: int = 64,
+                     kind: str = "train") -> Dict[str, jax.Array]:
+    """Concrete small batch for CPU smoke tests."""
+    ks = jax.random.split(key, 3)
+    out: Dict[str, jax.Array] = {}
+    if cfg.family == "vlm":
+        out["embeddings"] = jax.random.normal(ks[0], (batch, seq, cfg.d_model),
+                                              jnp.float32).astype(jnp.bfloat16)
+    elif cfg.family == "encdec":
+        out["frames"] = jax.random.normal(ks[0], (batch, seq, cfg.d_model),
+                                          jnp.float32).astype(jnp.bfloat16)
+        out["tokens"] = jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab)
+    else:
+        out["tokens"] = jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab)
+    if kind == "train":
+        out["labels"] = jax.random.randint(ks[2], (batch, seq), 0, cfg.vocab)
+    return out
+
+
+def backend_for(cfg: ModelConfig, shape_name: str,
+                use_clusterkv: bool = False) -> str:
+    """Default attention backend per cell (paper-faithful baselines use
+    dense/flash; long_500k uses the arch's sub-quadratic path)."""
+    if shape_name.startswith("long"):
+        if cfg.long_context == "clusterkv":
+            return "clusterkv"
+        return "flash"      # swa / ssm are natively sub-quadratic
+    if use_clusterkv and cfg.clusterkv.enabled:
+        return "clusterkv"
+    return "flash"

@@ -1,0 +1,82 @@
+"""Raw-JAX parameter construction: every init returns (params, specs) trees
+with identical structure; specs carry logical axis tokens (models/sharding)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def linear(key, d_in: int, d_out: int, *, spec=(None, None), bias: bool = False,
+           dtype=jnp.float32, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out), dtype) * scale)}
+    s = {"w": P(*spec)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+        s["b"] = P(spec[-1])
+    return p, s
+
+
+def apply_linear(p, x: jax.Array, compute_dtype=None) -> jax.Array:
+    """Matmul in the activation dtype: master params (f32) are cast to
+    x.dtype (bf16 compute) so layer outputs keep the residual dtype."""
+    dtype = compute_dtype or x.dtype
+    y = x.astype(dtype) @ p["w"].astype(dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def embedding(key, vocab: int, d: int, *, spec=("tp", "fsdp"), dtype=jnp.float32):
+    p = {"table": jax.random.normal(key, (vocab, d), dtype) * (d ** -0.5)}
+    s = {"table": P(*spec)}
+    return p, s
+
+
+def rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": P(None)}
+
+
+def apply_rmsnorm(p, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def stacked(init_fn, n: int, key) -> Tuple[dict, dict]:
+    """Stack ``n`` independent layer inits along a new leading axis.
+
+    ``init_fn(key) -> (params, specs)``; returns stacked params with the
+    leading layer axis unsharded in specs.
+    """
+    keys = jax.random.split(key, n)
+    p0, s0 = init_fn(keys[0])
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    specs = jax.tree.map(lambda s: P(*((None,) + tuple(s))), s0,
+                         is_leaf=lambda x: isinstance(x, P))
+    return params, specs
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def cast_tree(params, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype)
+                        if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+
+
+def maybe_remat(body, cfg):
+    """Wrap a scan body with jax.checkpoint per cfg.remat/remat_policy."""
+    import jax
+    if not cfg.remat:
+        return body
+    if getattr(cfg, "remat_policy", "full") == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(body, policy=pol)
+    return jax.checkpoint(body)

@@ -1,0 +1,150 @@
+"""Logical-axis sharding: models declare PartitionSpecs over logical tokens,
+the launcher resolves them onto the physical mesh.
+
+Tokens:
+  "dp"    batch axis            -> ("pod", "data") on multi-pod, ("data",) else
+  "fsdp"  param ZeRO-3 axis     -> "data"
+  "tp"    tensor-parallel axis  -> "model"
+  "seq"   sequence shards       -> "data" (decode KV) — see launch/mesh.py
+Specs on a mesh without the token's axis resolve to replicated.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+TOKEN_AXES = ("dp", "fsdp", "tp", "ep", "seq")
+
+# Layouts: how logical tokens map onto the (pod, data, model) mesh.
+#   2d       baseline: DP/FSDP over 'data', TP over 'model'
+#   dp_all   no tensor parallelism: batch + ZeRO over BOTH axes (small
+#            models — kills the per-layer TP all-reduces)
+#   serve_tp serving: weights resident TP-only (no per-step ZeRO gathers)
+LAYOUTS = {
+    "2d": {"dp": ("pod", "data"), "fsdp": ("data",), "tp": "model",
+           "ep": "model", "seq": "data"},
+    "dp_all": {"dp": ("pod", "data", "model"),
+               "fsdp": ("data", "model"), "tp": None, "ep": None,
+               "seq": "data"},
+    # moe_dp: experts stay resident sharded over 'model' (EP) while
+    # everything else is pure DP/ZeRO over both axes — kills the
+    # attention-TP all-reduces AND the expert-weight gathers
+    "moe_dp": {"dp": ("pod", "data", "model"),
+               "fsdp": ("data", "model"), "tp": None, "ep": "model",
+               "seq": "data"},
+    "serve_tp": {"dp": ("pod", "data"), "fsdp": None, "tp": "model",
+                 "ep": "model", "seq": "data"},
+}
+_current_layout = "2d"
+
+
+def set_layout(name: str) -> None:
+    global _current_layout
+    if name not in LAYOUTS:
+        raise KeyError(f"unknown layout {name!r}; known: {list(LAYOUTS)}")
+    _current_layout = name
+
+
+def get_layout() -> str:
+    return _current_layout
+
+
+def _resolve_token(token, mesh_axes) -> Any:
+    if token is None:
+        return None
+    if isinstance(token, (tuple, list)):
+        out: Tuple[str, ...] = ()
+        for t in token:
+            r = _resolve_token(t, mesh_axes)
+            if r is not None:
+                out += r if isinstance(r, tuple) else (r,)
+        return out or None
+    if token in TOKEN_AXES:
+        mapped = LAYOUTS[_current_layout][token]
+        if isinstance(mapped, tuple):
+            avail = tuple(a for a in mapped if a in mesh_axes)
+            return avail or None
+        return mapped if mapped in mesh_axes else None
+    # already a physical axis name
+    return token if token in mesh_axes else None
+
+
+def tp_axis(mesh: Mesh):
+    """Physical tensor-parallel axis under the current layout (or None)."""
+    return _resolve_token("tp", mesh.axis_names)
+
+
+def ep_axis(mesh: Mesh):
+    """Physical expert-parallel axis under the current layout (or None)."""
+    return _resolve_token("ep", mesh.axis_names)
+
+
+def resolve_spec(spec: P, mesh: Mesh) -> P:
+    return P(*(_resolve_token(t, mesh.axis_names) for t in spec))
+
+
+def resolve_tree(tree, mesh: Mesh):
+    """Map a pytree of logical PartitionSpecs to NamedShardings on mesh."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, resolve_spec(s, mesh)),
+        tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def spec_tree(tree, mesh: Mesh):
+    """Same, but keep PartitionSpecs (for in/out_shardings of jit)."""
+    return jax.tree.map(
+        lambda s: resolve_spec(s, mesh),
+        tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def fit_spec(dims, spec: P, mesh: Mesh) -> P:
+    """Make a resolved spec valid for a jit argument of shape ``dims``:
+    drop mesh axes from dims they don't divide evenly, and drop duplicate
+    axis uses (first dim wins). Intermediates may still be padded via
+    with_sharding_constraint; argument shardings must be exact."""
+    used: set = set()
+    new = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(dims):
+            new.append(None if i >= len(dims) else entry)
+            continue
+        axes = [a for a in (entry if isinstance(entry, (tuple, list))
+                            else (entry,)) if a not in used]
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= mesh.shape[a]
+            if dims[i] % prod == 0:
+                break
+            axes.pop()
+        used.update(axes)
+        new.append(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*new)
+
+
+def shardings_for(shapes_tree, logical_specs_tree, mesh: Mesh):
+    """Resolve logical tokens -> NamedShardings fitted to the shapes."""
+    specs = jax.tree.map(lambda s: resolve_spec(s, mesh), logical_specs_tree,
+                         is_leaf=lambda x: isinstance(x, P))
+    return jax.tree.map(
+        lambda sh, sp: NamedSharding(mesh, fit_spec(sh.shape, sp, mesh)),
+        shapes_tree, specs)
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """Threaded through model code for activation sharding constraints."""
+    mesh: Optional[Mesh] = None
+
+    def cst(self, x: jax.Array, *tokens) -> jax.Array:
+        if self.mesh is None or self.mesh.axis_names == ():
+            return x
+        spec = resolve_spec(P(*tokens), self.mesh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+NO_SHARD = ShardCtx(None)

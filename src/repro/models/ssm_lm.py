@@ -1,0 +1,106 @@
+"""falcon-mamba-style attention-free LM: a stack of mamba1 blocks."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba
+from repro.models import param as pm
+from repro.models.sharding import ShardCtx
+from repro.models.transformer import ce_loss
+
+
+def _init_layer(key, cfg: ModelConfig):
+    p, s = {}, {}
+    p["ln"], s["ln"] = pm.rmsnorm(cfg.d_model)
+    p["mixer"], s["mixer"] = mamba.init_mamba1(key, cfg)
+    return p, s
+
+
+def init_lm(cfg: ModelConfig, key) -> Tuple[dict, dict]:
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["embed"], s["embed"] = pm.embedding(ks[0], cfg.vocab, cfg.d_model)
+    p["layers"], s["layers"] = pm.stacked(
+        lambda k: _init_layer(k, cfg), cfg.n_layers, ks[1])
+    p["ln_f"], s["ln_f"] = pm.rmsnorm(cfg.d_model)
+    p["head"], s["head"] = pm.linear(ks[2], cfg.d_model, cfg.vocab,
+                                     spec=("fsdp", "tp"))
+    return p, s
+
+
+def forward(p, cfg: ModelConfig, batch, shd: ShardCtx,
+            backend: str = "flash"):
+    h = p["embed"]["table"][batch["tokens"]].astype(cfg.dtype)
+    h = shd.cst(h, "dp", None, None)
+
+    def body(x, lp):
+        y, _, _ = mamba.mamba1_forward(
+            lp["mixer"], pm.apply_rmsnorm(lp["ln"], x, cfg.norm_eps), cfg, shd)
+        return x + y, None
+
+    body = pm.maybe_remat(body, cfg)
+    h, _ = jax.lax.scan(body, h, p["layers"])
+    return pm.apply_rmsnorm(p["ln_f"], h, cfg.norm_eps), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(p, cfg: ModelConfig, batch, shd: ShardCtx,
+            backend: str = "flash") -> jax.Array:
+    h, _ = forward(p, cfg, batch, shd, backend)
+    return ce_loss(h, p["head"]["w"].astype(cfg.dtype), batch["labels"],
+                   cfg.loss_chunk)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int,
+               dtype=jnp.float32) -> Dict[str, Any]:
+    st = mamba.mamba1_state(cfg, batch_size, dtype)
+    st["pos"] = jnp.zeros((), jnp.int32)
+    return st
+
+
+def cache_specs(cfg: ModelConfig, long_context: bool = False):
+    return {"h": P(None, "dp", "tp", None),
+            "conv": P(None, "dp", None, "tp"),
+            "pos": P()}
+
+
+def prefill(p, cfg: ModelConfig, batch, shd: ShardCtx,
+            backend: str = "flash"):
+    h = p["embed"]["table"][batch["tokens"]].astype(cfg.dtype)
+    h = shd.cst(h, "dp", None, None)
+    s = h.shape[1]
+
+    def body(x, lp):
+        y, h_fin, conv_buf = mamba.mamba1_forward(
+            lp["mixer"], pm.apply_rmsnorm(lp["ln"], x, cfg.norm_eps), cfg, shd)
+        return x + y, (h_fin, conv_buf)
+
+    body = pm.maybe_remat(body, cfg)
+    h, (hs, convs) = jax.lax.scan(body, h, p["layers"])
+    h = pm.apply_rmsnorm(p["ln_f"], h, cfg.norm_eps)
+    logits = (h[:, -1] @ p["head"]["w"].astype(cfg.dtype)).astype(jnp.float32)
+    cache = {"h": hs, "conv": convs.astype(jnp.float32),
+             "pos": jnp.asarray(s, jnp.int32)}
+    return cache, logits
+
+
+def decode_step(p, cfg: ModelConfig, cache, tokens, shd: ShardCtx,
+                backend: str = "flash", sharded_long: bool = False):
+    h = p["embed"]["table"][tokens].astype(cfg.dtype)
+
+    def body(x, xs):
+        lp, hst, conv_buf = xs
+        y, hst, conv_buf = mamba.mamba1_step(
+            lp["mixer"], pm.apply_rmsnorm(lp["ln"], x, cfg.norm_eps),
+            hst, conv_buf, cfg)
+        return x + y, (hst, conv_buf)
+
+    h, (hs, convs) = jax.lax.scan(body, h, (p["layers"], cache["h"],
+                                            cache["conv"]))
+    h = pm.apply_rmsnorm(p["ln_f"], h, cfg.norm_eps)
+    logits = (h[:, 0] @ p["head"]["w"].astype(cfg.dtype)).astype(jnp.float32)
+    return logits, {"h": hs, "conv": convs, "pos": cache["pos"] + 1}

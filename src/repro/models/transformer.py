@@ -1,0 +1,343 @@
+"""Decoder-only transformer LM covering the dense / vlm / moe families
+(GQA, optional QKV bias, optional SWA, optional MLA via models.mla,
+optional MoE FFN via models.moe, optional cluster-sparse attention).
+
+All layers are stacked and applied with lax.scan; remat wraps the layer
+body. Params are (tree, spec-tree) pairs from models.param.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import mla as mla_mod
+from repro.models import param as pm
+from repro.models.sharding import ShardCtx, NO_SHARD
+
+AUX_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn(key, cfg: ModelConfig):
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    pq, sq = pm.linear(ks[0], d, hq * dh, spec=("fsdp", "tp"), bias=cfg.qkv_bias)
+    pk, sk = pm.linear(ks[1], d, hkv * dh, spec=("fsdp", "tp"), bias=cfg.qkv_bias)
+    pv, sv = pm.linear(ks[2], d, hkv * dh, spec=("fsdp", "tp"), bias=cfg.qkv_bias)
+    po, so = pm.linear(ks[3], hq * dh, d, spec=("tp", "fsdp"))
+    return ({"wq": pq, "wk": pk, "wv": pv, "wo": po},
+            {"wq": sq, "wk": sk, "wv": sv, "wo": so})
+
+
+def _init_mlp(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    pg, sg = pm.linear(ks[0], d, f, spec=("fsdp", "tp"))
+    pu, su = pm.linear(ks[1], d, f, spec=("fsdp", "tp"))
+    pd, sd = pm.linear(ks[2], f, d, spec=("tp", "fsdp"))
+    return ({"wg": pg, "wu": pu, "wd": pd}, {"wg": sg, "wu": su, "wd": sd})
+
+
+def _init_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = pm.rmsnorm(cfg.d_model)
+    p["ln2"], s["ln2"] = pm.rmsnorm(cfg.d_model)
+    if cfg.mla is not None:
+        p["attn"], s["attn"] = mla_mod.init_mla(ks[0], cfg)
+    else:
+        p["attn"], s["attn"] = _init_attn(ks[0], cfg)
+    if cfg.moe is not None:
+        p["ffn"], s["ffn"] = moe_mod.init_moe(ks[1], cfg)
+    else:
+        p["ffn"], s["ffn"] = _init_mlp(ks[1], cfg)
+    return p, s
+
+
+def init_lm(cfg: ModelConfig, key) -> Tuple[dict, dict]:
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    if not cfg.embedding_inputs:
+        p["embed"], s["embed"] = pm.embedding(ks[0], cfg.vocab, cfg.d_model)
+    p["layers"], s["layers"] = pm.stacked(
+        lambda k: _init_layer(k, cfg), cfg.n_layers, ks[1])
+    p["ln_f"], s["ln_f"] = pm.rmsnorm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["head"], s["head"] = pm.linear(ks[2], cfg.d_model, cfg.vocab,
+                                         spec=("fsdp", "tp"))
+    return p, s
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(lp, x, cfg: ModelConfig, pos, shd: ShardCtx):
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = pm.apply_linear(lp["wq"], x).reshape(b, s, hq, dh)
+    k = pm.apply_linear(lp["wk"], x).reshape(b, s, hkv, dh)
+    v = pm.apply_linear(lp["wv"], x).reshape(b, s, hkv, dh)
+    rp = pos if pos.ndim == 3 else pos[None, None, :]   # (B,1,S) or (1,1,S)
+    q = attn.rope(q.transpose(0, 2, 1, 3), rp, cfg.rope_theta)
+    k = attn.rope(k.transpose(0, 2, 1, 3), rp, cfg.rope_theta)
+    v = v.transpose(0, 2, 1, 3)
+    q = shd.cst(q, "dp", "tp", None, None)
+    k = shd.cst(k, "dp", "tp", None, None)
+    v = shd.cst(v, "dp", "tp", None, None)
+    return q, k, v
+
+
+def _attend(q, k, v, pos, cfg: ModelConfig, backend: str):
+    if backend == "clusterkv" and cfg.clusterkv.enabled:
+        return attn.clusterkv_attention(q, k, v, pos, pos, cfg.clusterkv,
+                                        causal=True)
+    if backend == "dense":
+        return attn.dense_attention(q, k, v, pos, pos, causal=True,
+                                    window=cfg.swa_window)
+    return attn.flash_attention(q, k, v, pos, pos, causal=True,
+                                window=cfg.swa_window)
+
+
+def _apply_mlp(lp, x):
+    h = jax.nn.silu(pm.apply_linear(lp["wg"], x)) * pm.apply_linear(lp["wu"], x)
+    return pm.apply_linear(lp["wd"], h)
+
+
+def _layer(lp, x, pos, cfg: ModelConfig, shd: ShardCtx, backend: str):
+    b, s, d = x.shape
+    h = pm.apply_rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    if cfg.mla is not None:
+        a = mla_mod.mla_attention(lp["attn"], h, pos, cfg, shd, backend)
+    else:
+        q, k, v = _project_qkv(lp["attn"], h, cfg, pos, shd)
+        o = _attend(q, k, v, pos, cfg, backend)
+        a = pm.apply_linear(lp["attn"]["wo"], o.transpose(0, 2, 1, 3)
+                            .reshape(b, s, -1))
+    x = shd.cst(x + a, "dp", None, None)
+    h = pm.apply_rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    if cfg.moe is not None:
+        f, aux = moe_mod.moe_ffn(lp["ffn"], h, cfg, shd)
+    else:
+        f, aux = _apply_mlp(lp["ffn"], h), jnp.zeros((), jnp.float32)
+    x = shd.cst(x + f, "dp", None, None)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(p, cfg: ModelConfig, batch: Dict[str, jax.Array],
+                 shd: ShardCtx) -> jax.Array:
+    if cfg.embedding_inputs:
+        h = batch["embeddings"].astype(cfg.dtype)
+    else:
+        h = p["embed"]["table"][batch["tokens"]].astype(cfg.dtype)
+    return shd.cst(h, "dp", None, None)
+
+
+def forward(p, cfg: ModelConfig, batch: Dict[str, jax.Array], shd: ShardCtx,
+            backend: str = "flash") -> Tuple[jax.Array, jax.Array]:
+    """Returns (final hidden states (B,S,d), aux loss)."""
+    h = embed_tokens(p, cfg, batch, shd)
+    s = h.shape[1]
+    pos = jnp.arange(s, dtype=jnp.int32)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = _layer(lp, x, pos, cfg, shd, backend)
+        return (x, aux + a), None
+
+    body = pm.maybe_remat(body, cfg)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                               p["layers"])
+    return pm.apply_rmsnorm(p["ln_f"], h, cfg.norm_eps), aux
+
+
+def lm_head_weight(p, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return p["embed"]["table"].T
+    return p["head"]["w"]
+
+
+def ce_loss(h: jax.Array, w: jax.Array, labels: jax.Array,
+            chunk: int = 0) -> jax.Array:
+    """Chunked cross-entropy: logits for one token-chunk at a time, so the
+    (tokens x vocab) array is never materialized (vocab stays TP-sharded)."""
+    b, s, d = h.shape
+    hf = h.reshape(b * s, d)
+    lf = labels.reshape(b * s)
+    t = b * s
+    if chunk and chunk < t and t % chunk == 0:
+        def step(_, xs):
+            hc, lc = xs
+            logits = (hc @ w).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lc[:, None], axis=-1)[:, 0]
+            return None, jnp.sum(lse - gold)
+        _, partial = jax.lax.scan(
+            step, None, (hf.reshape(-1, chunk, d), lf.reshape(-1, chunk)))
+        return partial.sum() / t
+    logits = (hf @ w).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lf[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def loss_fn(p, cfg: ModelConfig, batch, shd: ShardCtx,
+            backend: str = "flash") -> jax.Array:
+    h, aux = forward(p, cfg, batch, shd, backend)
+    w = lm_head_weight(p, cfg).astype(cfg.dtype)
+    if not cfg.tie_embeddings:
+        # gather the (fsdp-sharded) head weight ONCE, keeping only the vocab
+        # dim sharded — otherwise every CE chunk all-reduces a full
+        # (chunk x vocab-shard) logits block across the data axis
+        # (tied heads skip this: the transposed-table gather would conflict
+        # with the embedding lookup's sharding)
+        w = shd.cst(w, None, "tp")
+    return ce_loss(h, w, batch["labels"], cfg.loss_chunk) + AUX_COEF * aux
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int,
+               dtype=None) -> Dict[str, Any]:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    if cfg.mla is not None:
+        return mla_mod.init_cache(cfg, batch_size, max_seq, dtype)
+    l, hkv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((l, batch_size, hkv, max_seq, dh), dtype),
+        "v": jnp.zeros((l, batch_size, hkv, max_seq, dh), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, long_context: bool = False):
+    """Logical PartitionSpecs for the cache (seq sharded for long ctx)."""
+    if cfg.mla is not None:
+        return mla_mod.cache_specs(cfg, long_context)
+    if long_context:
+        kv = P(None, "dp", None, "seq", None)
+    else:
+        kv = P(None, "dp", "tp", None, None)
+    return {"k": kv, "v": kv, "pos": P()}
+
+
+def prefill(p, cfg: ModelConfig, batch, shd: ShardCtx,
+            backend: str = "flash") -> Tuple[Dict, jax.Array]:
+    """Forward over the prompt, returning a filled cache + last logits."""
+    if cfg.mla is not None:
+        return mla_mod.prefill(p, cfg, batch, shd, backend)
+    h = embed_tokens(p, cfg, batch, shd)
+    b, s, _ = h.shape
+    pos = jnp.arange(s, dtype=jnp.int32)
+
+    def body(x, lp):
+        hn = pm.apply_rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = _project_qkv(lp["attn"], hn, cfg, pos, shd)
+        o = _attend(q, k, v, pos, cfg, backend)
+        a = pm.apply_linear(lp["attn"]["wo"],
+                            o.transpose(0, 2, 1, 3).reshape(b, s, -1))
+        x = x + a
+        hn = pm.apply_rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            f, _ = moe_mod.moe_ffn(lp["ffn"], hn, cfg, shd)
+        else:
+            f = _apply_mlp(lp["ffn"], hn)
+        return x + f, (k.astype(cfg.dtype), v.astype(cfg.dtype))
+
+    body = pm.maybe_remat(body, cfg)
+    h, (ks, vs) = jax.lax.scan(body, h, p["layers"])
+    h = pm.apply_rmsnorm(p["ln_f"], h, cfg.norm_eps)
+    logits = (h[:, -1] @ lm_head_weight(p, cfg).astype(cfg.dtype)
+              ).astype(jnp.float32)
+    cache = {"k": ks, "v": vs, "pos": jnp.asarray(s, jnp.int32)}
+    return cache, logits
+
+
+def decode_step(p, cfg: ModelConfig, cache, tokens, shd: ShardCtx,
+                backend: str = "flash", sharded_long: bool = False
+                ) -> Tuple[jax.Array, Dict]:
+    """One decode step. tokens (B, 1); cache from init_cache/prefill.
+
+    cache["pos"] may be a scalar (uniform decode) or a (B,) vector of
+    per-sequence positions (continuous batching: every slot writes and
+    masks at its own position)."""
+    if cfg.mla is not None:
+        return mla_mod.decode_step(p, cfg, cache, tokens, shd, backend,
+                                   sharded_long)
+    if cfg.embedding_inputs:
+        # vlm decode consumes token embeddings directly (text continuation)
+        h = tokens.astype(cfg.dtype) if tokens.ndim == 3 else \
+            p["embed"]["table"][tokens].astype(cfg.dtype)
+    else:
+        h = p["embed"]["table"][tokens].astype(cfg.dtype)
+    b = h.shape[0]
+    qpos = cache["pos"]
+    per_slot = qpos.ndim == 1
+    s_max = cache["k"].shape[3]
+    kpos = jnp.arange(s_max, dtype=jnp.int32)
+    # rope positions: (S=1,) uniform or (B, 1, S=1) per-slot broadcast
+    rope_pos = (qpos[:, None, None] if per_slot
+                else qpos[None]).astype(jnp.int32)
+    # attention mask positions: scalar or (B, 1, 1, 1)
+    mask_qpos = qpos[:, None, None, None] if per_slot else qpos
+
+    def body(x, xs):
+        lp, kc, vc = xs                       # kc/vc (B,Hkv,S,dh)
+        hn = pm.apply_rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = _project_qkv(lp["attn"], hn, cfg, rope_pos, shd)
+        if per_slot:
+            bi = jnp.arange(b)
+            kc = kc.at[bi, :, qpos].set(k[:, :, 0].astype(kc.dtype))
+            vc = vc.at[bi, :, qpos].set(v[:, :, 0].astype(vc.dtype))
+        else:
+            kc = jax.lax.dynamic_update_slice(
+                kc, k.astype(kc.dtype), (0, 0, qpos, 0))
+            vc = jax.lax.dynamic_update_slice(
+                vc, v.astype(vc.dtype), (0, 0, qpos, 0))
+        q1 = q[:, :, 0]                        # (B,Hq,dh)
+        if backend == "clusterkv" and cfg.clusterkv.enabled and not per_slot:
+            if sharded_long and shd.mesh is not None:
+                o = attn.clusterkv_decode_sharded(
+                    q1, kc, vc, kpos, qpos, cfg.clusterkv, shd.mesh)
+            else:
+                o = attn.clusterkv_decode(q1, kc, vc, kpos, qpos,
+                                          cfg.clusterkv)
+        else:
+            o = attn.decode_attention(q1, kc, vc, kpos, mask_qpos,
+                                      window=cfg.swa_window)
+        a = pm.apply_linear(lp["attn"]["wo"], o.reshape(b, 1, -1))
+        x = x + a
+        hn = pm.apply_rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            f, _ = moe_mod.moe_ffn(lp["ffn"], hn, cfg, shd)
+        else:
+            f = _apply_mlp(lp["ffn"], hn)
+        return x + f, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(body, h, (p["layers"], cache["k"], cache["v"]))
+    h = pm.apply_rmsnorm(p["ln_f"], h, cfg.norm_eps)
+    logits = (h[:, 0] @ lm_head_weight(p, cfg).astype(cfg.dtype)
+              ).astype(jnp.float32)
+    new_cache = {"k": ks, "v": vs, "pos": cache["pos"] + 1}
+    return logits, new_cache

@@ -1,0 +1,184 @@
+"""Optimizers (raw JAX): AdamW and Adafactor, with global-norm clipping and
+warmup-cosine schedule. All states live in the same sharding as their params
+(spec trees derived from the param spec tree), so ZeRO-3 falls out of the
+param FSDP specs.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# schedule
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  min_frac: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip: float = 1.0
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def state_specs(self, param_specs):
+        return {"m": param_specs, "v": param_specs, "step": P()}
+
+    def update(self, grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, self.clip)
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        lr = self.lr(step)
+        bc1 = 1 - self.b1 ** t
+        bc2 = 1 - self.b2 ** t
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * g32
+            v = self.b2 * v + (1 - self.b2) * g32 * g32
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; memory ~0 extra for matrices)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Adafactor:
+    lr: Callable
+    decay: float = 0.99
+    eps: float = 1e-30
+    clip: float = 1.0
+    rms_clip: float = 1.0
+    weight_decay: float = 0.0
+
+    def _factored(self, p) -> bool:
+        return p.ndim >= 2
+
+    def init(self, params):
+        def zeros(p):
+            if self._factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + (p.shape[-1],),
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(zeros, params,
+                                  is_leaf=lambda x: isinstance(x, jax.Array)
+                                  or hasattr(x, "shape")),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def state_specs(self, param_specs):
+        def spec(s):
+            t = tuple(s)
+            return {"vr": P(*t[:-1]),
+                    "vc": P(*(t[:-2] + (t[-1],))) if len(t) >= 2 else P()}
+        def one(s):
+            t = tuple(s)
+            if len(t) >= 2:
+                return spec(s)
+            return {"v": P(*t)}
+        return {"v": jax.tree.map(one, param_specs,
+                                  is_leaf=lambda x: isinstance(x, P)),
+                "step": P()}
+
+    def update(self, grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, self.clip)
+        step = state["step"] + 1
+        lr = self.lr(step)
+        d = self.decay
+
+        def upd(g, v, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + self.eps
+            if self._factored(p):
+                vr = d * v["vr"] + (1 - d) * g2.mean(axis=-1)
+                vc = d * v["vc"] + (1 - d) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1)[..., None, None],
+                                       self.eps))
+                u = g32 * jax.lax.rsqrt(denom + self.eps)
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": d * v["v"] + (1 - d) * g2}
+                u = g32 * jax.lax.rsqrt(nv["v"] + self.eps)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / self.rms_clip)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), nv
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        flat_p = jax.tree.leaves(params)
+        new_p, new_v = [], []
+        for g, v, p in zip(flat_g, flat_v, flat_p):
+            np_, nv_ = upd(g, v, p)
+            new_p.append(np_)
+            new_v.append(nv_)
+        return (jax.tree.unflatten(tdef, new_p),
+                {"v": jax.tree.unflatten(tdef, new_v), "step": step}, gnorm)
+
+
+def make_optimizer(name: str, lr: float = 3e-4, warmup: int = 100,
+                   total: int = 10_000):
+    sched = warmup_cosine(lr, warmup, total)
+    if name == "adamw":
+        return AdamW(lr=sched)
+    if name == "adafactor":
+        return Adafactor(lr=sched)
+    raise ValueError(name)

@@ -1,0 +1,130 @@
+"""Train/serve step factories.
+
+make_train_step builds the full training step (fwd + bwd + clip + optimizer
+update + metrics) for any arch config, with:
+  - remat (per-layer, inside the model's scan),
+  - microbatch gradient accumulation (lax.scan, donated f32 accumulator;
+    per-microbatch grads cast to bf16 before accumulation with an f32
+    error-feedback buffer when compress_grads is on),
+  - chunked cross-entropy (inside model loss),
+  - logical->physical sharding resolution from the param spec tree.
+
+make_prefill_step / make_decode_step build the serving steps.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import model_api
+from repro.models import param as pm
+from repro.models.sharding import NO_SHARD, ShardCtx, resolve_spec, spec_tree
+from repro.optim.optimizers import make_optimizer
+
+
+@dataclass
+class StepArtifacts:
+    fn: Callable
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+
+
+def make_train_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                    backend: str = "flash", microbatch: int = 1,
+                    compress_grads: bool = False,
+                    optimizer=None):
+    """Returns (step_fn, optimizer). step_fn(params, opt_state, batch) ->
+    (params, opt_state, metrics)."""
+    mod = model_api.module_for(cfg)
+    shd = ShardCtx(mesh)
+    opt = optimizer or make_optimizer(cfg.optimizer)
+
+    def loss_of(p, batch):
+        return mod.loss_fn(p, cfg, batch, shd, backend)
+
+    def step(params, opt_state, batch):
+        if microbatch > 1:
+            def slice_mb(x, i):
+                b = x.shape[0] // microbatch
+                return jax.lax.dynamic_slice_in_dim(x, i * b, b, axis=0)
+
+            def acc_body(carry, i):
+                gacc, lacc, err = carry
+                mb = jax.tree.map(lambda x: slice_mb(x, i), batch)
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                if compress_grads:
+                    # bf16-compressed accumulation with f32 error feedback
+                    g32 = jax.tree.map(lambda a, e: a.astype(jnp.float32) + e,
+                                       g, err)
+                    gq = jax.tree.map(lambda a: a.astype(jnp.bfloat16), g32)
+                    err = jax.tree.map(
+                        lambda a, q: a - q.astype(jnp.float32), g32, gq)
+                    gacc = jax.tree.map(
+                        lambda acc, q: acc + q.astype(jnp.float32), gacc, gq)
+                else:
+                    gacc = jax.tree.map(
+                        lambda acc, a: acc + a.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + l, err), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            errs = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params) \
+                if compress_grads else jax.tree.map(lambda p: jnp.zeros((0,)),
+                                                    params)
+            (grads, loss, _), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.zeros((), jnp.float32), errs),
+                jnp.arange(microbatch))
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = loss / microbatch
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+
+        new_params, new_state, gnorm = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm}
+        return new_params, new_state, metrics
+
+    return step, opt
+
+
+def train_shardings(cfg: ModelConfig, mesh: Mesh, opt, batch_parts):
+    """(in_shardings, out_shardings) PartitionSpec trees for jit lowering."""
+    pspecs = model_api.param_specs(cfg)
+    pspecs_r = spec_tree(pspecs, mesh)
+    ospecs = opt.state_specs(pspecs)
+    ospecs_r = spec_tree(ospecs, mesh)
+    bspecs_r = spec_tree(batch_parts, mesh)
+    metrics = {"loss": P(), "grad_norm": P()}
+    return ((pspecs_r, ospecs_r, bspecs_r),
+            (pspecs_r, ospecs_r, spec_tree(metrics, mesh)))
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                      backend: str = "flash"):
+    mod = model_api.module_for(cfg)
+    shd = ShardCtx(mesh)
+
+    def step(params, batch):
+        return mod.prefill(params, cfg, batch, shd, backend)
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                     backend: str = "flash", sharded_long: bool = False):
+    mod = model_api.module_for(cfg)
+    shd = ShardCtx(mesh)
+
+    def step(params, cache, batch):
+        tokens = batch["tokens"] if isinstance(batch, dict) else batch
+        return mod.decode_step(params, cfg, cache, tokens, shd, backend,
+                               sharded_long)
+
+    return step

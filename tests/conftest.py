@@ -1,0 +1,10 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS device-count override here — smoke tests and benches
+# must see 1 device. Mesh-dependent tests run in subprocesses (test_dist.py).
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,128 @@
+"""Attention backend invariants (property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as attn
+
+
+def mk(seed, B=1, Hq=4, Hkv=2, S=64, dh=8, dv=None):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, dv or dh), jnp.float32)
+    return q, k, v
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), s=st.sampled_from([16, 48, 64, 100]),
+       block=st.sampled_from([8, 16, 512]), causal=st.booleans())
+def test_flash_matches_dense(seed, s, block, causal):
+    q, k, v = mk(seed, S=s)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    a = attn.dense_attention(q, k, v, pos, pos, causal=causal)
+    b = attn.flash_attention(q, k, v, pos, pos, causal=causal, block=block)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                               atol=2e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000), window=st.sampled_from([4, 16, 32]))
+def test_swa_window_masks_far_past(seed, window):
+    """Poisoning values beyond the window never changes the output."""
+    s = 64
+    q, k, v = mk(seed, S=s)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    out1 = attn.flash_attention(q, k, v, pos, pos, causal=True,
+                                window=window)
+    v2 = v.at[:, :, :s - window - 1].add(1e3)
+    k2 = k.at[:, :, :s - window - 1].add(1e3)
+    out2 = attn.flash_attention(q, k2, v2, pos, pos, causal=True,
+                                window=window)
+    # the last row attends only within the window -> unchanged
+    np.testing.assert_allclose(np.asarray(out1[:, :, -1]),
+                               np.asarray(out2[:, :, -1]), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_decode_matches_dense_last_row():
+    s = 64
+    q, k, v = mk(0, S=s)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    full = attn.dense_attention(q, k, v, pos, pos, causal=True)
+    dec = attn.decode_attention(q[:, :, -1], k, v, pos, s - 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, :, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_ignores_unfilled_slots():
+    """Slots with pos > qpos (ring-buffer holes) carry zero weight."""
+    s = 64
+    q, k, v = mk(1, S=s)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    qpos = 40
+    o1 = attn.decode_attention(q[:, :, -1], k, v, pos, qpos)
+    v2 = v.at[:, :, qpos + 1:].set(1e4)
+    o2 = attn.decode_attention(q[:, :, -1], k, v2, pos, qpos)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-4)
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE scores depend only on relative positions."""
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 1, 8, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 8, 16))
+    def scores(offset):
+        pos = jnp.arange(8, dtype=jnp.int32) + offset
+        qr = attn.rope(q, pos[None, None, :])
+        kr = attn.rope(k, pos[None, None, :])
+        return jnp.einsum("bhsd,bhtd->bhst", qr, kr)
+    np.testing.assert_allclose(np.asarray(scores(0)),
+                               np.asarray(scores(100)), rtol=2e-3, atol=2e-3)
+
+
+def test_gqa_grouping_matches_repeated_kv():
+    """GQA with Hkv<Hq == MHA with kv heads explicitly repeated."""
+    q, k, v = mk(5, Hq=6, Hkv=2, S=32)
+    pos = jnp.arange(32, dtype=jnp.int32)
+    a = attn.flash_attention(q, k, v, pos, pos)
+    k_rep = jnp.repeat(k, 3, axis=1)
+    v_rep = jnp.repeat(v, 3, axis=1)
+    b = attn.flash_attention(q, k_rep, v_rep, pos, pos)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_mla_absorbed_decode_equals_expanded():
+    """Absorbed-form MLA decode == expanded-KV attention on the last row."""
+    from repro.configs import reduced_config
+    from repro.models import mla, model_api
+    from repro.models.sharding import NO_SHARD
+    cfg = reduced_config("minicpm3-4b").with_(dtype="float32", remat=False)
+    key = jax.random.PRNGKey(7)
+    params, _ = model_api.init(cfg, key)
+    batch = model_api.make_small_batch(cfg, key, 2, 33, kind="prefill")
+    # prefill of S, then compare against prefill(S-1)+decode — covered in
+    # test_models; here check the absorbed math directly on one layer
+    lp = jax.tree.map(lambda a: a[0], params["layers"])
+    x = jax.random.normal(jax.random.fold_in(key, 2), (2, 17, cfg.d_model))
+    pos = jnp.arange(17, dtype=jnp.int32)
+    full = mla.mla_attention(lp["attn"], x, pos, cfg, NO_SHARD, "dense")
+    # absorbed: build latent cache from the same x, decode last position
+    cn, kr = mla._kv_latent(lp["attn"], x, cfg, pos)
+    qn, qrope = mla._q_proj(lp["attn"], x, cfg, pos)
+    o_lat = mla._absorbed_scores_attend(
+        lp["attn"], qn[:, :, -1], qrope[:, :, -1], cn, kr,
+        pos, 16, cfg, NO_SHARD, "dense", False)
+    m = cfg.mla
+    wkv = lp["attn"]["kv_b"]["w"].reshape(m.kv_lora_rank, cfg.n_heads,
+                                          m.qk_nope_head_dim + m.v_head_dim)
+    wv = wkv[..., m.qk_nope_head_dim:]
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, wv)
+    import repro.models.param as pm
+    a_last = pm.apply_linear(lp["attn"]["wo"],
+                             o.reshape(2, 1, -1).astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(a_last[:, 0]),
+                               np.asarray(full[:, -1]), rtol=2e-3, atol=2e-3)

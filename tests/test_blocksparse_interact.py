@@ -1,0 +1,103 @@
+"""Two-level ELL-BSR storage + multi-level interactions (paper §2.4)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blocksparse, interact
+from repro.kernels import ops as kops
+
+
+def random_coo(rng, n, nnz):
+    rows = rng.integers(0, n, nnz)
+    cols = rng.integers(0, n, nnz)
+    # dedupe to keep the dense comparison simple
+    key = rows.astype(np.int64) * n + cols
+    _, first = np.unique(key, return_index=True)
+    rows, cols = rows[first], cols[first]
+    vals = rng.standard_normal(len(rows)).astype(np.float32)
+    return rows, cols, vals
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(40, 400), bs=st.sampled_from([8, 16, 32]),
+       frac=st.floats(0.002, 0.05), seed=st.integers(0, 999))
+def test_bsr_roundtrip_and_spmv(n, bs, frac, seed):
+    rng = np.random.default_rng(seed)
+    rows, cols, vals = random_coo(rng, n, max(int(n * n * frac), 5))
+    bsr = blocksparse.build_bsr(rows, cols, vals, n, bs=bs, sb=4)
+    dense = np.zeros((n, n), np.float32)
+    dense[rows, cols] = vals
+    np.testing.assert_allclose(bsr.to_dense(), dense, atol=1e-6)
+    x = rng.standard_normal(n).astype(np.float32)
+    want = dense @ x
+    for path in ("bsr", "bsr_ml"):
+        got = np.asarray(interact.spmv(bsr, jnp.asarray(x), path))
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_spmv_paths_agree_with_pallas():
+    rng = np.random.default_rng(7)
+    n = 512
+    rows, cols, vals = random_coo(rng, n, 4000)
+    bsr = blocksparse.build_bsr(rows, cols, vals, n, bs=32)
+    x = rng.standard_normal(n).astype(np.float32)
+    y_jax = np.asarray(interact.spmv(bsr, jnp.asarray(x), "bsr"))
+    y_pal = np.asarray(kops.bsr_spmv(bsr.vals, bsr.col_idx, jnp.asarray(x), n))
+    np.testing.assert_allclose(y_pal, y_jax, rtol=1e-4, atol=1e-4)
+
+
+def test_csr_path():
+    rng = np.random.default_rng(3)
+    n = 200
+    rows, cols, vals = random_coo(rng, n, 900)
+    dense = np.zeros((n, n), np.float32)
+    dense[rows, cols] = vals
+    x = rng.standard_normal((n, 2)).astype(np.float32)
+    got = np.asarray(interact.spmv_csr(jnp.asarray(vals), jnp.asarray(rows),
+                                       jnp.asarray(cols), jnp.asarray(x), n))
+    np.testing.assert_allclose(got, dense @ x, rtol=1e-4, atol=1e-4)
+
+
+def test_tsne_attractive_blockwise_matches_edges():
+    """Blockwise-dense value recomputation == per-edge reference."""
+    rng = np.random.default_rng(5)
+    n, k, d = 96, 6, 2
+    p_rows = np.repeat(np.arange(n), k)
+    p_cols = rng.integers(0, n, n * k)
+    p_vals = rng.random(n * k).astype(np.float32)
+    bsr = blocksparse.build_bsr(p_rows, p_cols, p_vals, n, bs=16)
+    y = rng.standard_normal((n, d)).astype(np.float32)
+    got = np.asarray(interact.tsne_attractive(bsr.vals, bsr.col_idx,
+                                              bsr.nbr_mask, jnp.asarray(y), n))
+    want = np.zeros((n, d), np.float32)
+    for r, c, pv in zip(p_rows, p_cols, p_vals):
+        diff = y[r] - y[c]
+        q = 1.0 / (1.0 + (diff ** 2).sum())
+        want[r] += pv * q * diff
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+def test_meanshift_step_matches_dense():
+    rng = np.random.default_rng(6)
+    n, k, d = 64, 8, 3
+    src = rng.standard_normal((n, d)).astype(np.float32)
+    t = src + 0.1 * rng.standard_normal((n, d)).astype(np.float32)
+    w_rows = np.repeat(np.arange(n), k)
+    w_cols = rng.integers(0, n, n * k)
+    key = w_rows.astype(np.int64) * n + w_cols       # dedupe (i,j) pairs:
+    _, first = np.unique(key, return_index=True)     # the 0/1 pattern must
+    w_rows, w_cols = w_rows[first], w_cols[first]    # not sum duplicates
+    bsr = blocksparse.build_bsr(w_rows, w_cols,
+                                np.ones(len(w_rows), np.float32), n, bs=16)
+    n_cb = bsr.n_cb
+    src_pad = np.zeros((n_cb * bsr.bs, d), np.float32)
+    src_pad[:n] = src
+    got = np.asarray(interact.meanshift_step(
+        bsr.vals, bsr.col_idx, jnp.asarray(src_pad.reshape(n_cb, bsr.bs, d)),
+        jnp.asarray(t), 0.5, n))
+    pattern = np.zeros((n, n), np.float32)
+    pattern[w_rows, w_cols] = 1.0
+    w = np.exp(-((t[:, None, :] - src[None]) ** 2).sum(-1) / 0.5) * pattern
+    want = (w @ src) / np.maximum(w.sum(1, keepdims=True), 1e-12)
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)

@@ -1,0 +1,124 @@
+"""Checkpointing (async, elastic, GC), fault-tolerance supervisor, and the
+deterministic data pipeline."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.configs import reduced_config
+from repro.data import pipeline
+from repro.launch.ft import StepTimeout, Supervisor
+
+
+def tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16),
+                  "step": jnp.asarray(7, jnp.int32)}}
+
+
+def test_ckpt_roundtrip_async(tmp_path):
+    ck = Checkpointer(tmp_path)
+    t = tree()
+    ck.save(3, t)
+    ck.wait()
+    restored, step = ck.restore(t)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_ckpt_gc_keeps_latest(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree(), blocking=True)
+    assert ck.steps() == [3, 4]
+
+
+def test_ckpt_structure_mismatch_raises(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(0, tree(), blocking=True)
+    with pytest.raises(ValueError):
+        ck.restore({"only": jnp.zeros(3)})
+
+
+def test_ckpt_elastic_resharding_roundtrip(tmp_path):
+    """Restore device_puts with provided shardings (single-device here;
+    the mesh case is exercised in test_dist.py subprocesses)."""
+    ck = Checkpointer(tmp_path)
+    t = tree()
+    ck.save(1, t, blocking=True)
+    sh = jax.tree.map(lambda _: jax.devices()[0], t)
+    restored, _ = ck.restore(t, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(t["a"]))
+
+
+def test_supervisor_restarts_after_failure(tmp_path):
+    ck = Checkpointer(tmp_path)
+    calls = {"fail": True, "restarts": 0}
+
+    def step_fn(state, step):
+        if step == 5 and calls["fail"]:
+            calls["fail"] = False
+            raise RuntimeError("injected node failure")
+        return state + 1
+
+    sup = Supervisor(step_deadline_s=60,
+                     on_restart=lambda n: calls.__setitem__("restarts", n))
+    out = sup.run(n_steps=10,
+                  make_state=lambda: 0,
+                  step_fn=step_fn,
+                  save=lambda s, st: ck.save(s, jnp.asarray(st),
+                                             blocking=True),
+                  restore=lambda: (lambda t: (int(t[0]), t[1]))(
+                      ck.restore(jnp.asarray(0))),
+                  ckpt_every=2)
+    assert calls["restarts"] == 1
+    assert int(out) == 10       # every step ran exactly once post-resume
+
+
+def test_supervisor_straggler_deadline():
+    sup = Supervisor(step_deadline_s=0.3, max_restarts=0)
+
+    def slow_step(state, step):
+        if step == 1:
+            time.sleep(1.0)      # straggling step
+        return state
+
+    with pytest.raises((StepTimeout, RuntimeError)):
+        sup.run(n_steps=5, make_state=lambda: 0, step_fn=slow_step,
+                save=lambda s, st: None,
+                restore=lambda: (_ for _ in ()).throw(FileNotFoundError()),
+                ckpt_every=0)
+
+
+def test_pipeline_deterministic_and_skippable():
+    cfg = reduced_config("qwen2-0.5b")
+    a = pipeline.token_batch(cfg, 7, 4, 16)
+    b = pipeline.token_batch(cfg, 7, 4, 16)
+    c = pipeline.token_batch(cfg, 8, 4, 16)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    assert a["tokens"].shape == (4, 16)
+    assert (a["tokens"] >= 0).all() and (a["tokens"] < cfg.vocab).all()
+
+
+def test_pipeline_prefetch_iterator():
+    cfg = reduced_config("qwen2-0.5b")
+    it = pipeline.token_batches(cfg, 2, 8, start_step=3)
+    first = next(it)
+    ref = pipeline.token_batch(cfg, 3, 2, 8)
+    np.testing.assert_array_equal(np.asarray(first["tokens"]), ref["tokens"])
+
+
+def test_feature_mixture_is_clustered():
+    x = pipeline.feature_mixture(512, 64, n_clusters=8, seed=0)
+    assert x.shape == (512, 64)
+    # cluster structure: nearest-neighbor distance << random-pair distance
+    d_nn = np.sort(((x[:64, None] - x[None, :64]) ** 2).sum(-1), axis=1)[:, 1]
+    d_rand = ((x[:64] - x[64:128]) ** 2).sum(-1)
+    assert np.median(d_nn) < 0.3 * np.median(d_rand)

@@ -1,0 +1,148 @@
+"""Cluster-sparse attention (the paper's technique as an LM backend)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import clusterkv as ckv
+from repro.configs.base import ClusterKVConfig
+from repro.models import attention as attn
+
+
+def _clustered_qkv(key, B=1, Hq=4, Hkv=2, S=256, dh=16, n_clusters=4,
+                   contrast=4.0):
+    ks = jax.random.split(key, 4)
+    cc = jax.random.normal(ks[0], (n_clusters, 1, 1, dh)) * contrast
+    asg = jax.random.randint(ks[1], (S,), 0, n_clusters)
+    k = (cc[asg].reshape(1, 1, S, dh)
+         + 0.2 * jax.random.normal(ks[2], (B, Hkv, S, dh))).astype(jnp.float32)
+    q = jnp.repeat(k, Hq // Hkv, axis=1) \
+        + 0.05 * jax.random.normal(ks[3], (B, Hq, S, dh))
+    v = jax.random.normal(ks[0], (B, Hkv, S, dh))
+    return q, k, v
+
+
+def _dense_ref(q, k, v, causal=True):
+    B, Hq, S, dh = q.shape
+    g = Hq // k.shape[1]
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    lg = jnp.einsum("bhsd,bhtd->bhst", q, kk) / np.sqrt(dh)
+    if causal:
+        lg = jnp.where(jnp.tril(jnp.ones((S, S), bool)), lg, -1e30)
+    return jnp.einsum("bhst,bhtd->bhsd", jax.nn.softmax(lg, -1), vv)
+
+
+def test_full_selection_is_exact():
+    q, k, v = _clustered_qkv(jax.random.PRNGKey(0))
+    cfg = ClusterKVConfig(enabled=True, block_q=32, block_k=32,
+                          blocks_per_query=256 // 32, embed_dim=2)
+    S = q.shape[2]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    out = attn.clusterkv_attention(q, k, v, pos, pos, cfg)
+    ref = _dense_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_topk_approximation_quality_on_clustered_data():
+    """With strongly clustered keys, half the blocks capture most mass."""
+    q, k, v = _clustered_qkv(jax.random.PRNGKey(1), contrast=6.0)
+    S = q.shape[2]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    cfg = ClusterKVConfig(enabled=True, block_q=32, block_k=32,
+                          blocks_per_query=5, embed_dim=2)
+    out = attn.clusterkv_attention(q, k, v, pos, pos, cfg, causal=False)
+    ref = _dense_ref(q, k, v, causal=False)
+    rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.3, rel
+
+
+def test_more_blocks_monotone_better():
+    q, k, v = _clustered_qkv(jax.random.PRNGKey(2))
+    S = q.shape[2]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    ref = _dense_ref(q, k, v, causal=False)
+    errs = []
+    for nb in (2, 4, 8):
+        cfg = ClusterKVConfig(enabled=True, block_q=32, block_k=32,
+                              blocks_per_query=nb, embed_dim=2)
+        out = attn.clusterkv_attention(q, k, v, pos, pos, cfg, causal=False)
+        errs.append(float(jnp.linalg.norm(out - ref)))
+    assert errs[0] >= errs[1] >= errs[2]
+    assert errs[2] < 1e-3  # 8 of 8 blocks = exact
+
+
+def test_causal_never_attends_future():
+    """Probe: values loaded from future positions must have zero weight —
+    set future v to huge constants and check output unaffected."""
+    q, k, v = _clustered_qkv(jax.random.PRNGKey(3))
+    S = q.shape[2]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    cfg = ClusterKVConfig(enabled=True, block_q=32, block_k=32,
+                          blocks_per_query=4, embed_dim=2)
+    out1 = attn.clusterkv_attention(q, k, v, pos, pos, cfg)
+    v_poison = v.at[:, :, S // 2:].add(1e4)
+    out2 = attn.clusterkv_attention(q, k, v_poison, pos, pos, cfg)
+    np.testing.assert_allclose(np.asarray(out1[:, :, :S // 2 - 32]),
+                               np.asarray(out2[:, :, :S // 2 - 32]),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_decode_full_selection_matches_dense_last_row():
+    q, k, v = _clustered_qkv(jax.random.PRNGKey(4))
+    S = q.shape[2]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), k.shape[:3])
+    cfg = ClusterKVConfig(enabled=True, block_k=32,
+                          decode_clusters=S // 32)
+    qd = q[:, :, -1]
+    out = attn.clusterkv_decode(qd, k, v, pos, S - 1, cfg)
+    ref = _dense_ref(q, k, v)[:, :, -1]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_cluster_perm_groups_clusters():
+    """After the paper's reorder, cluster labels are (mostly) contiguous."""
+    key = jax.random.PRNGKey(5)
+    S, dh = 256, 32
+    cc = jax.random.normal(key, (4, dh)) * 8
+    asg = jax.random.randint(jax.random.fold_in(key, 1), (S,), 0, 4)
+    k = (cc[asg] + 0.1 * jax.random.normal(jax.random.fold_in(key, 2),
+                                           (S, dh)))[None, None]
+    perm = ckv.cluster_perm(k, d=2)
+    lab = np.asarray(asg)[np.asarray(perm[0, 0])]
+    changes = np.count_nonzero(np.diff(lab))
+    assert changes <= 12   # ~3 changes ideal; allow boundary noise
+
+
+def test_pallas_tile_path_matches_jnp():
+    """use_pallas=True (kernel tiles, interpret on CPU) == jnp tile path."""
+    q, k, v = _clustered_qkv(jax.random.PRNGKey(8), S=128, dh=16)
+    S = q.shape[2]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    base = ClusterKVConfig(enabled=True, block_q=32, block_k=32,
+                           blocks_per_query=3, embed_dim=2)
+    pal = ClusterKVConfig(enabled=True, block_q=32, block_k=32,
+                          blocks_per_query=3, embed_dim=2, use_pallas=True)
+    for causal in (True, False):
+        a = attn.clusterkv_attention(q, k, v, pos, pos, base, causal=causal)
+        b = attn.clusterkv_attention(q, k, v, pos, pos, pal, causal=causal)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_autotune_adapts_to_clusterability():
+    """Tightly clustered keys need few tiles; diffuse keys need many."""
+    from repro.core.autotune import coverage_curve, tune_blocks_per_query
+    cfg = ClusterKVConfig(enabled=True, block_q=32, block_k=32, embed_dim=2)
+    q_t, k_t, _ = _clustered_qkv(jax.random.PRNGKey(11), contrast=10.0)
+    q_d, k_d, _ = _clustered_qkv(jax.random.PRNGKey(12), contrast=0.0)
+    cfg_t, cov_t = tune_blocks_per_query(q_t, k_t, cfg, 0.9)
+    cfg_d, cov_d = tune_blocks_per_query(q_d, k_d, cfg, 0.9)
+    assert cfg_t.blocks_per_query < cfg_d.blocks_per_query
+    assert cov_t >= 0.9
+    # curve is monotone nondecreasing and ends at ~1
+    curve = coverage_curve(q_t, k_t, cfg)
+    assert float(curve[-1]) == pytest.approx(1.0, abs=1e-3)
+    assert bool(jnp.all(jnp.diff(curve) >= -1e-6))

@@ -1,0 +1,74 @@
+"""Morton codes + adaptive 2^d tree (paper §2.4), incl. hypothesis property
+tests on the system's ordering invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hierarchy
+
+
+@pytest.mark.parametrize("d", [1, 2, 3])
+def test_morton_order_is_permutation(d):
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(rng.standard_normal((257, d)).astype(np.float32))
+    perm = np.asarray(hierarchy.morton_order(y))
+    assert sorted(perm.tolist()) == list(range(257))
+
+
+def test_morton_1d_is_sort():
+    rng = np.random.default_rng(1)
+    y = rng.standard_normal((100, 1)).astype(np.float32)
+    perm = np.asarray(hierarchy.morton_order(jnp.asarray(y)))
+    assert np.all(np.diff(y[perm, 0]) >= -1e-6)
+
+
+def test_morton_locality_2d():
+    """Points in the same quadrant stay contiguous (Z-curve property)."""
+    pts = np.array([[x, ybit] for x in (0.1, 0.9) for ybit in (0.1, 0.9)]
+                   * 8, np.float32)
+    pts += np.random.default_rng(0).normal(0, 0.01, pts.shape).astype(np.float32)
+    perm = np.asarray(hierarchy.morton_order(jnp.asarray(pts)))
+    quad = (pts[perm, 0] > 0.5).astype(int) * 2 + (pts[perm, 1] > 0.5)
+    # each quadrant's points must be contiguous in the ordering
+    changes = np.count_nonzero(np.diff(quad))
+    assert changes == 3
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(10, 200), d=st.integers(1, 3),
+       leaf=st.integers(4, 64), seed=st.integers(0, 10**6))
+def test_tree_invariants(n, d, leaf, seed):
+    rng = np.random.default_rng(seed)
+    y = rng.standard_normal((n, d)).astype(np.float32)
+    tree = hierarchy.build_tree(y, leaf_size=leaf)
+    assert sorted(tree.perm.tolist()) == list(range(n))
+    for lvl in tree.levels:
+        assert lvl[0] == 0 and lvl[-1] == n
+        assert np.all(np.diff(lvl) > 0)
+    # levels are nested refinements
+    for a, b in zip(tree.levels[:-1], tree.levels[1:]):
+        assert set(a.tolist()) <= set(b.tolist())
+
+
+def test_tree_adaptive_leaf_bound():
+    """Clusters split until <= leaf_size unless at max quantization depth."""
+    rng = np.random.default_rng(0)
+    y = rng.standard_normal((1000, 3)).astype(np.float32)
+    tree = hierarchy.build_tree(y, leaf_size=32)
+    sizes = np.diff(tree.levels[-1])
+    assert sizes.max() <= 32
+
+
+def test_tree_adaptivity_sparse_regions_stay_coarse():
+    """A tight cluster + far sparse points: sparse side should not be
+    over-split (adaptive stop)."""
+    rng = np.random.default_rng(0)
+    tight = rng.normal(0, 0.001, (256, 2))
+    sparse = rng.uniform(5, 10, (8, 2))
+    y = np.concatenate([tight, sparse]).astype(np.float32)
+    tree = hierarchy.build_tree(y, leaf_size=16)
+    # the 8 sparse points end in few leaves; tight cluster in many
+    last = tree.levels[-1]
+    sizes = np.diff(last)
+    assert len(sizes) >= 256 // 16

@@ -1,0 +1,118 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.blocksparse import random_bsr
+from repro.kernels import ops, ref
+from repro.kernels.block_attention import block_attention as ba_kernel
+from repro.kernels.bsr_spmv import bsr_spmv as bsr_kernel
+from repro.kernels.gamma_score import gamma_pairs
+
+
+@pytest.mark.parametrize("n,bs,nbr,f", [
+    (256, 16, 3, 1), (512, 32, 5, 4), (512, 64, 2, 8), (256, 128, 2, 2),
+])
+def test_bsr_spmv_shapes(n, bs, nbr, f):
+    bsr = random_bsr(n * bs, n, bs, nbr)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((n, f)), jnp.float32)
+    pad = bsr.n_rb * bs - n
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    got = bsr_kernel(bsr.vals, bsr.col_idx, xp, interpret=True)
+    want = ref.bsr_spmv_ref(bsr.vals, bsr.col_idx, xp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bsr_spmv_dtypes(dtype):
+    bsr = random_bsr(11, 256, 32, 4)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((256, 2)), jnp.float32).astype(dtype)
+    got = ops.bsr_spmv(bsr.vals, bsr.col_idx, x, 256)
+    want = ref.bsr_spmv_ref(bsr.vals, bsr.col_idx,
+                            x.astype(jnp.float32))[:256]
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("S,dh,bq,bk,nsel,causal", [
+    (128, 16, 16, 16, 3, True),
+    (256, 32, 32, 32, 4, True),
+    (256, 64, 64, 32, 2, False),
+    (128, 32, 16, 32, 4, True),
+])
+def test_block_attention_shapes(S, dh, bq, bk, nsel, causal):
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((S, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((S, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((S, dh)), jnp.float32)
+    kpos = jnp.asarray(rng.permutation(S), jnp.int32)
+    qpos = jnp.arange(S, dtype=jnp.int32)
+    idx = jnp.asarray(rng.integers(0, S // bk, (S // bq, nsel)), jnp.int32)
+    got = ba_kernel(q, k, v, kpos, qpos, idx, bq=bq, bk=bk, causal=causal,
+                    interpret=True)
+    want = ref.block_attention_ref(q, k, v, kpos, qpos, idx, bq=bq, bk=bk,
+                                   causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_block_attention_batched_wrapper_matches_core():
+    """ops.block_attention (vmapped kernel) == core.clusterkv reference."""
+    from repro.core import clusterkv as ckv
+    rng = np.random.default_rng(3)
+    B, Hq, Hkv, S, dh, bq, bk, nsel = 2, 4, 2, 128, 16, 32, 32, 3
+    q = jnp.asarray(rng.standard_normal((B, Hq, S, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, S, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, dh)), jnp.float32)
+    kpos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, Hkv, S))
+    qpos = jnp.arange(S, dtype=jnp.int32)
+    idx = jnp.asarray(rng.integers(0, S // bk, (B, Hkv, S // bq, nsel)),
+                      jnp.int32)
+    got = ops.block_attention(q, k, v, kpos, qpos, idx, bq=bq, bk=bk)
+    want = ckv.sparse_block_attention(q, k, v, kpos, qpos, idx, bq, bk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("nnz,bn", [(128, 64), (300, 128), (512, 256)])
+def test_gamma_pairs_shapes(nnz, bn):
+    rng = np.random.default_rng(4)
+    coords = jnp.asarray(rng.integers(0, 100, (nnz, 2)), jnp.float32)
+    pad = (-nnz) % bn
+    if pad:
+        far = jnp.full((pad, 2), 1e9) + jnp.arange(pad)[:, None] * 1e6
+        padded = jnp.concatenate([coords, far.astype(jnp.float32)])
+    else:
+        padded = coords
+    got = float(gamma_pairs(padded, 7.0, bn, interpret=True)) - pad
+    want = float(ref.gamma_pairs_ref(coords, 7.0))
+    assert got == pytest.approx(want, rel=1e-4)
+
+
+@pytest.mark.parametrize("n,bs,k,d", [(256, 16, 6, 2), (512, 32, 10, 3)])
+def test_tsne_force_kernel(n, bs, k, d):
+    """Kernel vs jnp oracle vs core.interact blockwise path."""
+    from repro.core import blocksparse, interact
+    rng = np.random.default_rng(0)
+    rows = np.repeat(np.arange(n), k)
+    cols = rng.integers(0, n, n * k)
+    key = rows.astype(np.int64) * n + cols
+    _, first = np.unique(key, return_index=True)
+    rows, cols = rows[first], cols[first]
+    pv = rng.random(len(rows)).astype(np.float32)
+    bsr = blocksparse.build_bsr(rows, cols, pv, n, bs=bs)
+    y = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    got = ops.tsne_force(bsr.vals, bsr.col_idx, y, n)
+    want_core = interact.tsne_attractive(bsr.vals, bsr.col_idx,
+                                         bsr.nbr_mask, y, n)
+    yp = jnp.pad(y, ((0, bsr.n_rb * bs - n), (0, 0)))
+    want_ref = ref.tsne_force_ref(bsr.vals, bsr.col_idx, yp)[:n]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_core),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,104 @@
+"""Patch-density measures (paper §2.2–2.3): beta / gamma behaviour."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import measures
+from repro.kernels import ops as kops
+
+
+def arrowhead(n=500, b=20, seed=0):
+    """Fig. 1a: block arrowhead with full b x b blocks."""
+    rng = np.random.default_rng(seed)
+    rows, cols = [], []
+    nb = n // b
+    for k in range(nb):
+        r0 = k * b
+        for i in range(b):
+            for j in range(b):
+                rows.append(r0 + i), cols.append(r0 + j)      # diagonal
+                if k > 0:
+                    rows.append(i), cols.append(r0 + j)        # top stripe
+                    rows.append(r0 + i), cols.append(j)        # left stripe
+    return np.array(rows), np.array(cols)
+
+
+@pytest.fixture(scope="module")
+def fig1():
+    rows, cols = arrowhead()
+    n = 500
+    rng = np.random.default_rng(1)
+    pb = rng.permutation(500 // 20)                # block permutation
+    perm_block = np.concatenate([np.arange(20) + 20 * p for p in pb])
+    perm_rows = rng.permutation(n)
+    perm_cols = rng.permutation(n)
+    return n, rows, cols, perm_block, perm_rows, perm_cols
+
+
+def _apply(perm, idx):
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    return inv[idx]
+
+
+def test_fig1_beta_ordering(fig1):
+    """beta: (a) arrowhead == (b) block-permuted > (c) row-perm > (d) both.
+
+    The principled equivalence of (a) and (b) is exact at the natural
+    block size (20 — a block permutation maps 20-tiles onto 20-tiles);
+    the max-over-sizes estimate may differ slightly at other tilings."""
+    n, rows, cols, pb, pr, pc = fig1
+    b_a = measures.beta_estimate(rows, cols, n)
+    b_b = measures.beta_estimate(_apply(pb, rows), _apply(pb, cols), n)
+    b_c = measures.beta_estimate(_apply(pr, rows), cols, n)
+    b_d = measures.beta_estimate(_apply(pr, rows), _apply(pc, cols), n)
+    assert b_a["per_block"][20] == pytest.approx(b_b["per_block"][20],
+                                                 rel=1e-6)
+    assert b_a["beta"] == pytest.approx(b_b["beta"], rel=0.25)
+    assert b_a["beta"] > 2 * b_c["beta"] > 2 * b_d["beta"]    # degradation
+
+
+def test_fig1_gamma_monotone_with_beta(fig1):
+    """gamma correlates with beta across the four orderings (paper Fig. 1)."""
+    n, rows, cols, pb, pr, pc = fig1
+    g = []
+    for r, c in [(rows, cols),
+                 (_apply(pb, rows), _apply(pb, cols)),
+                 (_apply(pr, rows), cols),
+                 (_apply(pr, rows), _apply(pc, cols))]:
+        g.append(float(measures.gamma_score(jnp.asarray(r), jnp.asarray(c),
+                                            10.0, n)))
+    assert g[0] == pytest.approx(g[1], rel=0.15)
+    assert g[1] > g[2] > g[3]
+
+
+def test_gamma_hist_matches_exact():
+    rng = np.random.default_rng(0)
+    rows = jnp.asarray(rng.integers(0, 300, 400))
+    cols = jnp.asarray(rng.integers(0, 300, 400))
+    exact = float(measures.gamma_exact(rows, cols, 8.0))
+    hist = float(measures.gamma_score(rows, cols, 8.0, 300))
+    assert hist == pytest.approx(exact, rel=0.05)
+
+
+def test_gamma_kernel_matches_exact():
+    rng = np.random.default_rng(1)
+    rows = jnp.asarray(rng.integers(0, 200, 300), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, 200, 300), jnp.int32)
+    exact = float(measures.gamma_exact(rows, cols, 6.0))
+    kern = float(kops.gamma_exact(rows, cols, 6.0, bn=128))
+    assert kern == pytest.approx(exact, rel=1e-4)
+
+
+def test_beta_dense_block_is_high():
+    """A single full block has beta = 1 (1 patch, density 1)."""
+    b = 32
+    rows, cols = np.meshgrid(np.arange(b), np.arange(b), indexing="ij")
+    out = measures.beta_estimate(rows.ravel(), cols.ravel(), 256)
+    assert out["beta"] == pytest.approx(1.0)
+
+
+def test_fill_ratio():
+    b = 16
+    rows, cols = np.meshgrid(np.arange(b), np.arange(b), indexing="ij")
+    assert measures.fill_ratio(rows.ravel(), cols.ravel(), 64, 16) == 1.0
