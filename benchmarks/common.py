@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import knn, ordering
+from repro.core import knn
 from repro.data.pipeline import gist_like, sift_like
 
 
@@ -43,10 +43,3 @@ def knn_problem(name: str, n: int, k: int, seed: int = 0):
     key = r2.astype(np.int64) * n + c2
     _, first = np.unique(key, return_index=True)
     return x, r2[first], c2[first]
-
-
-def reorder(name: str, x, rows, cols):
-    pi = ordering.compute_ordering(name, x, rows, cols)
-    r2, c2 = ordering.apply_ordering(rows, cols, pi)
-    order = np.lexsort((c2, r2))
-    return pi, r2[order], c2[order]

@@ -15,8 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import knn_problem, reorder, timeit
-from repro.core import blocksparse, interact
+from benchmarks.common import knn_problem, timeit
+from repro import api
 
 
 CASES = [("sift", 4096, 30), ("gist", 2048, 45)]
@@ -41,8 +41,9 @@ def run(out):
         edge = jax.jit(tsne_edge_path, static_argnames=("n",))
         ref_time = None
         for name in ORDERINGS:
-            pi, r2, c2 = reorder(name, x, rows, cols)
-            y_perm = y_embed[np.argsort(pi)] if False else y_embed
+            plan = api.InteractionPlan.from_coo(rows, cols, p_raw, n, x=x,
+                                                ordering=name, bs=32, sb=8)
+            r2, c2, _ = plan.coo
             rj, cj = jnp.asarray(r2), jnp.asarray(c2)
             pv = jnp.asarray(p_raw)
             t_csr = timeit(lambda: edge(rj, cj, pv, y_embed, n))
@@ -53,13 +54,12 @@ def run(out):
             # blockwise path: only meaningful when tiles are dense enough.
             # kept-tile count == the paper's covering size == the MXU work
             # a TPU would do — the direct TPU-time proxy for this ordering.
-            bsr = blocksparse.build_bsr(r2, c2, p_raw, n, bs=32, sb=8)
-            kept = int(np.asarray(bsr.nbr_mask).sum())
-            if bsr.max_nbr * bsr.bs <= 16 * k:   # memory guard for scattered
-                t_bsr = timeit(lambda: interact.tsne_attractive(
-                    bsr.vals, bsr.col_idx, bsr.nbr_mask, y_embed, n))
+            kept = int(np.asarray(plan.bsr.nbr_mask).sum())
+            if plan.bsr.max_nbr * plan.bsr.bs <= 16 * k:  # scattered guard
+                t_bsr = timeit(lambda: plan.tsne_attractive(y_embed))
                 out(f"fig3_{ds}_{name}_bsr,{t_bsr*1e6:.0f},"
-                    f"fill={bsr.fill:.3f};tiles={kept};x{ref_time/t_bsr:.2f}")
+                    f"fill={plan.fill:.3f};tiles={kept};"
+                    f"x{ref_time/t_bsr:.2f}")
             else:
                 out(f"fig3_{ds}_{name}_bsr,skipped,"
-                    f"fill={bsr.fill:.3f};tiles={kept};tiles_too_sparse")
+                    f"fill={plan.fill:.3f};tiles={kept};tiles_too_sparse")

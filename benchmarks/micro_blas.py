@@ -1,31 +1,32 @@
 """Paper §4.1 micro-benchmarks: banded (best case) vs scattered (base case)
 block-sparse SpMV at fixed size and nnz — the machine-specific reference
-the paper compares its orderings against. Run for both the jnp block path
-and the Pallas kernel (interpret mode on CPU)."""
+the paper compares its orderings against. Runs through the plan API's
+backend registry (jnp block paths + the Pallas kernel, interpret on CPU)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import timeit
+from repro import api
 from repro.core.blocksparse import random_bsr
 from repro.core import interact
-from repro.kernels import ops as kops
 
 
 def run(out):
     n, bs, nbr = 8192, 32, 16
     x = jnp.asarray(np.random.default_rng(0).standard_normal(n), jnp.float32)
     for case, banded in [("banded", True), ("scattered", False)]:
-        bsr = random_bsr(0, n, bs, nbr, banded=banded)
-        t_flat = timeit(lambda: interact.spmv(bsr, x, "bsr"))
-        t_ml = timeit(lambda: interact.spmv(bsr, x, "bsr_ml"))
+        plan = api.InteractionPlan.from_bsr(
+            random_bsr(0, n, bs, nbr, sb=8, banded=banded))
+        t_flat = timeit(lambda: plan.apply(x, backend="bsr"))
+        t_ml = timeit(lambda: plan.apply(x, backend="bsr_ml"))
         out(f"micro_{case}_bsr,{t_flat*1e6:.0f},n={n};bs={bs};nbr={nbr}")
         out(f"micro_{case}_bsr_ml,{t_ml*1e6:.0f},superblock_schedule")
         # Pallas path: correctness only on CPU (interpret mode is a Python
         # emulator — wall time is meaningless; see tests/test_kernels.py)
-        y_pal = kops.bsr_spmv(bsr.vals, bsr.col_idx, x[:bsr.n_rb * bs], n)
-        err = float(jnp.abs(y_pal - interact.spmv(bsr, x, "bsr")).max())
+        y_pal = plan.apply(x, backend="pallas")
+        err = float(jnp.abs(y_pal - plan.apply(x, backend="bsr")).max())
         out(f"micro_{case}_pallas_check,{err:.2e},interpret_allclose")
     # CSR gather reference at matched nnz
     rng = np.random.default_rng(1)

@@ -30,6 +30,10 @@ def main() -> None:
         "attention_bench": attention_bench.run,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
+    unknown = [c for c in chosen if c not in suites]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; "
+                 f"available: {', '.join(suites)}")
 
     print("name,us_per_call,derived")
     for name in chosen:

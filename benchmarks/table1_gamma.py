@@ -1,14 +1,11 @@
 """Paper Table 1: gamma-score (sigma = k/2) of the SIFT/GIST interaction
 matrices under each ordering. Offline stand-in datasets (DESIGN.md §4);
 the claim reproduced is the ORDERING of the scores: dual_tree > lexical >
-1D/rCM > scattered."""
+1D/rCM > scattered. Profile-only plans (no BSR) score each ordering."""
 from __future__ import annotations
 
-import jax.numpy as jnp
-
-from benchmarks.common import knn_problem, reorder
-from repro.core import measures
-
+from benchmarks.common import dataset
+from repro import api
 
 from repro.configs.paper_spmv import TABLE1
 
@@ -17,9 +14,8 @@ def run(out):
     for exp in TABLE1:
         ds, n, k, sigma = (exp.dataset, exp.n_points, exp.k_neighbors,
                            exp.sigma)
-        x, rows, cols = knn_problem(ds, n, k)
+        x = dataset(ds, n)
         for name in exp.orderings:
-            _, r2, c2 = reorder(name, x, rows, cols)
-            g = float(measures.gamma_score(jnp.asarray(r2), jnp.asarray(c2),
-                                           sigma, n))
-            out(f"table1_{ds}_{name},{g:.3f},k={k};sigma={sigma}")
+            plan = api.build_plan(x, k=k, ordering=name, symmetrize=True,
+                                  sigma=sigma, with_bsr=False)
+            out(f"table1_{ds}_{name},{plan.gamma:.3f},k={k};sigma={sigma}")

@@ -14,7 +14,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import blocksparse, interact, knn, ordering
+from repro import api
+from repro.core import knn
 from repro.data.pipeline import feature_mixture
 
 
@@ -27,8 +28,10 @@ def main():
     src = (centers[labels] + 0.4 * rng.standard_normal((n, d))
            ).astype(np.float32)
 
-    # dual-tree ordering of the (fixed) sources: cluster-contiguous memory
-    pi = ordering.dual_tree(src, d=3)
+    # dual-tree ordering of the (fixed) sources: cluster-contiguous memory.
+    # Ordering only (no pattern yet) — the interaction plans below are
+    # rebuilt per pattern refresh in the already-ordered index space.
+    pi = api.cluster_order(src, ordering="dual_tree")
     src_s = src[pi]
     t = src_s.copy()                    # targets start at the points
     h2 = 2.0
@@ -39,13 +42,8 @@ def main():
             idx, _ = knn.knn_graph(jnp.asarray(t), jnp.asarray(src_s), k)
             rows = np.repeat(np.arange(n), k)
             cols = np.asarray(idx).ravel()
-            bsr = blocksparse.build_bsr(rows, cols,
-                                        np.ones(n * k, np.float32), n, bs=32)
-            src_blocked = np.zeros((bsr.n_cb * bsr.bs, d), np.float32)
-            src_blocked[:n] = src_s
-            src_b = jnp.asarray(src_blocked.reshape(bsr.n_cb, bsr.bs, d))
-        t = np.asarray(interact.meanshift_step(
-            bsr.vals, bsr.col_idx, src_b, jnp.asarray(t), h2, n))
+            plan = api.InteractionPlan.from_coo(rows, cols, None, n, bs=32)
+        t = np.asarray(plan.meanshift_step(jnp.asarray(t), src_s, h2))
     dt = time.time() - t0
 
     # targets should have collapsed near the 6 modes

@@ -1,11 +1,14 @@
-"""Quickstart: the paper's pipeline on a small synthetic dataset.
+"""Quickstart: the paper's pipeline on a small synthetic dataset — through
+the unified planner API only.
 
   PYTHONPATH=src python examples/quickstart.py
 
-Steps: build a kNN interaction matrix over clustered high-dimensional
-points -> compare orderings by patch-density (gamma) -> build the two-level
-ELL-BSR under the dual-tree ordering -> run the block-sparse interaction
-three ways (CSR gather / blockwise / Pallas kernel) and check they agree.
+One call, ``repro.api.build_plan``, runs the whole pipeline: kNN interaction
+pattern (Eq. 1) -> PCA embedding + adaptive 2^d-tree ordering (§2.4) ->
+two-level ELL-BSR storage -> γ-scored profile (§2.3). The plan then serves
+the interaction ``y = A x`` through every registered SpMV backend; here we
+compare orderings by γ (profile-only plans) and check that all backends
+agree on the dual-tree plan.
 """
 import sys
 from pathlib import Path
@@ -15,9 +18,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import blocksparse, interact, knn, measures, ordering
+from repro import api
 from repro.data.pipeline import feature_mixture
-from repro.kernels import ops as kops
 
 
 def main():
@@ -25,35 +27,36 @@ def main():
     x = feature_mixture(n, d, n_clusters=32, seed=0)
     print(f"dataset: {n} points in R^{d} (SIFT-like mixture)")
 
-    rows, cols, _ = knn.knn_coo(jnp.asarray(x), jnp.asarray(x), k,
-                                exclude_self=True)
-    rows, cols = np.asarray(rows), np.asarray(cols)
-    print(f"kNN graph: {len(rows)} nonzeros (k={k})")
-
     print("\ngamma-score by ordering (higher = denser patches):")
-    best = {}
-    for name in ordering.ORDERINGS:
-        pi = ordering.compute_ordering(name, x, rows, cols)
-        r2, c2 = ordering.apply_ordering(rows, cols, pi)
-        g = float(measures.gamma_score(jnp.asarray(r2), jnp.asarray(c2),
-                                       k / 2, n))
-        best[name] = (pi, r2, c2)
-        print(f"  {name:10s} gamma = {g:7.2f}")
+    for name in api.ORDERINGS:
+        profile = api.build_plan(x, k=k, ordering=name, with_bsr=False)
+        print(f"  {name:10s} gamma = {profile.gamma:7.2f}")
 
-    pi, r2, c2 = best["dual_tree"]
-    vals = np.random.default_rng(0).random(len(r2)).astype(np.float32)
-    bsr = blocksparse.build_bsr(r2, c2, vals, n, bs=32, sb=8)
-    print(f"\ndual-tree ELL-BSR: {bsr.n_rb} row blocks, "
-          f"max {bsr.max_nbr} tiles/row, fill {bsr.fill:.3f}")
+    rng = np.random.default_rng(0)
+    plan = api.build_plan(x, k=k, ordering="dual_tree", bs=32, sb=8,
+                          backend="auto",
+                          values=lambda r, c, d2: rng.random(len(r)))
+    print(f"\ndual-tree plan: {plan}")
+    print(f"  {plan.bsr.n_rb} row blocks, max {plan.bsr.max_nbr} tiles/row, "
+          f"fill {plan.fill:.3f}")
 
-    xvec = jnp.asarray(np.random.default_rng(1).standard_normal(n),
-                       jnp.float32)
-    y_csr = interact.spmv_csr(jnp.asarray(vals), jnp.asarray(r2),
-                              jnp.asarray(c2), xvec, n)
-    y_bsr = interact.spmv(bsr, xvec, "bsr")
-    y_pal = kops.bsr_spmv(bsr.vals, bsr.col_idx, xvec, n)
-    print(f"paths agree: csr~bsr {float(jnp.abs(y_csr-y_bsr).max()):.2e}, "
-          f"bsr~pallas {float(jnp.abs(y_bsr-y_pal).max()):.2e}")
+    xvec = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    x_sorted = plan.permute(xvec)
+    results = {b: np.asarray(plan.apply(x_sorted, backend=b))
+               for b in api.backend_names()}
+    ref = results["csr"]
+    print("\nSpMV backends vs csr (max-abs):")
+    worst = 0.0
+    for name, y in results.items():
+        err = float(np.abs(y - ref).max())
+        worst = max(worst, err)
+        print(f"  {name:8s} {err:.2e}")
+    assert worst <= 1e-4, f"backend disagreement {worst:.2e} > 1e-4"
+
+    y = plan.unpermute(plan.apply(x_sorted))          # auto-tuned backend
+    print(f"\nbackend='auto' resolved to {plan.resolve_backend()!r}; "
+          f"matvec norm {float(jnp.linalg.norm(y)):.3f}")
+    print("all backends agree OK")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,13 @@
 """Serve a small model with batched requests, decoding with the paper's
 cluster-sparse KV selection vs dense attention — the LM-side analog of the
-paper's iterative near-neighbor interaction.
+paper's iterative near-neighbor interaction. The cluster budget is not
+hardcoded: ``core.autotune`` probes the prefilled key cache's coverage
+curve (the γ-score idea of §2.3) and sizes ``blocks_per_query`` /
+``decode_clusters`` to hit a target softmax-mass coverage.
 
   PYTHONPATH=src python examples/serve_clusterkv.py
 """
+import dataclasses
 import sys
 import time
 from pathlib import Path
@@ -16,6 +20,7 @@ import numpy as np
 
 from repro.configs import reduced_config
 from repro.configs.base import ClusterKVConfig
+from repro.core import autotune
 from repro.models import model_api
 from repro.train import trainer
 
@@ -31,6 +36,19 @@ def main():
     batch = model_api.make_small_batch(cfg, key, batch_size, prompt,
                                        kind="prefill")
     prefill = jax.jit(trainer.make_prefill_step(cfg, None, "flash"))
+
+    # γ-guided budget autotune on the prefilled keys (self-coverage proxy)
+    cache0, _ = prefill(params, batch)
+    k0 = cache0["k"][0].astype(jnp.float32)          # (B, Hkv, S, dh)
+    tuned, cov = autotune.tune_blocks_per_query(k0, k0, cfg.clusterkv,
+                                                target_coverage=0.9)
+    tuned = dataclasses.replace(tuned,
+                                decode_clusters=max(tuned.blocks_per_query,
+                                                    cfg.clusterkv.decode_clusters))
+    print(f"autotuned cluster budget: blocks_per_query="
+          f"{tuned.blocks_per_query}, decode_clusters="
+          f"{tuned.decode_clusters} (est. coverage {cov:.2f})")
+    cfg = cfg.with_(clusterkv=tuned)
 
     results = {}
     for backend in ("flash", "clusterkv"):

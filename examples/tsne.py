@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import blocksparse, interact, knn, ordering
+from repro import api
+from repro.core import knn
 from repro.data.pipeline import feature_mixture
 
 
@@ -88,21 +89,19 @@ def main():
     print("building P (kNN affinities)...")
     rows, cols, pvals = p_matrix(x, k)
 
-    print("reordering (dual-tree) + ELL-BSR...")
-    pi = ordering.dual_tree(x, d=3)
-    r2, c2 = ordering.apply_ordering(rows, cols, pi)
+    print("planning (dual-tree reorder + ELL-BSR)...")
+    plan = api.InteractionPlan.from_coo(rows, cols, pvals, n, x=x,
+                                        ordering="dual_tree", bs=32, sb=8)
     # reorder points/labels so vectors are cluster-contiguous (paper §2.4)
-    x_s, labels_s = x[pi], labels[pi]
-    bsr = blocksparse.build_bsr(r2, c2, pvals, n, bs=32, sb=8)
-    print(f"  fill={bsr.fill:.3f} max_tiles/row={bsr.max_nbr}")
+    labels_s = plan.permute(labels)
+    print(f"  {plan}")
 
     y = jnp.asarray(0.01 * rng.standard_normal((n, 2)), jnp.float32)
     lr, mom = float(n) / 12.0, 0.5
     vel = jnp.zeros_like(y)
     t0 = time.time()
     for it in range(args.iters):
-        f_attr = interact.tsne_attractive(bsr.vals, bsr.col_idx,
-                                          bsr.nbr_mask, y, n)
+        f_attr = plan.tsne_attractive(y)
         f_rep, _ = repulsive(y)
         exagg = 4.0 if it < 100 else 1.0
         grad = 4.0 * (exagg * f_attr - f_rep)

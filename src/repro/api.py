@@ -1,0 +1,420 @@
+"""Unified planner API: one object from points -> ordering -> BSR -> SpMV.
+
+The paper's method is a pipeline; ``build_plan`` runs it end-to-end and
+returns an :class:`InteractionPlan` that owns every stage's artifact:
+
+  paper section                       plan artifact
+  -------------------------------------------------------------------------
+  §2.2  patch-density model           ``plan.gamma`` (Eq. 4 score of the
+                                      reordered pattern), ``plan.fill``
+  §2.3  ordering quality (γ-score)    computed per ordering; compare by
+                                      building profile-only plans
+                                      (``with_bsr=False``) per ordering
+  §2.4  step 1: low-dim embedding     ``plan.embedding`` (PCA coords)
+  §2.4  step 2: hierarchical          ``plan.tree`` (adaptive 2^d tree),
+        partitioning                  ``plan.pi`` / ``permute`` /
+                                      ``unpermute`` (cluster ordering)
+  §2.4  step 3: multi-level           ``plan.bsr`` (two-level ELL-BSR,
+        compressed storage            registered as a JAX pytree)
+  §2.4  step 4: block-segment         ``plan.apply`` / ``plan.matvec`` over
+        interaction                   the pluggable backend registry;
+                                      iterative value updates via
+                                      ``plan.tsne_attractive`` (§3.1) and
+                                      ``plan.meanshift_step`` (§3.2)
+
+Index spaces: ``plan.apply(x)`` computes ``y = A' x`` in *cluster order*
+(``A' = P A Pᵀ``); ``plan.matvec(x)`` is the original-order convenience
+``unpermute(apply(permute(x)))``. Backends are named entries in
+``repro.core.registry`` (``csr``, ``bsr``, ``bsr_ml``, ``pallas``, ``dist``,
+plus anything user-registered); ``backend="auto"`` lets
+``core.autotune.tune_backend`` probe the registry and pick the fastest for
+this plan's shapes.
+
+Plans and their BSR are JAX pytrees: array state (tiles, indices,
+permutation) flattens to leaves while layout metadata and host-side
+artifacts (tree, COO, stats) ride along as static aux data, so plans cross
+``jit`` / ``scan`` / ``shard_map`` boundaries intact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import interact, knn, measures
+from repro.core import ordering as ordering_mod
+from repro.core.blocksparse import BSR, build_bsr
+from repro.core.embedding import embed
+from repro.core.hierarchy import Tree, build_tree
+from repro.core.ordering import ORDERINGS  # noqa: F401  (re-export)
+from repro.core.registry import (backend_names, get_backend,  # noqa: F401
+                                 register_backend)
+
+__all__ = [
+    "PlanConfig", "InteractionPlan", "build_plan", "cluster_order",
+    "ORDERINGS", "register_backend", "backend_names", "get_backend",
+]
+
+
+@dataclass(frozen=True)
+class PlanConfig:
+    """Static knobs of an interaction plan (hashable; jit-cache friendly)."""
+    k: int = 16                  # neighbors per target (Eq. 1 pattern)
+    ordering: str = "dual_tree"  # one of core.ordering.ORDERINGS
+    bs: int = 32                 # bottom-level tile size (MXU-aligned)
+    sb: int = 8                  # superblock size, in tiles
+    backend: str = "auto"        # registry name or "auto"
+    d: int = 3                   # embedding dimension (§2.4 step 1)
+    bits: int = 10               # Morton quantization bits per dim
+    leaf_size: int = 64          # adaptive-tree leaf bound (§2.4 step 2)
+    symmetrize: bool = False     # symmetrize the kNN pattern
+    seed: int = 0
+
+
+@dataclasses.dataclass(eq=False)
+class _PlanHost:
+    """Host-side (numpy) artifacts of a plan.
+
+    Identity-hashed static aux data: not traced, shared across pytree
+    flatten/unflatten round-trips (so e.g. the autotune cache survives jit).
+    """
+    pi: np.ndarray                       # sorted position -> original index
+    inv: np.ndarray                      # original index -> sorted position
+    coo: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]]  # reordered
+    tree: Optional[Tree]
+    embedding: Optional[np.ndarray]      # (n, d) PCA coords (§2.4 step 1)
+    sigma: float = 1.0                   # γ-score bandwidth (Eq. 4)
+    gamma: Optional[float] = None        # lazily scored on first access
+    tuned_backend: dict = dataclasses.field(default_factory=dict)
+    # ^ backend="auto" winners, keyed by charge ndim: a backend valid for
+    #   1-D vectors (e.g. dist) must not be pinned for (n, f) charges
+    coo_dev: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None
+
+
+def _symmetrize_pattern(rows: np.ndarray, cols: np.ndarray,
+                        aux: np.ndarray, n: int):
+    """Pattern-union symmetrization; first occurrence of an (i, j) wins
+    for the rider array ``aux`` (values or distances)."""
+    r2 = np.concatenate([rows, cols])
+    c2 = np.concatenate([cols, rows])
+    a2 = np.concatenate([aux, aux])
+    key = r2.astype(np.int64) * n + c2
+    _, first = np.unique(key, return_index=True)
+    return r2[first], c2[first], a2[first]
+
+
+class InteractionPlan:
+    """Planner object owning ordering, storage, and compute backend."""
+
+    def __init__(self, config: PlanConfig, n: int, bsr: Optional[BSR],
+                 pi: jax.Array, inv: jax.Array, host: _PlanHost):
+        self.config = config
+        self.n = n
+        self.bsr = bsr
+        self.pi = pi
+        self.inv = inv
+        self.host = host
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_coo(cls, rows, cols, vals, n: int, *,
+                 x: Optional[np.ndarray] = None,
+                 pi: Optional[np.ndarray] = None,
+                 config: Optional[PlanConfig] = None,
+                 sigma: Optional[float] = None,
+                 with_bsr: bool = True,
+                 max_nbr: Optional[int] = None,
+                 _symmetrized: bool = False,
+                 **overrides) -> "InteractionPlan":
+        """Plan from an explicit COO pattern (original index space).
+
+        The ordering is ``pi`` if given, else computed from ``x`` with
+        ``config.ordering``, else identity (pattern already cluster-ordered).
+        """
+        config = dataclasses.replace(config or PlanConfig(), **overrides)
+        rows = np.asarray(rows)
+        cols = np.asarray(cols)
+        vals = (np.ones(len(rows), np.float32) if vals is None
+                else np.asarray(vals, np.float32))
+        if config.symmetrize and not _symmetrized:
+            rows, cols, vals = _symmetrize_pattern(rows, cols, vals, n)
+
+        tree = None
+        embedding = None
+        if pi is None and x is not None:
+            x = np.asarray(x, np.float32)
+            if config.ordering == "dual_tree":
+                embedding = np.asarray(embed(jnp.asarray(x), config.d))
+                tree = build_tree(embedding, bits=config.bits,
+                                  leaf_size=config.leaf_size)
+                pi = tree.perm
+            else:
+                pi = ordering_mod.compute_ordering(
+                    config.ordering, x, rows, cols, seed=config.seed)
+        if pi is None:
+            pi = np.arange(n)
+        pi = np.asarray(pi)
+        inv = np.empty_like(pi)
+        inv[pi] = np.arange(n)
+
+        r2, c2 = ordering_mod.apply_ordering(rows, cols, pi)
+        sigma = sigma if sigma is not None else max(config.k / 2.0, 1.0)
+        bsr = (build_bsr(r2, c2, vals, n, bs=config.bs, sb=config.sb,
+                         max_nbr=max_nbr) if with_bsr else None)
+        host = _PlanHost(pi=pi, inv=inv, coo=(r2, c2, vals), tree=tree,
+                         embedding=embedding, sigma=sigma)
+        return cls(config, n, bsr, jnp.asarray(pi, jnp.int32),
+                   jnp.asarray(inv, jnp.int32), host)
+
+    @classmethod
+    def from_bsr(cls, bsr: BSR,
+                 config: Optional[PlanConfig] = None) -> "InteractionPlan":
+        """Wrap an existing BSR (identity ordering, no COO/tree/gamma)."""
+        config = config or PlanConfig(bs=bsr.bs, sb=bsr.sb, backend="bsr")
+        pi = np.arange(bsr.n)
+        host = _PlanHost(pi=pi, inv=pi, coo=None, tree=None, embedding=None)
+        dev = jnp.asarray(pi, jnp.int32)
+        return cls(config, bsr.n, bsr, dev, dev, host)
+
+    # -- stage artifacts ---------------------------------------------------
+
+    @property
+    def tree(self) -> Optional[Tree]:
+        return self.host.tree
+
+    @property
+    def embedding(self) -> Optional[np.ndarray]:
+        return self.host.embedding
+
+    @property
+    def coo(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Reordered COO ``(rows, cols, vals)`` (cluster index space)."""
+        if self.host.coo is None:
+            raise ValueError("plan has no COO pattern (built from_bsr)")
+        return self.host.coo
+
+    def coo_device(self) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Reordered COO as device arrays (cached — the csr backend is
+        called repeatedly and must not re-upload O(nnz) data per call)."""
+        if self.host.coo_dev is None:
+            r, c, v = self.coo
+            self.host.coo_dev = (jnp.asarray(r), jnp.asarray(c),
+                                 jnp.asarray(v))
+        return self.host.coo_dev
+
+    @property
+    def gamma(self) -> Optional[float]:
+        """γ-score (Eq. 4) of the reordered pattern, computed lazily."""
+        if self.host.gamma is None and self.host.coo is not None:
+            r2, c2, _ = self.host.coo
+            self.host.gamma = float(measures.gamma_score(
+                jnp.asarray(r2), jnp.asarray(c2), self.host.sigma, self.n))
+        return self.host.gamma
+
+    @property
+    def fill(self) -> Optional[float]:
+        return self.bsr.fill if self.bsr is not None else None
+
+    @property
+    def stats(self) -> dict:
+        kept = (int(np.asarray(self.bsr.nbr_mask).sum())
+                if self.bsr is not None else 0)
+        return {"n": self.n, "gamma": self.gamma, "fill": self.fill,
+                "kept_tiles": kept,
+                "max_nbr": self.bsr.max_nbr if self.bsr else None,
+                "backend": self.resolve_backend(probe=False)}
+
+    # -- permutation helpers (§2.4 step 2) ---------------------------------
+
+    def permute(self, a):
+        """Original order -> cluster order along the leading axis."""
+        if isinstance(a, np.ndarray):
+            return a[self.host.pi]
+        return jnp.take(jnp.asarray(a), self.pi, axis=0)
+
+    def unpermute(self, a):
+        """Cluster order -> original order along the leading axis."""
+        if isinstance(a, np.ndarray):
+            return a[self.host.inv]
+        return jnp.take(jnp.asarray(a), self.inv, axis=0)
+
+    # -- backend resolution ------------------------------------------------
+
+    def resolve_backend(self, name: Optional[str] = None,
+                        probe: bool = True,
+                        x: Optional[jax.Array] = None) -> str:
+        """Resolve ``name`` (default: the config backend); ``"auto"`` is
+        answered from the per-charge-shape tuned cache, probing the
+        registry with ``x`` (or a synthetic 1-D vector) on first use."""
+        name = name or self.config.backend
+        if name != "auto":
+            return name
+        ndim = x.ndim if x is not None else 1
+        if ndim not in self.host.tuned_backend and probe:
+            if (self.bsr is None
+                    or isinstance(self.bsr.vals, jax.core.Tracer)
+                    or (x is not None and isinstance(x, jax.core.Tracer))):
+                return "bsr"        # probing needs concrete arrays
+            from repro.core.autotune import tune_backend
+            self.host.tuned_backend[ndim], _ = tune_backend(self, x)
+        return self.host.tuned_backend.get(ndim, "bsr")
+
+    # -- interaction (§2.4 step 4) -----------------------------------------
+
+    def apply(self, x: jax.Array, backend: Optional[str] = None,
+              **kwargs) -> jax.Array:
+        """``y = A' x`` in cluster order (``A'`` the reordered matrix)."""
+        name = self.resolve_backend(backend, x=x)
+        if self.bsr is None and name != "csr":
+            raise ValueError(
+                f"profile-only plan has no BSR for backend {name!r}; "
+                "rebuild with with_bsr=True (only 'csr' runs off the COO)")
+        return get_backend(name)(self, x, **kwargs)
+
+    def matvec(self, x: jax.Array, backend: Optional[str] = None,
+               **kwargs) -> jax.Array:
+        """``y = A x`` in original order: unpermute ∘ apply ∘ permute."""
+        return self.unpermute(self.apply(self.permute(x), backend, **kwargs))
+
+    # -- iterative value-update hooks (paper §3) ---------------------------
+
+    def tsne_attractive(self, y: jax.Array) -> jax.Array:
+        """t-SNE attractive force (§3.1) on embedding ``y`` (cluster order);
+        the stored tiles are the (fixed-profile) affinities ``p``."""
+        b = self._require_bsr()
+        return interact.tsne_attractive(b.vals, b.col_idx, b.nbr_mask,
+                                        y, self.n)
+
+    def meanshift_step(self, targets: jax.Array, sources: jax.Array,
+                       h2: float) -> jax.Array:
+        """One mean-shift iteration (§3.2). ``sources`` (n, d) in cluster
+        order; the stored tiles are the 0/1 neighbor pattern."""
+        b = self._require_bsr()
+        s = jnp.asarray(sources)
+        pad = b.n_cb * b.bs - s.shape[0]
+        if pad:
+            s = jnp.pad(s, ((0, pad), (0, 0)))
+        s_blocked = s.reshape(b.n_cb, b.bs, -1)
+        return interact.meanshift_step(b.vals, b.col_idx, s_blocked,
+                                       jnp.asarray(targets), h2, self.n)
+
+    def with_values(self, vals) -> "InteractionPlan":
+        """New plan with the same pattern/ordering but fresh edge values
+        (aligned with ``plan.coo``). Storage shapes are pinned
+        (``max_nbr`` carried over), so the per-backend jitted kernels and
+        any ``jit(plan.apply)``-style closures keep their compile caches;
+        a plan passed *as a jit argument* still retraces once (its static
+        host aux is a fresh identity)."""
+        r2, c2, _ = self.coo
+        vals = np.asarray(vals, np.float32)
+        b = self._require_bsr()
+        bsr = build_bsr(r2, c2, vals, self.n, bs=b.bs, sb=b.sb,
+                        max_nbr=b.max_nbr)
+        host = dataclasses.replace(self.host, coo=(r2, c2, vals),
+                                   coo_dev=None)
+        return InteractionPlan(self.config, self.n, bsr, self.pi, self.inv,
+                               host)
+
+    def _require_bsr(self) -> BSR:
+        if self.bsr is None:
+            raise ValueError("profile-only plan: rebuild with with_bsr=True")
+        return self.bsr
+
+    def __repr__(self) -> str:
+        g = (f"{self.host.gamma:.2f}" if self.host.gamma is not None
+             else "unscored" if self.host.coo is not None else "n/a")
+        f = f"{self.fill:.3f}" if self.fill is not None else "n/a"
+        return (f"InteractionPlan(n={self.n}, ordering="
+                f"{self.config.ordering!r}, bs={self.config.bs}, "
+                f"sb={self.config.sb}, gamma={g}, fill={f}, "
+                f"backend={self.config.backend!r})")
+
+    # -- pytree protocol ---------------------------------------------------
+
+    def tree_flatten(self):
+        return (self.bsr, self.pi, self.inv), (self.config, self.n, self.host)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        config, n, host = aux
+        bsr, pi, inv = children
+        return cls(config, n, bsr, pi, inv, host)
+
+
+jax.tree_util.register_pytree_node(
+    InteractionPlan, InteractionPlan.tree_flatten,
+    InteractionPlan.tree_unflatten)
+
+
+def cluster_order(x, *, ordering: str = "dual_tree", d: int = 3,
+                  bits: int = 10, leaf_size: int = 64,
+                  seed: int = 0) -> np.ndarray:
+    """Pipeline steps 1–2 only (§2.4): the cluster permutation of ``x``,
+    with no interaction pattern built. Cheap when only the ordering is
+    needed (e.g. pre-sorting a fixed source set). Graph-based orderings
+    (``rcm``) need a pattern — use :func:`build_plan` for those.
+    """
+    x = np.asarray(x, np.float32)
+    if ordering == "rcm":
+        raise ValueError("rcm needs an interaction pattern; use build_plan")
+    if ordering == "dual_tree":
+        y = np.asarray(embed(jnp.asarray(x), d))
+        return build_tree(y, bits=bits, leaf_size=leaf_size).perm
+    return ordering_mod.compute_ordering(ordering, x, np.empty(0, np.int64),
+                                         np.empty(0, np.int64), seed=seed)
+
+
+def build_plan(x, *, k: int = 16, ordering: str = "dual_tree", bs: int = 32,
+               sb: int = 8, backend: str = "auto", d: int = 3,
+               bits: int = 10, leaf_size: int = 64, symmetrize: bool = False,
+               seed: int = 0,
+               values: "np.ndarray | Callable | None" = None,
+               sigma: Optional[float] = None,
+               with_bsr: bool = True) -> InteractionPlan:
+    """Run the full pipeline (§2.4) over points ``x`` (n, D).
+
+    Builds the kNN interaction pattern (Eq. 1), orders it, scores it (γ,
+    Eq. 4), and compresses it into the two-level ELL-BSR. ``values`` dresses
+    the pattern: ``None`` -> 1.0 per edge, an array aligned with the
+    (row-major, post-symmetrization) kNN edges, or a callable
+    ``f(rows, cols, dist2) -> vals``. ``with_bsr=False`` builds a
+    profile-only plan (ordering + γ, no storage) — cheap for comparing
+    orderings as in §2.3.
+    """
+    config = PlanConfig(k=k, ordering=ordering, bs=bs, sb=sb,
+                        backend=backend, d=d, bits=bits,
+                        leaf_size=leaf_size, symmetrize=symmetrize,
+                        seed=seed)
+    x = np.asarray(x, np.float32)
+    n = x.shape[0]
+    xd = jnp.asarray(x)
+    rows, cols, d2 = knn.knn_coo(xd, xd, k, exclude_self=True)
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    d2 = np.asarray(d2)
+
+    if symmetrize:
+        # pattern-level symmetrization (first occurrence wins, like the
+        # paper's Fig. 2 interaction patterns) — before values, so a
+        # callable sees the symmetrized edge list
+        rows, cols, d2 = _symmetrize_pattern(rows, cols, d2, n)
+
+    if values is None:
+        vals = np.ones(len(rows), np.float32)
+    elif callable(values):
+        vals = np.asarray(values(rows, cols, d2), np.float32)
+    else:
+        vals = np.asarray(values, np.float32)
+        if vals.shape[0] != len(rows):
+            raise ValueError(
+                f"values has {vals.shape[0]} entries, pattern has "
+                f"{len(rows)} edges (symmetrize={symmetrize})")
+
+    return InteractionPlan.from_coo(rows, cols, vals, n, x=x, config=config,
+                                    sigma=sigma, with_bsr=with_bsr,
+                                    _symmetrized=True)

@@ -1,0 +1,54 @@
+"""Version-tolerant wrappers over JAX APIs that moved between releases.
+
+``shard_map`` has lived in three places/shapes:
+
+  - ``jax.experimental.shard_map.shard_map`` with ``check_rep=``  (<= 0.4.x)
+  - ``jax.shard_map`` with ``check_rep=``                         (~0.5.x)
+  - ``jax.shard_map`` with ``check_vma=``                         (>= 0.6.x)
+
+All repro call sites import ``shard_map`` from here and pass ``check_vma=``;
+the wrapper renames the kwarg to whatever the installed JAX expects.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # newer JAX exports it at top level
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # pragma: no cover - depends on installed JAX
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, **kwargs):
+    """``jax.shard_map`` with the replication-check kwarg normalized."""
+    if "check_vma" in kwargs and "check_vma" not in _PARAMS:
+        check = kwargs.pop("check_vma")
+        if "check_rep" in _PARAMS:
+            kwargs["check_rep"] = check
+    return _shard_map(f, **kwargs)
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` (newer JAX) with the classic constant-folding
+    ``psum(1, axis)`` fallback (static under shard_map/pmap on 0.4.x)."""
+    import jax
+
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """``jax.sharding.AbstractMesh`` across ctor-signature changes.
+
+    Newer JAX takes ``(axis_sizes, axis_names)``; 0.4.x takes a single
+    tuple of ``(name, size)`` pairs.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))

@@ -9,9 +9,13 @@
   interact     multi-level block-segment interactions (step 4)
   dist         shard_map row-block-sharded SpMV
   clusterkv    the pipeline as an LM attention backend (DESIGN.md §3)
+  registry     pluggable SpMV backend registry (csr/bsr/bsr_ml/pallas/dist)
+  autotune     backend autotuning (plan backend="auto") + attention budget
+
+The stages compose into one object through ``repro.api.build_plan``.
 """
 from repro.core import (blocksparse, clusterkv, dist, embedding, hierarchy,
-                        interact, knn, measures, ordering)
+                        interact, knn, measures, ordering, registry)
 
 __all__ = ["blocksparse", "clusterkv", "dist", "embedding", "hierarchy",
-           "interact", "knn", "measures", "ordering"]
+           "interact", "knn", "measures", "ordering", "registry"]

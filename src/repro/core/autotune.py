@@ -1,4 +1,11 @@
-"""Patch-density-guided autotuning of the cluster-sparse attention budget.
+"""Autotuning: SpMV backend selection for plans + attention budget tuning.
+
+``tune_backend`` probes the SpMV backend registry on a plan's real shapes
+and picks the fastest path — this is what ``backend="auto"`` resolves to in
+``repro.api``. The attention-budget half below reuses the paper's γ-score
+idea to size the cluster-sparse attention budget.
+
+Patch-density-guided autotuning of the cluster-sparse attention budget.
 
 The paper's γ-score measures how much interaction mass concentrates into
 dense patches under an ordering (§2.3). The same quantity tunes the LM
@@ -11,13 +18,73 @@ ones automatically fall back toward dense attention.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+import time
+from typing import Dict, Iterable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ClusterKVConfig
 from repro.core import clusterkv as ckv
+from repro.core.registry import backend_names, get_backend
+
+
+# ---------------------------------------------------------------------------
+# SpMV backend autotuning (resolves plan backend="auto")
+# ---------------------------------------------------------------------------
+
+
+def probe_backends(plan, x: Optional[jax.Array] = None,
+                   backends: Optional[Iterable[str]] = None,
+                   warmup: int = 1, iters: int = 3,
+                   atol: float = 1e-3) -> Dict[str, float]:
+    """Median wall time (s) per registered backend on the plan's shapes.
+
+    Backends that raise (missing COO, mesh indivisibility, ...) or disagree
+    with the flat block path by more than ``atol`` max-abs are skipped —
+    a fast-but-wrong backend must never win the autotune.
+    """
+    if x is None:
+        x = jnp.asarray(
+            np.random.default_rng(0).standard_normal(plan.n), jnp.float32)
+    names = tuple(backends) if backends is not None else backend_names()
+    try:
+        ref = np.asarray(jax.block_until_ready(get_backend("bsr")(plan, x)))
+    except Exception:
+        ref = None
+    times: Dict[str, float] = {}
+    for name in names:
+        fn = get_backend(name)
+        try:
+            y = np.asarray(jax.block_until_ready(fn(plan, x)))
+            if ref is not None and np.abs(y - ref).max() > atol:
+                continue
+            for _ in range(warmup):
+                jax.block_until_ready(fn(plan, x))
+            ts = []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(plan, x))
+                ts.append(time.perf_counter() - t0)
+            times[name] = float(np.median(ts))
+        except Exception:
+            continue
+    return times
+
+
+def tune_backend(plan, x: Optional[jax.Array] = None,
+                 backends: Optional[Iterable[str]] = None
+                 ) -> Tuple[str, Dict[str, float]]:
+    """Pick the fastest registered SpMV backend for ``plan``.
+
+    Returns ``(name, per-backend times)``; falls back to ``"bsr"`` when
+    nothing could be probed.
+    """
+    times = probe_backends(plan, x, backends)
+    if not times:
+        return "bsr", times
+    return min(times, key=times.get), times
 
 
 def coverage_curve(q: jax.Array, k: jax.Array, cfg: ClusterKVConfig

@@ -17,6 +17,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -46,6 +47,25 @@ class BSR:
                     a[rb * self.bs:(rb + 1) * self.bs,
                       cb * self.bs:(cb + 1) * self.bs] += v[rb, t]
         return a[:self.n, :self.n]
+
+    # -- pytree protocol: array state as leaves, layout metadata static, so
+    # -- a BSR (and any plan holding one) crosses jit/scan/shard_map freely.
+    def tree_flatten(self):
+        children = (self.col_idx, self.nbr_mask, self.vals)
+        aux = (self.bs, self.sb, self.n, self.n_rb, self.n_cb, self.fill,
+               self.max_nbr)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        bs, sb, n, n_rb, n_cb, fill, max_nbr = aux
+        col_idx, nbr_mask, vals = children
+        return cls(bs=bs, sb=sb, n=n, n_rb=n_rb, n_cb=n_cb, col_idx=col_idx,
+                   nbr_mask=nbr_mask, vals=vals, fill=fill, max_nbr=max_nbr)
+
+
+jax.tree_util.register_pytree_node(
+    BSR, BSR.tree_flatten, BSR.tree_unflatten)
 
 
 def build_bsr(rows: np.ndarray, cols: np.ndarray, vals: Optional[np.ndarray],
@@ -92,6 +112,18 @@ def build_bsr(rows: np.ndarray, cols: np.ndarray, vals: Optional[np.ndarray],
                         count=nnz, dtype=np.int64)
     np.add.at(dense, (rb, slots, rows % bs, cols % bs), vals)
 
+    # mask-consistency invariants the multi-level (bsr_ml) schedule relies
+    # on: padded slots carry column 0 and zero tiles, and within every row
+    # the kept columns are superblock-major sorted (so a superblock's tiles
+    # are contiguous in the ELL slot axis).
+    assert not col_idx[~nbr_mask].any(), "padded slots must point at column 0"
+    assert not dense[~nbr_mask].any(), "padded slots must carry zero tiles"
+    sb_of = col_idx // sb
+    keyed = np.where(nbr_mask, sb_of * np.int64(n_cb) + col_idx,
+                     np.iinfo(np.int64).max)
+    assert (np.diff(keyed, axis=1) >= 0).all(), \
+        "tile lists must be superblock-major sorted"
+
     kept = int(counts.sum())
     fill = nnz / max(kept * bs * bs, 1)
     return BSR(bs=bs, sb=sb, n=n, n_rb=n_rb, n_cb=n_cb,
@@ -99,9 +131,16 @@ def build_bsr(rows: np.ndarray, cols: np.ndarray, vals: Optional[np.ndarray],
                vals=jnp.asarray(dense), fill=fill, max_nbr=m)
 
 
-def random_bsr(key_seed: int, n: int, bs: int, nbr: int, *, banded: bool = False) -> BSR:
+def random_bsr(key_seed: int, n: int, bs: int, nbr: int, *, sb: int = 8,
+               banded: bool = False) -> BSR:
     """Synthetic BSR with exactly ``nbr`` dense tiles per row-block — the
-    micro-benchmark matrices of paper §4.1 (banded best case vs scattered)."""
+    micro-benchmark matrices of paper §4.1 (banded best case vs scattered).
+
+    ``sb`` is threaded into the stored layout: per-row tile lists are sorted
+    superblock-major (ascending column order satisfies this) and every slot
+    is a kept tile, so the ``bsr_ml`` schedule's superblock grouping is
+    honest for these matrices too.
+    """
     rng = np.random.default_rng(key_seed)
     n_rb = (n + bs - 1) // bs
     cols_list = []
@@ -115,7 +154,7 @@ def random_bsr(key_seed: int, n: int, bs: int, nbr: int, *, banded: bool = False
         cols_list.append(c)
     col_idx = np.stack(cols_list).astype(np.int32)
     vals = rng.standard_normal((n_rb, nbr, bs, bs)).astype(np.float32)
-    return BSR(bs=bs, sb=8, n=n, n_rb=n_rb, n_cb=n_rb,
+    return BSR(bs=bs, sb=sb, n=n, n_rb=n_rb, n_cb=n_rb,
                col_idx=jnp.asarray(col_idx),
                nbr_mask=jnp.ones((n_rb, nbr), bool),
                vals=jnp.asarray(vals), fill=1.0, max_nbr=nbr)

@@ -28,30 +28,16 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.embedding import pca_project_det as _pca_project
 from repro.core.hierarchy import morton_codes
 
 NEG_INF = -1e30
 
 
 # ---------------------------------------------------------------------------
-# steps 1+2: embed + cluster order
+# steps 1+2: embed + cluster order (embedding shared with core.embedding —
+# the same §2.4 step-1 projection the InteractionPlan pipeline uses)
 # ---------------------------------------------------------------------------
-
-
-def _pca_project(k: jax.Array, d: int, iters: int = 4) -> jax.Array:
-    """Top-d principal projection of k (S, dh) -> (S, d). Deterministic
-    start (first d columns of a fixed rotation) keeps it jit/vmap friendly."""
-    s, dh = k.shape
-    kc = (k - jnp.mean(k, axis=0, keepdims=True)).astype(jnp.float32)
-    q = jnp.eye(dh, d, dtype=jnp.float32)
-
-    def body(q, _):
-        z = kc.T @ (kc @ q)
-        q, _ = jnp.linalg.qr(z)
-        return q, None
-
-    q, _ = jax.lax.scan(body, q, None, length=iters)
-    return kc @ q
 
 
 @functools.partial(jax.jit, static_argnames=("d", "bits"))

@@ -10,13 +10,15 @@ shard's row-blocks.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
 from repro.core.blocksparse import BSR
+from repro.core.registry import register_backend
 
 
 def spmv_sharded(bsr: BSR, x: jax.Array, mesh: Mesh, axis: str = "data"
@@ -24,7 +26,13 @@ def spmv_sharded(bsr: BSR, x: jax.Array, mesh: Mesh, axis: str = "data"
     """y = A x with row-blocks sharded over ``axis``.
 
     Requires n_rb divisible by the axis size (pad the matrix if not).
+    Single-vector charges only: the local einsum and the final reshape
+    assume ``x`` of shape (n,) — reject (n, f) loudly rather than
+    scrambling it.
     """
+    if x.ndim != 1:
+        raise ValueError(f"spmv_sharded supports 1-D charges only, "
+                         f"got x.shape={x.shape}")
     n_rb = bsr.vals.shape[0]
     size = mesh.shape[axis]
     if n_rb % size:
@@ -45,3 +53,21 @@ def spmv_sharded(bsr: BSR, x: jax.Array, mesh: Mesh, axis: str = "data"
     xp = jnp.pad(x, (0, pad)) if pad else x
     y = f(bsr.vals, bsr.col_idx, xp)
     return y.reshape(-1)[:bsr.n]
+
+
+@register_backend("dist")
+def _dist_backend(plan, x: jax.Array, *, mesh: Mesh | None = None,
+                  axis: str = "data", **_kw) -> jax.Array:
+    """InteractionPlan SpMV with row-blocks sharded over a mesh axis.
+
+    With no mesh given, builds a 1-axis mesh over the largest device count
+    that divides the plan's row-block count (so the default works for any
+    plan regardless of how many host devices XLA was forced to expose).
+    Only single-vector charges (``x`` of shape (n,)) are supported; with an
+    explicit mesh, ``n_rb`` must divide by the axis size — autotuning
+    skips this backend otherwise.
+    """
+    if mesh is None:
+        size = math.gcd(plan.bsr.vals.shape[0], jax.device_count())
+        mesh = jax.make_mesh((size,), (axis,))
+    return spmv_sharded(plan.bsr, x, mesh, axis)

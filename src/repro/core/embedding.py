@@ -57,3 +57,24 @@ def embed(x: jax.Array, d: int, iters: int = 8,
     axes, _ = pca_axes(x, d, iters, key)
     xc = x - jnp.mean(x, axis=0, keepdims=True)
     return xc @ axes
+
+
+def pca_project_det(x: jax.Array, d: int, iters: int = 4) -> jax.Array:
+    """Top-``d`` principal projection with a deterministic start.
+
+    Same subspace iteration as :func:`pca_axes` but seeded from the first
+    ``d`` coordinate axes instead of a random key, so it is jit/vmap
+    friendly with no PRNG threading — the per-head embedding step of the
+    cluster-sparse attention backend (core.clusterkv) runs through this.
+    """
+    _, dh = x.shape
+    xc = (x - jnp.mean(x, axis=0, keepdims=True)).astype(jnp.float32)
+    q = jnp.eye(dh, d, dtype=jnp.float32)
+
+    def body(q, _):
+        z = xc.T @ (xc @ q)
+        q, _ = jnp.linalg.qr(z)
+        return q, None
+
+    q, _ = jax.lax.scan(body, q, None, length=iters)
+    return xc @ q

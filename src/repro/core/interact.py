@@ -2,7 +2,10 @@
 
 The interaction ``y = A x`` is computed block-by-block: every kept tile is a
 dense (bs, bs) block multiplying a contiguous charge segment — the paper's
-"block-segment multiplication". Three paths:
+"block-segment multiplication". The low-level paths live here and are
+published through the backend registry (``repro.core.registry``) under the
+names ``csr`` / ``bsr`` / ``bsr_ml``; prefer ``repro.api`` plans over
+calling them directly:
 
   spmv_csr      element-wise gather baseline (scattered/CSR semantics)
   spmv_bsr      flat single-level block path (one einsum over kept tiles)
@@ -10,7 +13,8 @@ dense (bs, bs) block multiplying a contiguous charge segment — the paper's
                 working set per step is a superblock stripe (the TPU analog
                 of the paper's multi-level cache blocking)
   spmv_pallas   Pallas kernel (kernels/bsr_spmv.py) — MXU tiles with
-                scalar-prefetch column indices
+                scalar-prefetch column indices; registered as ``pallas``
+                by kernels/ops.py
 
 Iterative-application value updates (t-SNE attractive force, mean shift) are
 computed *blockwise dense* from the current coordinates — the TPU-native
@@ -19,12 +23,14 @@ replacement for per-edge gathers (DESIGN.md §2).
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.blocksparse import BSR
+from repro.core.registry import register_backend
 
 
 # ---------------------------------------------------------------------------
@@ -93,15 +99,40 @@ def spmv_bsr_ml(bsr_vals: jax.Array, col_idx: jax.Array, x: jax.Array,
     return y[:, 0] if squeeze else y
 
 
+# -- registry backends (plan, x) -> y, cluster index space ------------------
+
+
+@register_backend("csr")
+def _csr_backend(plan, x: jax.Array, **_kw) -> jax.Array:
+    """Per-edge gather baseline over the plan's reordered COO pattern."""
+    rows, cols, vals = plan.coo_device()
+    return spmv_csr(vals, rows, cols, x, plan.n)
+
+
+@register_backend("bsr")
+def _bsr_backend(plan, x: jax.Array, **_kw) -> jax.Array:
+    b = plan.bsr
+    return spmv_bsr(b.vals, b.col_idx, x, plan.n)
+
+
+@register_backend("bsr_ml")
+def _bsr_ml_backend(plan, x: jax.Array, **_kw) -> jax.Array:
+    b = plan.bsr
+    return spmv_bsr_ml(b.vals, b.col_idx, x, plan.n, b.sb)
+
+
 def spmv(bsr: BSR, x: jax.Array, path: str = "bsr") -> jax.Array:
-    if path == "bsr":
-        return spmv_bsr(bsr.vals, bsr.col_idx, x, bsr.n)
-    if path == "bsr_ml":
-        return spmv_bsr_ml(bsr.vals, bsr.col_idx, x, bsr.n, bsr.sb)
-    if path == "pallas":
-        from repro.kernels.ops import bsr_spmv
-        return bsr_spmv(bsr.vals, bsr.col_idx, x, bsr.n)
-    raise ValueError(path)
+    """Deprecated shim: string-dispatched SpMV over a bare BSR.
+
+    Use ``repro.api.build_plan(...).apply(x, backend=...)`` — any registered
+    backend name works here too (``csr`` excepted: a bare BSR has no COO).
+    """
+    warnings.warn("interact.spmv(bsr, x, path) is deprecated; use "
+                  "repro.api plans and the backend registry",
+                  DeprecationWarning, stacklevel=2)
+    from repro.api import InteractionPlan
+    from repro.core.registry import get_backend
+    return get_backend(path)(InteractionPlan.from_bsr(bsr), x)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,69 @@
+"""SpMV backend registry — the pluggable compute layer of an InteractionPlan.
+
+Replaces the old string dispatch in ``core.interact.spmv`` with a registry
+keyed by backend name. A backend is a callable
+
+    fn(plan: InteractionPlan, x: jax.Array, **kwargs) -> jax.Array
+
+computing ``y = A x`` in the plan's (cluster-ordered) index space. Built-in
+backends register themselves on first use:
+
+  csr       per-edge gather baseline           (core.interact, needs COO)
+  bsr       flat single-level block path       (core.interact)
+  bsr_ml    multi-level superblock scan        (core.interact)
+  pallas    MXU Pallas kernel                  (kernels.ops)
+  dist      shard_map row-block-sharded SpMV   (core.dist, needs a mesh)
+
+``core.autotune.tune_backend`` probes this registry to resolve
+``backend="auto"``; user code can ``register_backend`` custom paths and they
+become visible to autotuning and ``plan.apply`` immediately.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+_BACKENDS: Dict[str, Callable] = {}
+_DEFAULTS_LOADED = False
+
+# modules that register the built-in backends at import time
+_DEFAULT_PROVIDERS = ("repro.core.interact", "repro.kernels.ops",
+                      "repro.core.dist")
+
+
+def register_backend(name: str, fn: Callable | None = None):
+    """Register ``fn`` as SpMV backend ``name`` (usable as a decorator)."""
+
+    def _register(f: Callable) -> Callable:
+        _BACKENDS[name] = f
+        return f
+
+    return _register if fn is None else _register(fn)
+
+
+def _ensure_defaults() -> None:
+    global _DEFAULTS_LOADED
+    if _DEFAULTS_LOADED:
+        return
+    import importlib
+
+    for mod in _DEFAULT_PROVIDERS:
+        importlib.import_module(mod)
+    # only latch after every provider imported: a transient import failure
+    # surfaces on this call and is retried on the next, instead of leaving
+    # a silently partial registry
+    _DEFAULTS_LOADED = True
+
+
+def get_backend(name: str) -> Callable:
+    _ensure_defaults()
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown SpMV backend {name!r}; registered: {backend_names()}"
+        ) from None
+
+
+def backend_names() -> Tuple[str, ...]:
+    _ensure_defaults()
+    return tuple(sorted(_BACKENDS))

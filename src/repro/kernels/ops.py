@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.registry import register_backend
 from repro.kernels import block_attention as _ba
 from repro.kernels import bsr_spmv as _bsr
 from repro.kernels import gamma_score as _gs
@@ -19,6 +20,13 @@ from repro.kernels import gamma_score as _gs
 
 def _interpret() -> bool:
     return jax.default_backend() == "cpu"
+
+
+@register_backend("pallas")
+def _pallas_backend(plan, x: jax.Array, **_kw) -> jax.Array:
+    """InteractionPlan SpMV via the Pallas MXU kernel."""
+    b = plan.bsr
+    return bsr_spmv(b.vals, b.col_idx, x, plan.n)
 
 
 def bsr_spmv(vals: jax.Array, col_idx: jax.Array, x: jax.Array,

@@ -20,7 +20,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
 from repro.configs.base import ClusterKVConfig
 from repro.core import clusterkv as ckv

@@ -20,7 +20,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.models import attention as attn

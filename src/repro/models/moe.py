@@ -20,7 +20,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro import compat
+from repro.compat import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.models import param as pm
@@ -98,7 +99,7 @@ def _route_ep(xf, eidx, gates, wg, wu, wd, capacity: int, ep_axis: str):
     t, k = eidx.shape
     d = xf.shape[-1]
     e_local = wg.shape[0]
-    n_dev = jax.lax.axis_size(ep_axis)
+    n_dev = compat.axis_size(ep_axis)
     e = e_local * n_dev
     cap = capacity
     flat_e = eidx.reshape(-1)

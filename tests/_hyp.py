@@ -1,0 +1,68 @@
+"""Hypothesis import shim: property tests degrade to a few deterministic
+examples when hypothesis is not installed, instead of erroring at collection.
+
+Usage in test modules::
+
+    from _hyp import given, settings, st
+
+With hypothesis installed these are the real objects; without it, ``given``
+zips up to three deterministic samples per keyword strategy and runs the
+test body once per sample tuple (kwargs-style ``@given`` only).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, samples):
+            self.samples = list(samples)
+
+    class st:  # noqa: N801 - mimics hypothesis.strategies
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy([lo, (lo + hi) // 2, hi])
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Strategy([lo, (lo + hi) / 2.0, hi])
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True])
+
+        @staticmethod
+        def sampled_from(xs):
+            return _Strategy(xs)
+
+    def settings(*_a, **_kw):
+        return lambda f: f
+
+    def given(**strats):
+        names = list(strats)
+        pools = [strats[n].samples for n in names]
+        n_cases = min(3, max(len(p) for p in pools))
+        cases = [{n: pools[j][i % len(pools[j])] for j, n in enumerate(names)}
+                 for i in range(n_cases)]
+
+        def deco(f):
+            @functools.wraps(f)
+            def wrapper(*args, **kwargs):
+                for case in cases:
+                    f(*args, **case, **kwargs)
+
+            # hide the sampled params from pytest's fixture resolution
+            del wrapper.__wrapped__
+            sig = inspect.signature(f)
+            keep = [p for p in sig.parameters.values() if p.name not in strats]
+            wrapper.__signature__ = sig.replace(parameters=keep)
+            return wrapper
+
+        return deco

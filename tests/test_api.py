@@ -1,0 +1,267 @@
+"""Unified planner API: plan round-trip, backend equivalence, pytree
+contract, registry behavior, autotuning (ISSUE 1 tentpole)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import blocksparse, interact
+from repro.data.pipeline import feature_mixture
+
+N, D, K = 512, 64, 8
+
+
+@pytest.fixture(scope="module")
+def points():
+    return feature_mixture(N, D, n_clusters=8, seed=0)
+
+
+@pytest.fixture(scope="module")
+def plan(points):
+    rng = np.random.default_rng(0)
+    return api.build_plan(points, k=K, ordering="dual_tree", bs=16, sb=4,
+                          backend="bsr",
+                          values=lambda r, c, d2: rng.random(len(r)))
+
+
+def test_plan_owns_every_stage(plan):
+    assert plan.embedding is not None and plan.embedding.shape == (N, 3)
+    assert plan.tree is not None and plan.tree.n_levels >= 2
+    assert sorted(plan.host.pi) == list(range(N))
+    assert plan.gamma is not None and plan.gamma > 0
+    assert plan.bsr is not None and 0 < plan.fill <= 1
+    r, c, v = plan.coo
+    assert len(r) == len(c) == len(v) == N * K
+
+
+def test_permute_round_trip(plan):
+    x = np.random.default_rng(1).standard_normal((N, 3)).astype(np.float32)
+    np.testing.assert_array_equal(plan.unpermute(plan.permute(x)), x)
+    xj = jnp.asarray(x)
+    np.testing.assert_array_equal(
+        np.asarray(plan.unpermute(plan.permute(xj))), x)
+
+
+def test_plan_round_trip_matches_unordered_csr(plan):
+    """unpermute(apply(permute(x))) == A x on the unordered graph."""
+    x = jnp.asarray(np.random.default_rng(2).standard_normal(N), jnp.float32)
+    r2, c2, v = plan.coo
+    rows0, cols0 = plan.host.pi[r2], plan.host.pi[c2]  # original labels
+    want = interact.spmv_csr(jnp.asarray(v), jnp.asarray(rows0),
+                             jnp.asarray(cols0), x, N)
+    got = plan.unpermute(plan.apply(plan.permute(x)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    got_mv = plan.matvec(x)
+    np.testing.assert_allclose(np.asarray(got_mv), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", ["csr", "bsr", "bsr_ml", "pallas"])
+def test_backend_equivalence(plan, backend):
+    """All registered single-host backends agree on the same plan."""
+    x = jnp.asarray(np.random.default_rng(3).standard_normal(N), jnp.float32)
+    ref = np.asarray(plan.apply(x, backend="csr"))
+    got = np.asarray(plan.apply(x, backend=backend))
+    assert np.abs(got - ref).max() <= 1e-4
+
+
+def test_dist_backend_matches(plan):
+    x = jnp.asarray(np.random.default_rng(4).standard_normal(N), jnp.float32)
+    ref = np.asarray(plan.apply(x, backend="bsr"))
+    got = np.asarray(plan.apply(x, backend="dist"))
+    assert np.abs(got - ref).max() <= 1e-4
+
+
+def test_bsr_pytree_round_trip(plan):
+    leaves, treedef = jax.tree_util.tree_flatten(plan.bsr)
+    assert len(leaves) == 3                       # col_idx, nbr_mask, vals
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(back, blocksparse.BSR)
+    assert (back.bs, back.sb, back.n, back.max_nbr) == \
+        (plan.bsr.bs, plan.bsr.sb, plan.bsr.n, plan.bsr.max_nbr)
+    np.testing.assert_array_equal(np.asarray(back.vals),
+                                  np.asarray(plan.bsr.vals))
+
+
+def test_plan_pytree_crosses_jit(plan):
+    """A plan flattens to leaves and can be passed through jit as an arg."""
+    x = jnp.asarray(np.random.default_rng(5).standard_normal(N), jnp.float32)
+    leaves, treedef = jax.tree_util.tree_flatten(plan)
+    plan2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    ref = np.asarray(plan.apply(x, backend="bsr"))
+    np.testing.assert_allclose(np.asarray(plan2.apply(x, backend="bsr")),
+                               ref, rtol=1e-5, atol=1e-5)
+
+    f = jax.jit(lambda p, xx: p.apply(xx, backend="bsr"))
+    np.testing.assert_allclose(np.asarray(f(plan, x)), ref,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_jit_apply_retraces_only_on_shape_change(plan):
+    traces = []
+
+    @jax.jit
+    def f(x):
+        traces.append(x.shape)
+        return plan.apply(x, backend="bsr")
+
+    rng = np.random.default_rng(6)
+    f(jnp.asarray(rng.standard_normal(N), jnp.float32))
+    f(jnp.asarray(rng.standard_normal(N), jnp.float32))
+    assert len(traces) == 1                       # same shape: cached
+    f(jnp.asarray(rng.standard_normal((N, 2)), jnp.float32))
+    assert len(traces) == 2                       # new shape: one retrace
+
+
+def test_registry_unknown_and_custom_backend(plan):
+    with pytest.raises(ValueError, match="unknown SpMV backend"):
+        plan.apply(jnp.zeros(N), backend="no_such_backend")
+
+    @api.register_backend("test_double_bsr")
+    def _double(p, x, **kw):
+        return 2.0 * api.get_backend("bsr")(p, x)
+
+    try:
+        assert "test_double_bsr" in api.backend_names()
+        x = jnp.asarray(np.random.default_rng(7).standard_normal(N),
+                        jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(plan.apply(x, backend="test_double_bsr")),
+            2.0 * np.asarray(plan.apply(x, backend="bsr")),
+            rtol=1e-6)
+    finally:
+        from repro.core import registry
+        registry._BACKENDS.pop("test_double_bsr", None)
+
+
+def test_auto_backend_resolves_and_caches(points):
+    plan = api.build_plan(points, k=K, bs=16, sb=4, backend="auto")
+    name = plan.resolve_backend()
+    assert name in api.backend_names()
+    assert plan.host.tuned_backend[1] == name     # cached per charge ndim
+    x = jnp.asarray(np.random.default_rng(8).standard_normal(N), jnp.float32)
+    ref = np.asarray(plan.apply(x, backend="csr"))
+    np.testing.assert_allclose(np.asarray(plan.apply(x)), ref,
+                               rtol=1e-4, atol=1e-4)
+    # multi-feature charges tune separately: dist (1-D only) can never be
+    # pinned for (n, f), and the result still matches csr
+    xf = jnp.asarray(np.random.default_rng(9).standard_normal((N, 3)),
+                     jnp.float32)
+    reff = np.asarray(plan.apply(xf, backend="csr"))
+    np.testing.assert_allclose(np.asarray(plan.apply(xf)), reff,
+                               rtol=1e-4, atol=1e-4)
+    assert plan.resolve_backend(x=xf) != "dist"
+
+
+def test_dist_backend_rejects_2d():
+    plan = api.InteractionPlan.from_bsr(blocksparse.random_bsr(0, 256, 16, 4))
+    with pytest.raises(ValueError, match="1-D charges"):
+        plan.apply(jnp.ones((256, 2)), backend="dist")
+
+
+def test_cluster_order_matches_plan_ordering(points):
+    pi = api.cluster_order(points, ordering="dual_tree")
+    plan = api.build_plan(points, k=K, with_bsr=False)
+    np.testing.assert_array_equal(pi, plan.host.pi)
+    with pytest.raises(ValueError, match="rcm"):
+        api.cluster_order(points, ordering="rcm")
+
+
+def test_profile_only_plan(points):
+    profile = api.build_plan(points, k=K, ordering="scattered",
+                             with_bsr=False)
+    assert profile.bsr is None and profile.gamma is not None
+    with pytest.raises(ValueError, match="profile-only"):
+        profile.tsne_attractive(jnp.zeros((N, 2)))
+    with pytest.raises(ValueError, match="profile-only"):
+        profile.apply(jnp.zeros(N), backend="bsr")
+    # csr still runs off the COO pattern
+    assert profile.apply(jnp.ones(N), backend="csr").shape == (N,)
+
+
+def test_with_values_same_pattern(plan):
+    r2, c2, _ = plan.coo
+    new_vals = np.random.default_rng(9).random(len(r2)).astype(np.float32)
+    plan2 = plan.with_values(new_vals)
+    assert plan2.bsr.vals.shape == plan.bsr.vals.shape   # pinned max_nbr
+    x = jnp.asarray(np.random.default_rng(10).standard_normal(N),
+                    jnp.float32)
+    want = interact.spmv_csr(jnp.asarray(new_vals), jnp.asarray(r2),
+                             jnp.asarray(c2), x, N)
+    np.testing.assert_allclose(np.asarray(plan2.apply(x, backend="bsr")),
+                               np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_from_coo_identity_and_hooks():
+    """Identity-ordered plan: mean-shift hook equals the dense reference."""
+    rng = np.random.default_rng(11)
+    n, k, d = 96, 6, 3
+    src = rng.standard_normal((n, d)).astype(np.float32)
+    t = src + 0.1 * rng.standard_normal((n, d)).astype(np.float32)
+    rows = np.repeat(np.arange(n), k)
+    cols = rng.integers(0, n, n * k)
+    key = rows.astype(np.int64) * n + cols
+    _, first = np.unique(key, return_index=True)
+    rows, cols = rows[first], cols[first]
+    plan = api.InteractionPlan.from_coo(rows, cols, None, n, bs=16)
+    np.testing.assert_array_equal(plan.host.pi, np.arange(n))
+
+    got = np.asarray(plan.meanshift_step(jnp.asarray(t), jnp.asarray(src),
+                                         0.5))
+    pattern = np.zeros((n, n), np.float32)
+    pattern[rows, cols] = 1.0
+    w = np.exp(-((t[:, None, :] - src[None]) ** 2).sum(-1) / 0.5) * pattern
+    want = (w @ src) / np.maximum(w.sum(1, keepdims=True), 1e-12)
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+def test_from_coo_honors_symmetrize():
+    rows = np.array([0, 1])
+    cols = np.array([1, 2])
+    plan = api.InteractionPlan.from_coo(rows, cols, None, 4,
+                                        symmetrize=True, bs=2, sb=2)
+    r, c, v = plan.coo
+    assert len(r) == 4                            # union with the transpose
+    dense = plan.bsr.to_dense()
+    np.testing.assert_allclose(dense, dense.T)
+    assert plan.config.symmetrize is True
+
+
+def test_tsne_hook_matches_edges(plan):
+    r2, c2, v = plan.coo
+    y = np.random.default_rng(12).standard_normal((N, 2)).astype(np.float32)
+    got = np.asarray(plan.tsne_attractive(jnp.asarray(y)))
+    want = np.zeros((N, 2), np.float32)
+    for r, c, pv in zip(r2, c2, v):
+        diff = y[r] - y[c]
+        q = 1.0 / (1.0 + (diff ** 2).sum())
+        want[r] += pv * q * diff
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+def test_spmv_shim_still_works_and_warns():
+    bsr = blocksparse.random_bsr(0, 256, 16, 4, sb=4)
+    x = jnp.asarray(np.random.default_rng(13).standard_normal(256),
+                    jnp.float32)
+    with pytest.warns(DeprecationWarning):
+        y = interact.spmv(bsr, x, "bsr")
+    plan = api.InteractionPlan.from_bsr(bsr)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(plan.apply(x, backend="bsr")),
+                               rtol=1e-6)
+
+
+def test_random_bsr_threads_sb():
+    bsr = blocksparse.random_bsr(0, 256, 16, 4, sb=2)
+    assert bsr.sb == 2
+    assert bool(np.asarray(bsr.nbr_mask).all())
+
+
+def test_plan_config_is_hashable():
+    a = api.PlanConfig(k=8)
+    b = dataclasses.replace(a)
+    assert hash(a) == hash(b) and a == b

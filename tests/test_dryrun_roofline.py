@@ -8,10 +8,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
 def make_mesh_2x2():
-    devs = np.array(jax.devices()[:1] * 4).reshape(2, 2)
     # single-device "mesh" stand-ins don't work for NamedSharding paths;
-    # use abstract mesh for spec fitting
-    return jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    # use abstract mesh for spec fitting (ctor signature varies by version)
+    from repro.compat import abstract_mesh
+    return abstract_mesh((2, 2), ("data", "model"))
 
 
 def test_parse_collectives_sections_and_bytes():

@@ -3,7 +3,7 @@ tests on the system's ordering invariants."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import hierarchy
 
