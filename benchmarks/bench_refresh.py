@@ -1,0 +1,87 @@
+"""Plan lifecycle: refresh vs rebuild — wall-clock and resulting γ.
+
+Simulates the paper's §3.2 non-stationary loop with two drift shapes:
+
+  coherent   one cluster contracts toward its mode (a real mean-shift
+             step: migration is spatially correlated, so the migrated
+             rows share a few row-blocks) — the patch tier's home turf,
+             and the acceptance scenario: <10% migrated points must
+             refresh >=3x faster than a from-scratch ``build_plan`` with
+             γ within 5% of a full rebuild
+  uniform    every point steps toward its center (migrators spread over
+             all row-blocks — the patch tier's worst case; reported, not
+             asserted: the win here comes from skipping the O(n^2) kNN,
+             not from tile locality)
+
+  PYTHONPATH=src:. python benchmarks/run.py --only bench_refresh
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timeit
+from repro import api
+
+
+def _mixture(n: int, d: int, n_clusters: int, seed: int):
+    rng = np.random.default_rng(seed)
+    basis = rng.standard_normal((n_clusters, d)) / np.sqrt(n_clusters)
+    centers = (rng.standard_normal((n_clusters, n_clusters)) @ basis
+               * 4.0).astype(np.float32)
+    labels = rng.integers(0, n_clusters, n)
+    x = (centers[labels] + 0.5 * rng.standard_normal((n, d))
+         ).astype(np.float32)
+    return x, centers, labels, rng
+
+
+def _drift(x, centers, labels, rng, shape: str) -> np.ndarray:
+    if shape == "coherent":
+        # one cluster's mean-shift step: points of cluster 0 contract
+        x2 = x.copy()
+        sel = labels == 0
+        x2[sel] += 0.5 * (centers[0] - x[sel])
+        return x2
+    # uniform: everyone steps a little (scattered sub-cell motion)
+    x2 = x + 0.02 * (centers[labels] - x)
+    x2 += 0.003 * rng.standard_normal(x.shape).astype(np.float32)
+    return x2
+
+
+def run(emit) -> None:
+    k, n = 16, 4096
+    for shape in ("coherent", "uniform"):
+        x, centers, labels, rng = _mixture(n, 32, 16, seed=0)
+        x2 = _drift(x, centers, labels, rng, shape)
+        plan = api.build_plan(x, k=k, bs=32, sb=8, backend="bsr",
+                              ell_slack=2)
+
+        t_refresh = timeit(lambda: api.refresh_plan(plan, x2),
+                           warmup=1, iters=5)
+        t_build = timeit(lambda: api.build_plan(x2, config=plan.config),
+                         warmup=1, iters=5)
+
+        refreshed = api.refresh_plan(plan, x2)
+        rebuilt = api.build_plan(x2, config=plan.config)
+        st = refreshed.refresh_stats
+        speedup = t_build / t_refresh
+        gamma_ratio = refreshed.gamma / rebuilt.gamma
+
+        emit(f"bench_refresh/{shape}_n{n}_refresh,{t_refresh*1e6:.0f},"
+             f"action={st.last_action};migrated={st.last_migrated_frac:.3f}")
+        emit(f"bench_refresh/{shape}_n{n}_rebuild,{t_build*1e6:.0f},"
+             f"speedup={speedup:.2f}x;gamma_ratio={gamma_ratio:.3f}")
+
+        if shape == "coherent":
+            # ISSUE 2 acceptance: <10% migrated -> >=3x faster, γ within 5%
+            assert st.last_migrated_frac < 0.10, (
+                f"drift scenario migrated {st.last_migrated_frac:.1%} of "
+                "points; benchmark is meant to exercise the patch tier")
+            assert speedup >= 3.0, (
+                f"refresh speedup {speedup:.2f}x < 3x over build_plan")
+            assert abs(1.0 - gamma_ratio) <= 0.05, (
+                f"refreshed γ {refreshed.gamma:.3f} not within 5% of "
+                f"rebuilt γ {rebuilt.gamma:.3f}")
+
+
+if __name__ == "__main__":
+    run(print)

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   fig3_throughput  paper Fig. 3  (interaction throughput per ordering)
   micro_blas       paper §4.1    (banded best case vs scattered base case)
   attention_bench  beyond-paper  (cluster-sparse vs dense attention)
+  bench_refresh    beyond-paper  (plan refresh vs rebuild, §3.2 drift)
 """
 from __future__ import annotations
 
@@ -20,14 +21,15 @@ def main() -> None:
                     help="comma-separated subset of benchmark names")
     args = ap.parse_args()
 
-    from benchmarks import (attention_bench, fig1_orderings, fig3_throughput,
-                            micro_blas, table1_gamma)
+    from benchmarks import (attention_bench, bench_refresh, fig1_orderings,
+                            fig3_throughput, micro_blas, table1_gamma)
     suites = {
         "fig1_orderings": fig1_orderings.run,
         "table1_gamma": table1_gamma.run,
         "fig3_throughput": fig3_throughput.run,
         "micro_blas": micro_blas.run,
         "attention_bench": attention_bench.run,
+        "bench_refresh": bench_refresh.run,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     unknown = [c for c in chosen if c not in suites]

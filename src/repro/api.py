@@ -34,6 +34,44 @@ Plans and their BSR are JAX pytrees: array state (tiles, indices,
 permutation) flattens to leaves while layout metadata and host-side
 artifacts (tree, COO, stats) ride along as static aux data, so plans cross
 ``jit`` / ``scan`` / ``shard_map`` boundaries intact.
+
+Plan lifecycle: build -> apply -> refresh -> persist
+----------------------------------------------------
+
+A plan is a *refreshable, durable* asset, not a one-shot artifact. For the
+paper's iterative case studies (§3.1 t-SNE, §3.2 mean shift) the points
+move every iteration; rebuilding embedding -> tree -> ordering -> BSR from
+scratch each time forfeits exactly the cost the multi-scale structure
+amortizes. Instead::
+
+    plan = build_plan(x, k=16)                  # build (once)
+    y = plan.matvec(charges)                    # apply (every iteration)
+    for step in range(iters):
+        x = advance(x)                          # points move
+        plan = plan.refresh(x)                  # patch / re-bucket / rebuild
+    ckpt = Checkpointer(dir)
+    ckpt.save_plan(step, plan, blocking=True)   # persist (serving restarts
+    plan, _ = ckpt.restore_plan(                #   skip planning; stale
+        refresh_with=x_current)                 #   plans refresh on load)
+
+``refresh`` re-embeds the moved points through the *stored* PCA map, codes
+old and new coordinates against a joint bounding box, and compares Morton
+cells at the tree's leaf granularity. The migrated fraction (and recorded
+fill/γ degradation — ``core.measures.gamma_drift``) picks one of three
+escalation tiers against ``PlanConfig.refresh_policy``:
+
+  patch      permutation kept; kNN recomputed for migrated rows only and
+             the affected BSR row-block tiles patched in place
+  rebucket   stable partial reorder (unmoved runs keep their order; see
+             ``core.ordering.stable_partial_reorder``), tree levels
+             re-bucketed from new codes, storage rebuilt — but the PCA
+             embedding map, quantization frame, and unmigrated kNN rows
+             are all reused
+  rebuild    full ``build_plan`` (fresh embedding fit, tree, kNN, BSR)
+
+γ and fill are recomputed lazily after a refresh (``plan.gamma`` /
+``plan.gamma_drift()``), so the hot loop never pays for scoring it does
+not read.
 """
 from __future__ import annotations
 
@@ -45,17 +83,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import interact, knn, measures
+from repro.core import hierarchy, interact, knn, measures
 from repro.core import ordering as ordering_mod
-from repro.core.blocksparse import BSR, build_bsr
-from repro.core.embedding import embed
+from repro.core.blocksparse import BSR, build_bsr, patch_bsr
+from repro.core.embedding import apply_pca_map, embed, pca_map
 from repro.core.hierarchy import Tree, build_tree
 from repro.core.ordering import ORDERINGS  # noqa: F401  (re-export)
 from repro.core.registry import (backend_names, get_backend,  # noqa: F401
                                  register_backend)
 
 __all__ = [
-    "PlanConfig", "InteractionPlan", "build_plan", "cluster_order",
+    "PlanConfig", "InteractionPlan", "RefreshStats", "build_plan",
+    "refresh_plan", "cluster_order",
     "ORDERINGS", "register_backend", "backend_names", "get_backend",
 ]
 
@@ -73,6 +112,35 @@ class PlanConfig:
     leaf_size: int = 64          # adaptive-tree leaf bound (§2.4 step 2)
     symmetrize: bool = False     # symmetrize the kNN pattern
     seed: int = 0
+    # -- refresh lifecycle (refresh_plan escalation policy) -----------------
+    refresh_policy: str = "auto"  # auto | patch | rebucket | rebuild
+    patch_frac: float = 0.10     # auto: ordering drift <= this -> patch
+    rebuild_frac: float = 0.40   # auto: ordering drift > this -> rebuild
+    drift_tol: float = 0.25      # fill/γ degradation that forces escalation
+    ell_slack: int = 0           # spare ELL tile slots per row-block, so
+    #   an in-place patch can add neighbor tiles without escalating
+
+
+@dataclasses.dataclass
+class RefreshStats:
+    """Lifecycle telemetry of a plan lineage (mutable, host-side).
+
+    ``ordering_drift_frac`` is the fraction of points whose Morton cell
+    differs from the cell the *current ordering* was derived from (resets
+    on rebucket/rebuild); ``last_migrated_frac`` is measured against the
+    previous refresh (what the last patch actually had to touch).
+    """
+    builds: int = 1
+    patches: int = 0
+    rebuckets: int = 0
+    rebuilds: int = 0
+    last_action: str = "build"
+    last_migrated_frac: float = 0.0
+    ordering_drift_frac: float = 0.0
+    patched_rows: int = 0
+    fill0: Optional[float] = None     # fill at last (re)build of the layout
+    gamma0: Optional[float] = None    # γ reference for gamma_drift
+    degraded: bool = False            # fill drift beyond tol -> escalate
 
 
 @dataclasses.dataclass(eq=False)
@@ -86,13 +154,24 @@ class _PlanHost:
     inv: np.ndarray                      # original index -> sorted position
     coo: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]]  # reordered
     tree: Optional[Tree]
-    embedding: Optional[np.ndarray]      # (n, d) PCA coords (§2.4 step 1)
+    embedding: Optional[np.ndarray]      # (n, d) PCA coords the *current
+    #   ordering* was derived from (refresh measures drift against these)
     sigma: float = 1.0                   # γ-score bandwidth (Eq. 4)
     gamma: Optional[float] = None        # lazily scored on first access
     tuned_backend: dict = dataclasses.field(default_factory=dict)
     # ^ backend="auto" winners, keyed by charge ndim: a backend valid for
     #   1-D vectors (e.g. dist) must not be pinned for (n, f) charges
     coo_dev: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None
+    # -- refresh lifecycle state -------------------------------------------
+    embed_mean: Optional[np.ndarray] = None   # (D,) fitted PCA map: moved
+    embed_axes: Optional[np.ndarray] = None   # (D, d) points re-embed here
+    y_last: Optional[np.ndarray] = None  # (n, d) coords at last refresh
+    #   (a patch touches only rows whose cell changed since then)
+    sources: Optional[np.ndarray] = None  # fixed source set, original order
+    pattern_from_knn: bool = False       # pattern derives from the coords
+    values_mode: str = "ones"            # ones | fn | static
+    values_fn: Optional[Callable] = None
+    refresh: RefreshStats = dataclasses.field(default_factory=RefreshStats)
 
 
 def _symmetrize_pattern(rows: np.ndarray, cols: np.ndarray,
@@ -146,10 +225,15 @@ class InteractionPlan:
 
         tree = None
         embedding = None
+        emean = eaxes = None
         if pi is None and x is not None:
             x = np.asarray(x, np.float32)
             if config.ordering == "dual_tree":
-                embedding = np.asarray(embed(jnp.asarray(x), config.d))
+                d = min(config.d, x.shape[1])
+                emean, eaxes = (np.asarray(a) for a in
+                                pca_map(jnp.asarray(x), d))
+                embedding = np.asarray(apply_pca_map(
+                    jnp.asarray(x), jnp.asarray(emean), jnp.asarray(eaxes)))
                 tree = build_tree(embedding, bits=config.bits,
                                   leaf_size=config.leaf_size)
                 pi = tree.perm
@@ -165,9 +249,13 @@ class InteractionPlan:
         r2, c2 = ordering_mod.apply_ordering(rows, cols, pi)
         sigma = sigma if sigma is not None else max(config.k / 2.0, 1.0)
         bsr = (build_bsr(r2, c2, vals, n, bs=config.bs, sb=config.sb,
-                         max_nbr=max_nbr) if with_bsr else None)
+                         max_nbr=max_nbr, slack=config.ell_slack)
+               if with_bsr else None)
         host = _PlanHost(pi=pi, inv=inv, coo=(r2, c2, vals), tree=tree,
-                         embedding=embedding, sigma=sigma)
+                         embedding=embedding, sigma=sigma,
+                         embed_mean=emean, embed_axes=eaxes,
+                         y_last=embedding)
+        host.refresh.fill0 = bsr.fill if bsr is not None else None
         return cls(config, n, bsr, jnp.asarray(pi, jnp.int32),
                    jnp.asarray(inv, jnp.int32), host)
 
@@ -320,6 +408,29 @@ class InteractionPlan:
         return InteractionPlan(self.config, self.n, bsr, self.pi, self.inv,
                                host)
 
+    # -- lifecycle (refresh + drift monitoring) ----------------------------
+
+    def refresh(self, x_new, *, policy: Optional[str] = None
+                ) -> "InteractionPlan":
+        """See :func:`refresh_plan`."""
+        return refresh_plan(self, x_new, policy=policy)
+
+    @property
+    def refresh_stats(self) -> RefreshStats:
+        return self.host.refresh
+
+    def gamma_drift(self) -> float:
+        """Relative γ degradation against the lineage's reference score
+        (positive = locality got worse). The reference is pinned at the
+        first scoring after a (re)build; γ itself is computed lazily, so
+        hot loops that never call this never pay for scoring."""
+        st = self.host.refresh
+        g = self.gamma
+        if st.gamma0 is None:
+            st.gamma0 = g
+            return 0.0
+        return measures.gamma_drift(st.gamma0, g)
+
     def _require_bsr(self) -> BSR:
         if self.bsr is None:
             raise ValueError("profile-only plan: rebuild with with_bsr=True")
@@ -375,30 +486,53 @@ def build_plan(x, *, k: int = 16, ordering: str = "dual_tree", bs: int = 32,
                seed: int = 0,
                values: "np.ndarray | Callable | None" = None,
                sigma: Optional[float] = None,
-               with_bsr: bool = True) -> InteractionPlan:
+               with_bsr: bool = True,
+               sources: Optional[np.ndarray] = None,
+               config: Optional[PlanConfig] = None,
+               **cfg_overrides) -> InteractionPlan:
     """Run the full pipeline (§2.4) over points ``x`` (n, D).
 
     Builds the kNN interaction pattern (Eq. 1), orders it, scores it (γ,
     Eq. 4), and compresses it into the two-level ELL-BSR. ``values`` dresses
     the pattern: ``None`` -> 1.0 per edge, an array aligned with the
     (row-major, post-symmetrization) kNN edges, or a callable
-    ``f(rows, cols, dist2) -> vals``. ``with_bsr=False`` builds a
-    profile-only plan (ordering + γ, no storage) — cheap for comparing
-    orderings as in §2.3.
+    ``f(rows, cols, dist2) -> vals`` (stored on the plan: ``refresh``
+    re-dresses patched rows through it; a static array pins the pattern —
+    refresh then only re-orders). ``with_bsr=False`` builds a profile-only
+    plan (ordering + γ, no storage) — cheap for comparing orderings as in
+    §2.3. ``sources`` (n, D) switches to the fixed-source-set pattern of
+    §3.2: neighbors of the (moving) targets ``x`` among ``sources``; the
+    target ordering is applied to both sides, so both must have n points.
+    ``config`` overrides every individual knob at once (refresh reuses the
+    lineage's config this way).
     """
-    config = PlanConfig(k=k, ordering=ordering, bs=bs, sb=sb,
-                        backend=backend, d=d, bits=bits,
-                        leaf_size=leaf_size, symmetrize=symmetrize,
-                        seed=seed)
+    if config is None:
+        config = PlanConfig(k=k, ordering=ordering, bs=bs, sb=sb,
+                            backend=backend, d=d, bits=bits,
+                            leaf_size=leaf_size, symmetrize=symmetrize,
+                            seed=seed, **cfg_overrides)
+    elif cfg_overrides:
+        config = dataclasses.replace(config, **cfg_overrides)
     x = np.asarray(x, np.float32)
     n = x.shape[0]
+    if sources is not None:
+        sources = np.asarray(sources, np.float32)
+        if sources.shape[0] != n:
+            raise ValueError(
+                f"sources has {sources.shape[0]} points, targets have {n}; "
+                "one ordering indexes both sides of the square plan")
+        if config.symmetrize:
+            raise ValueError("symmetrize crosses the target/source index "
+                             "spaces; not meaningful with fixed sources")
     xd = jnp.asarray(x)
-    rows, cols, d2 = knn.knn_coo(xd, xd, k, exclude_self=True)
+    sd = xd if sources is None else jnp.asarray(sources)
+    rows, cols, d2 = knn.knn_coo(xd, sd, config.k,
+                                 exclude_self=sources is None)
     rows = np.asarray(rows)
     cols = np.asarray(cols)
     d2 = np.asarray(d2)
 
-    if symmetrize:
+    if config.symmetrize:
         # pattern-level symmetrization (first occurrence wins, like the
         # paper's Fig. 2 interaction patterns) — before values, so a
         # callable sees the symmetrized edge list
@@ -413,8 +547,300 @@ def build_plan(x, *, k: int = 16, ordering: str = "dual_tree", bs: int = 32,
         if vals.shape[0] != len(rows):
             raise ValueError(
                 f"values has {vals.shape[0]} entries, pattern has "
-                f"{len(rows)} edges (symmetrize={symmetrize})")
+                f"{len(rows)} edges (symmetrize={config.symmetrize})")
 
-    return InteractionPlan.from_coo(rows, cols, vals, n, x=x, config=config,
+    plan = InteractionPlan.from_coo(rows, cols, vals, n, x=x, config=config,
                                     sigma=sigma, with_bsr=with_bsr,
                                     _symmetrized=True)
+    plan.host.pattern_from_knn = True
+    plan.host.sources = sources
+    if callable(values):
+        plan.host.values_mode = "fn"
+        plan.host.values_fn = values
+    elif values is not None:
+        plan.host.values_mode = "static"
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# plan refresh (lifecycle: the non-stationary targets of paper §3.2)
+# ---------------------------------------------------------------------------
+
+
+def _cmp_shift(n: int, d: int, bits: int, tree: Optional[Tree],
+               leaf_size: int) -> int:
+    """Morton-code shift at which cell identity is compared for migration.
+
+    Uses the tree's realized depth (cells at leaf granularity) when one
+    exists, else the depth a balanced 2^d tree would need for ~leaf_size
+    points per cell. Comparing at full code resolution would flag every
+    sub-cell wiggle as migration."""
+    total = d * hierarchy.eff_bits(d, bits)
+    if tree is not None and tree.n_levels > 1:
+        level = tree.n_levels - 1
+    else:
+        cells_per_dim = max(float(n) / max(leaf_size, 1), 1.0) ** (1.0 / d)
+        level = max(int(np.ceil(np.log2(max(cells_per_dim, 1.0)))), 1)
+    return max(total - level * d, 0)
+
+
+def _cell_migration(y_ref: np.ndarray, y_new: np.ndarray, bits: int,
+                    shift: int) -> np.ndarray:
+    """Mask of points whose Morton cell (at leaf granularity) changed.
+
+    Both coordinate sets are quantized against their joint bounding box,
+    so a global translation/expansion of the cloud (which leaves relative
+    order intact) does not read as migration."""
+    lo = jnp.asarray(np.minimum(y_ref.min(0), y_new.min(0)))
+    hi = jnp.asarray(np.maximum(y_ref.max(0), y_new.max(0)))
+    ca = np.asarray(hierarchy.morton_codes_box(jnp.asarray(y_ref), lo, hi,
+                                               bits))
+    cb = np.asarray(hierarchy.morton_codes_box(jnp.asarray(y_new), lo, hi,
+                                               bits))
+    return (ca >> shift) != (cb >> shift)
+
+
+def _knn_subset(x_new: np.ndarray, rows_idx: np.ndarray,
+                sources: Optional[np.ndarray], k: int):
+    """Exact kNN edges (original index space) for a subset of target rows."""
+    tq = jnp.asarray(x_new[rows_idx])
+    # size the scan block to the subset (quantized to powers of two so a
+    # lifetime of refreshes compiles a handful of kernels, not one per
+    # migration count) — the default 1024 pads small patches 10x
+    block = min(1 << max(7, int(np.ceil(np.log2(max(len(rows_idx), 1))))),
+                1024)
+    if sources is None:
+        # targets are a subset of the sources: take k+1 and drop each
+        # row's own point (knn_graph's exclude_self assumes aligned sets)
+        idx, d2 = knn.knn_graph(tq, jnp.asarray(x_new), k + 1, block=block)
+        idx, d2 = np.asarray(idx), np.asarray(d2)
+        keep = idx != rows_idx[:, None]
+        order = np.argsort(~keep, axis=1, kind="stable")  # kept first,
+        idx = np.take_along_axis(idx, order, 1)[:, :k]    # distance order
+        d2 = np.take_along_axis(d2, order, 1)[:, :k]      # preserved
+    else:
+        idx, d2 = knn.knn_graph(tq, jnp.asarray(sources), k, block=block)
+        idx, d2 = np.asarray(idx), np.asarray(d2)
+    return np.repeat(rows_idx, k), idx.reshape(-1), d2.reshape(-1)
+
+
+def _edge_values(host: _PlanHost, rows, cols, d2) -> np.ndarray:
+    if host.values_mode == "fn":
+        return np.asarray(host.values_fn(rows, cols, d2), np.float32)
+    return np.ones(len(rows), np.float32)
+
+
+def _patch_pattern(host: _PlanHost, cfg: PlanConfig, n: int,
+                   x_new: np.ndarray, rows_m: np.ndarray):
+    """Original-space COO with migrated rows' kNN edges recomputed."""
+    r2, c2, v2 = host.coo
+    r_o, c_o = host.pi[r2], host.pi[c2]
+    drop = np.isin(r_o, rows_m)
+    if cfg.symmetrize:
+        drop |= np.isin(c_o, rows_m)
+    nr, nc, nd2 = _knn_subset(x_new, rows_m, host.sources, cfg.k)
+    nv = _edge_values(host, nr, nc, nd2)
+    if cfg.symmetrize:
+        nr, nc, nv = _symmetrize_pattern(nr, nc, nv, n)
+    r_all = np.concatenate([r_o[~drop], nr])
+    c_all = np.concatenate([c_o[~drop], nc])
+    v_all = np.concatenate([v2[~drop], nv])
+    if cfg.symmetrize:  # mirrored new edges may duplicate kept ones
+        key = r_all.astype(np.int64) * n + c_all
+        _, first = np.unique(key, return_index=True)
+        r_all, c_all, v_all = r_all[first], c_all[first], v_all[first]
+    dropped_rows = r_o[drop]
+    return r_all, c_all, v_all, dropped_rows
+
+
+def _refresh_patch(plan: InteractionPlan, x_new, y_new, moved, stats,
+                   moved_frac: float, drift_frac: float):
+    """Cheapest tier: permutation kept, migrated rows' tiles patched in
+    place. Returns None when a patched row-block overflows the pinned ELL
+    width (caller escalates to rebucket)."""
+    host, cfg, n = plan.host, plan.config, plan.n
+    rows_m = np.nonzero(moved)[0]
+    refreshes_pattern = (host.pattern_from_knn
+                         and host.values_mode != "static"
+                         and len(rows_m) > 0)
+    stats = dataclasses.replace(
+        stats, patches=stats.patches + 1, last_action="patch",
+        last_migrated_frac=moved_frac, ordering_drift_frac=drift_frac,
+        patched_rows=stats.patched_rows
+        + (len(rows_m) if refreshes_pattern else 0))
+    if not refreshes_pattern:
+        # pattern does not follow the coords (or nothing changed cells):
+        # bookkeeping only; ordering drift keeps accumulating
+        host2 = dataclasses.replace(host, y_last=y_new, refresh=stats)
+        return InteractionPlan(cfg, n, plan.bsr, plan.pi, plan.inv, host2)
+    r_all, c_all, v_all, dropped_rows = _patch_pattern(host, cfg, n, x_new,
+                                                       rows_m)
+    r2n, c2n = ordering_mod.apply_ordering(r_all, c_all, host.pi)
+    bsr = plan.bsr
+    if bsr is not None:
+        affected = np.concatenate([host.inv[dropped_rows],
+                                   host.inv[rows_m]])
+        try:
+            bsr = patch_bsr(bsr, r2n, c2n, v_all,
+                            np.unique(affected // cfg.bs))
+        except ValueError:
+            return None
+        if measures.fill_drift(stats.fill0, bsr.fill) > cfg.drift_tol:
+            stats = dataclasses.replace(stats, degraded=True)
+    host2 = dataclasses.replace(host, coo=(r2n, c2n, v_all), coo_dev=None,
+                                gamma=None, y_last=y_new, refresh=stats)
+    return InteractionPlan(cfg, n, bsr, plan.pi, plan.inv, host2)
+
+
+def _refresh_rebucket(plan: InteractionPlan, x_new, y_new, moved, stats,
+                      moved_frac: float) -> InteractionPlan:
+    """Middle tier: stable partial reorder + re-bucketed tree levels;
+    embedding map, quantization frame and unmigrated kNN rows reused."""
+    host, cfg, n = plan.host, plan.config, plan.n
+    if host.tree is not None:
+        tree = hierarchy.rebucket(y_new, host.tree, cfg.leaf_size)
+        pi = np.asarray(tree.perm)
+    else:
+        # every plan from_coo builds carries a tree alongside its embedding
+        # map; this fallback covers externally restored hosts whose tree
+        # arrays were not persisted (the ordering still refreshes)
+        codes = np.asarray(hierarchy.morton_codes(jnp.asarray(y_new),
+                                                  cfg.bits))
+        pi = ordering_mod.stable_partial_reorder(host.pi, codes)
+        tree = None
+    inv = np.empty_like(pi)
+    inv[pi] = np.arange(n)
+
+    rows_m = np.nonzero(moved)[0]
+    refreshes_pattern = (host.pattern_from_knn
+                         and host.values_mode != "static"
+                         and len(rows_m) > 0)
+    if refreshes_pattern:
+        r_o, c_o, v2, _ = _patch_pattern(host, cfg, n, x_new, rows_m)
+    else:
+        r2, c2, v2 = host.coo
+        r_o, c_o = host.pi[r2], host.pi[c2]
+    r2n, c2n = ordering_mod.apply_ordering(r_o, c_o, pi)
+    bsr = (build_bsr(r2n, c2n, v2, n, bs=cfg.bs, sb=cfg.sb,
+                     slack=cfg.ell_slack)
+           if plan.bsr is not None else None)
+    stats = dataclasses.replace(
+        stats, rebuckets=stats.rebuckets + 1, last_action="rebucket",
+        last_migrated_frac=moved_frac, ordering_drift_frac=0.0,
+        patched_rows=stats.patched_rows
+        + (len(rows_m) if refreshes_pattern else 0),
+        fill0=bsr.fill if bsr is not None else None, gamma0=None,
+        degraded=False)
+    host2 = dataclasses.replace(
+        host, pi=pi, inv=inv, coo=(r2n, c2n, v2), coo_dev=None, tree=tree,
+        embedding=y_new, y_last=y_new, gamma=None, refresh=stats,
+        tuned_backend={})
+    return InteractionPlan(cfg, n, bsr, jnp.asarray(pi, jnp.int32),
+                           jnp.asarray(inv, jnp.int32), host2)
+
+
+def _refresh_rebuild(plan: InteractionPlan, x_new, stats,
+                     moved_frac: float) -> InteractionPlan:
+    """Top tier: the full pipeline again (fresh embedding fit, tree, kNN,
+    BSR); only the config and lineage telemetry carry over."""
+    host, cfg = plan.host, plan.config
+    if host.pattern_from_knn and host.values_mode != "static":
+        values = host.values_fn if host.values_mode == "fn" else None
+        new = build_plan(x_new, config=cfg, values=values, sigma=host.sigma,
+                         sources=host.sources,
+                         with_bsr=plan.bsr is not None)
+    else:
+        r2, c2, v2 = host.coo
+        r_o, c_o = host.pi[r2], host.pi[c2]
+        new = InteractionPlan.from_coo(
+            r_o, c_o, v2, plan.n, x=np.asarray(x_new, np.float32),
+            config=cfg, sigma=host.sigma, with_bsr=plan.bsr is not None,
+            _symmetrized=True)
+        new.host.pattern_from_knn = host.pattern_from_knn
+        new.host.values_mode = host.values_mode
+        new.host.values_fn = host.values_fn
+        new.host.sources = host.sources
+    new.host.refresh = dataclasses.replace(
+        new.host.refresh, builds=stats.builds + 1, patches=stats.patches,
+        rebuckets=stats.rebuckets, rebuilds=stats.rebuilds + 1,
+        last_action="rebuild", last_migrated_frac=moved_frac,
+        patched_rows=stats.patched_rows)
+    return new
+
+
+def refresh_plan(plan: InteractionPlan, x_new,
+                 *, policy: Optional[str] = None) -> InteractionPlan:
+    """Refresh ``plan`` for moved points ``x_new`` (n, D, original order).
+
+    Re-embeds the points through the plan's *stored* PCA map, detects
+    Morton-cell migration at leaf granularity (old/new coords quantized
+    jointly), and escalates through three tiers — see the module docstring:
+
+      patch     permutation kept; kNN recomputed for migrated rows only,
+                affected BSR row-block tiles patched in place
+      rebucket  stable partial reorder + re-bucketed tree levels; storage
+                rebuilt, everything upstream reused
+      rebuild   full ``build_plan`` pipeline
+
+    ``policy`` (or ``plan.config.refresh_policy``) forces a tier; the
+    default ``"auto"`` picks by the ordering-drift fraction against
+    ``PlanConfig.patch_frac`` / ``rebuild_frac``, with recorded fill
+    degradation (``refresh_stats.degraded``) forcing escalation. The
+    pattern follows the points only when edge values are recomputable
+    (default 1.0 or a ``values`` callable); plans with static value arrays
+    or an externally fixed COO pattern refresh their *ordering* only.
+    Returns a new plan (the input is not mutated); γ/fill of the result
+    are recomputed lazily.
+    """
+    host, cfg = plan.host, plan.config
+    if host.embed_axes is None or host.embedding is None:
+        raise ValueError(
+            "plan is not refreshable: no stored embedding map (build with "
+            "ordering='dual_tree' and coordinates x)")
+    x_new = np.asarray(x_new, np.float32)
+    if x_new.shape[0] != plan.n:
+        raise ValueError(
+            f"refresh expects the same {plan.n} points, got "
+            f"{x_new.shape[0]} (insertion/deletion needs a fresh build)")
+    if x_new.shape[1] != host.embed_axes.shape[0]:
+        raise ValueError(
+            f"refresh expects {host.embed_axes.shape[0]}-dim points, got "
+            f"{x_new.shape[1]}")
+    stats = host.refresh
+    y_new = np.asarray(apply_pca_map(jnp.asarray(x_new),
+                                     jnp.asarray(host.embed_mean),
+                                     jnp.asarray(host.embed_axes)))
+    d = y_new.shape[1]
+    shift = _cmp_shift(plan.n, d, cfg.bits, host.tree, cfg.leaf_size)
+    drift = _cell_migration(host.embedding, y_new, cfg.bits, shift)
+    moved = _cell_migration(host.y_last, y_new, cfg.bits, shift)
+    drift_frac = float(drift.mean())
+    moved_frac = float(moved.mean())
+
+    action = policy or cfg.refresh_policy
+    if action == "auto":
+        if drift_frac > cfg.rebuild_frac:
+            action = "rebuild"
+        elif drift_frac > cfg.patch_frac or stats.degraded:
+            action = "rebucket"
+        else:
+            action = "patch"
+    if action not in ("patch", "rebucket", "rebuild"):
+        raise ValueError(f"unknown refresh policy {action!r}; expected "
+                         "auto | patch | rebucket | rebuild")
+
+    # free γ-reference snapshot: if a score was already computed for the
+    # outgoing pattern, keep it as the drift baseline for this lineage
+    if stats.gamma0 is None and host.gamma is not None:
+        stats = dataclasses.replace(stats, gamma0=host.gamma)
+
+    if action == "patch":
+        out = _refresh_patch(plan, x_new, y_new, moved, stats, moved_frac,
+                             drift_frac)
+        if out is not None:
+            return out
+        action = "rebucket"  # pinned ELL width overflowed: escalate
+    if action == "rebucket":
+        return _refresh_rebucket(plan, x_new, y_new, moved, stats,
+                                 moved_frac)
+    return _refresh_rebuild(plan, x_new, stats, moved_frac)

@@ -3,6 +3,10 @@
 Layout:
   <dir>/step_<N>/manifest.json   {step, tree structure, leaf paths, dtypes}
   <dir>/step_<N>/leaf_<i>.npy    one array per leaf (host-gathered)
+  <dir>/step_<N>/plan_<name>/    a persisted InteractionPlan (save_plan):
+                                 arrays.npz (BSR tiles + permutation + COO
+                                 + embedding frame) and manifest.json
+                                 (config, tree levels, refresh telemetry)
 
 Design points for the 1000-node posture:
   - saves are ASYNC (background thread; ``wait()`` joins before the next
@@ -13,7 +17,15 @@ Design points for the 1000-node posture:
   - manifests carry the step, so the data pipeline skips ahead
     deterministically (data/pipeline.py) — no data-state file needed;
   - atomicity: writes land in ``.tmp`` and are renamed, so a crash mid-save
-    never corrupts the latest-complete checkpoint.
+    never corrupts the latest-complete checkpoint;
+  - plans are first-class: serving restarts ``restore_plan`` instead of
+    re-running the embedding -> tree -> ordering -> BSR pipeline, and
+    ``restore_plan(refresh_with=x)`` re-validates the stored plan against
+    the *current* points (the γ/cell-drift policy decides whether the
+    restored ordering still stands or gets re-bucketed/rebuilt).
+
+When saving a model tree and a plan at the same step, save the model tree
+first: ``save(step, ...)`` replaces the whole ``step_<N>`` directory.
 """
 from __future__ import annotations
 
@@ -85,16 +97,34 @@ class Checkpointer:
             self._thread = None
 
     def _gc(self) -> None:
-        steps = sorted(self.steps())
-        for s in steps[:-self.keep]:
-            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+        # model checkpoints and plans may be saved on different cadences:
+        # keep the latest `keep` of EACH kind (a step dir survives if
+        # either its model tree or its plan is still wanted)
+        keep_model = set(self.steps()[-self.keep:])
+        keep_plan = set(self.plan_steps()[-self.keep:])
+        for p in self.dir.glob("step_*"):
+            s = int(p.name.split("_")[1])
+            if s not in keep_model and s not in keep_plan:
+                shutil.rmtree(p, ignore_errors=True)
 
     # -- restore ------------------------------------------------------------
 
     def steps(self):
+        """Steps holding a *model* checkpoint (plan-only steps excluded, so
+        ``restore()``'s default step never lands on a dir with no leaves)."""
         out = []
         for p in self.dir.glob("step_*"):
             if (p / "manifest.json").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def plan_steps(self, name: Optional[str] = None):
+        """Steps holding a persisted plan (``name`` filters to one plan)."""
+        pattern = f"plan_{name}/manifest.json" if name else \
+            "plan_*/manifest.json"
+        out = []
+        for p in self.dir.glob("step_*"):
+            if any(p.glob(pattern)):
                 out.append(int(p.name.split("_")[1]))
         return sorted(out)
 
@@ -123,3 +153,139 @@ class Checkpointer:
         else:
             out = [jnp.asarray(a.astype(l.dtype)) for a, l in zip(arrs, flat)]
         return jax.tree.unflatten(treedef, out), step
+
+    # -- interaction plans (repro.api lifecycle: persist stage) -------------
+
+    def save_plan(self, step: int, plan: Any, name: str = "plan",
+                  blocking: bool = False) -> None:
+        """Persist an ``repro.api.InteractionPlan``.
+
+        BSR arrays, permutation, COO pattern, and the embedding frame are
+        stored exactly (float32/int — the restored plan's ``matvec`` is
+        bit-identical); config, tree levels, and refresh telemetry ride in
+        the JSON manifest. A ``values`` *callable* cannot be serialized:
+        the restored plan refreshes in pattern-frozen (reorder-only) mode.
+        """
+        import dataclasses
+
+        self.wait()
+        host = plan.host
+        arrays = {"pi": np.asarray(host.pi), "inv": np.asarray(host.inv)}
+        if plan.bsr is not None:
+            arrays["bsr_col_idx"] = np.asarray(plan.bsr.col_idx)
+            arrays["bsr_nbr_mask"] = np.asarray(plan.bsr.nbr_mask)
+            arrays["bsr_vals"] = np.asarray(plan.bsr.vals)
+        if host.coo is not None:
+            arrays["coo_rows"], arrays["coo_cols"], arrays["coo_vals"] = (
+                np.asarray(a) for a in host.coo)
+        for key in ("embedding", "y_last", "embed_mean", "embed_axes",
+                    "sources"):
+            val = getattr(host, key)
+            if val is not None:
+                arrays[key] = np.asarray(val)
+        if host.tree is not None:
+            arrays["tree_perm"] = np.asarray(host.tree.perm)
+            for i, lvl in enumerate(host.tree.levels):
+                arrays[f"tree_level_{i}"] = np.asarray(lvl)
+        manifest = {
+            "format": 1,
+            "step": step,
+            "n": plan.n,
+            "config": dataclasses.asdict(plan.config),
+            "sigma": host.sigma,
+            "gamma": host.gamma,
+            "pattern_from_knn": host.pattern_from_knn,
+            # a callable cannot round-trip: freeze the pattern on restore
+            "values_mode": ("static" if host.values_mode == "fn"
+                            else host.values_mode),
+            "refresh": dataclasses.asdict(host.refresh),
+            "bsr": (None if plan.bsr is None else {
+                "bs": plan.bsr.bs, "sb": plan.bsr.sb, "n": plan.bsr.n,
+                "n_rb": plan.bsr.n_rb, "n_cb": plan.bsr.n_cb,
+                "fill": plan.bsr.fill, "max_nbr": plan.bsr.max_nbr}),
+            "tree": (None if host.tree is None else {
+                "d": host.tree.d, "bits": host.tree.bits,
+                "n_levels": host.tree.n_levels}),
+        }
+
+        def work():
+            tmp = self.dir / f".tmp_plan_{step}_{name}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            np.savez(tmp / "arrays.npz", **arrays)
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            final = self.dir / f"step_{step}" / f"plan_{name}"
+            final.parent.mkdir(parents=True, exist_ok=True)
+            if final.exists():
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def restore_plan(self, step: Optional[int] = None, name: str = "plan",
+                     refresh_with: Any = None,
+                     policy: Optional[str] = None) -> Tuple[Any, int]:
+        """Restore an ``InteractionPlan`` saved by :meth:`save_plan`.
+
+        With ``refresh_with`` (the *current* points, original order), the
+        restored plan is immediately passed through ``refresh_plan`` — the
+        recorded cell/γ-drift policy decides whether the persisted ordering
+        still stands, gets patched, or is rebuilt, so serving restarts are
+        safe against points that moved while the process was down.
+        """
+        from repro import api
+        from repro.core.blocksparse import BSR
+        from repro.core.hierarchy import Tree
+
+        if step is None:
+            ps = self.plan_steps(name)
+            step = ps[-1] if ps else None
+        if step is None:
+            raise FileNotFoundError(f"no plan {name!r} under {self.dir}")
+        d = self.dir / f"step_{step}" / f"plan_{name}"
+        if not (d / "manifest.json").exists():
+            raise FileNotFoundError(f"no plan {name!r} at step {step} "
+                                    f"under {self.dir}")
+        m = json.loads((d / "manifest.json").read_text())
+        arrays = dict(np.load(d / "arrays.npz"))
+
+        config = api.PlanConfig(**m["config"])
+        n = m["n"]
+        bsr = None
+        if m["bsr"] is not None:
+            b = m["bsr"]
+            bsr = BSR(bs=b["bs"], sb=b["sb"], n=b["n"], n_rb=b["n_rb"],
+                      n_cb=b["n_cb"], fill=b["fill"], max_nbr=b["max_nbr"],
+                      col_idx=jnp.asarray(arrays["bsr_col_idx"]),
+                      nbr_mask=jnp.asarray(arrays["bsr_nbr_mask"]),
+                      vals=jnp.asarray(arrays["bsr_vals"]))
+        tree = None
+        if m["tree"] is not None:
+            t = m["tree"]
+            tree = Tree(perm=arrays["tree_perm"],
+                        levels=[arrays[f"tree_level_{i}"]
+                                for i in range(t["n_levels"])],
+                        d=t["d"], bits=t["bits"])
+        coo = (tuple(arrays[k] for k in ("coo_rows", "coo_cols", "coo_vals"))
+               if "coo_rows" in arrays else None)
+        host = api._PlanHost(
+            pi=arrays["pi"], inv=arrays["inv"], coo=coo, tree=tree,
+            embedding=arrays.get("embedding"), sigma=m["sigma"],
+            gamma=m["gamma"], embed_mean=arrays.get("embed_mean"),
+            embed_axes=arrays.get("embed_axes"),
+            y_last=arrays.get("y_last"), sources=arrays.get("sources"),
+            pattern_from_knn=m["pattern_from_knn"],
+            values_mode=m["values_mode"],
+            refresh=api.RefreshStats(**m["refresh"]))
+        plan = api.InteractionPlan(
+            config, n, bsr, jnp.asarray(arrays["pi"], jnp.int32),
+            jnp.asarray(arrays["inv"], jnp.int32), host)
+        if refresh_with is not None:
+            plan = api.refresh_plan(plan, refresh_with, policy=policy)
+        return plan, step

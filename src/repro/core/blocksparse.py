@@ -70,9 +70,15 @@ jax.tree_util.register_pytree_node(
 
 def build_bsr(rows: np.ndarray, cols: np.ndarray, vals: Optional[np.ndarray],
               n: int, bs: int = 32, sb: int = 8,
-              max_nbr: Optional[int] = None) -> BSR:
+              max_nbr: Optional[int] = None, slack: int = 0) -> BSR:
     """Build the two-level ELL-BSR from COO. numpy preprocessing (one-off,
-    like the paper's tree build); duplicate (i, j) entries are summed."""
+    like the paper's tree build); duplicate (i, j) entries are summed.
+
+    ``slack`` widens the ELL slot axis beyond the widest row-block —
+    headroom so :func:`patch_bsr` can give a refreshed row *new* neighbor
+    tiles in place without a full rebuild (ignored when ``max_nbr`` pins
+    the width explicitly).
+    """
     rows = np.asarray(rows)
     cols = np.asarray(cols)
     nnz = len(rows)
@@ -93,7 +99,7 @@ def build_bsr(rows: np.ndarray, cols: np.ndarray, vals: Optional[np.ndarray],
     for r in range(n_rb):
         per_row[r].sort(key=lambda c: (c // sb, c))
     counts = np.array([len(p) for p in per_row])
-    m = int(counts.max(initial=1))
+    m = int(counts.max(initial=1)) + max(slack, 0)
     if max_nbr is not None:
         m = max_nbr
         if counts.max(initial=0) > m:
@@ -129,6 +135,81 @@ def build_bsr(rows: np.ndarray, cols: np.ndarray, vals: Optional[np.ndarray],
     return BSR(bs=bs, sb=sb, n=n, n_rb=n_rb, n_cb=n_cb,
                col_idx=jnp.asarray(col_idx), nbr_mask=jnp.asarray(nbr_mask),
                vals=jnp.asarray(dense), fill=fill, max_nbr=m)
+
+
+def patch_bsr(bsr: BSR, rows: np.ndarray, cols: np.ndarray,
+              vals: Optional[np.ndarray], touched_rb: np.ndarray) -> BSR:
+    """Rebuild only the ``touched_rb`` row-blocks of ``bsr`` from the (full,
+    cluster-order) COO ``(rows, cols, vals)``; every other row-block's
+    stored tiles are reused as-is (plan refresh patches migrated rows
+    without paying a full :func:`build_bsr`).
+
+    The ELL shape is pinned: raises ``ValueError`` when a patched row-block
+    needs more than ``bsr.max_nbr`` tile slots — callers escalate to a full
+    rebuild in that case. Maintains the layout invariants (superblock-major
+    tile lists, zero padding) and recomputes ``fill`` from the new totals.
+    """
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    nnz = len(rows)
+    vals = (np.ones(nnz, np.float32) if vals is None
+            else np.asarray(vals, np.float32))
+    touched = np.unique(np.asarray(touched_rb))
+    if touched.size == 0:
+        return bsr
+    bs, sb, m = bsr.bs, bsr.sb, bsr.max_nbr
+    if touched.min(initial=0) < 0 or touched.max(initial=0) >= bsr.n_rb:
+        raise ValueError(f"touched_rb out of range for n_rb={bsr.n_rb}")
+
+    rb_all = rows // bs
+    sel = np.isin(rb_all, touched)
+    r_t, c_t, v_t = rows[sel], cols[sel], vals[sel]
+    rb, cb = r_t // bs, c_t // bs
+
+    # dense slot of every touched row-block (row-block id -> 0..t-1)
+    slot_of_rb = np.full(bsr.n_rb, -1, np.int64)
+    slot_of_rb[touched] = np.arange(touched.size)
+    col_rows = np.zeros((touched.size, m), np.int32)
+    mask_rows = np.zeros((touched.size, m), bool)
+    val_rows = np.zeros((touched.size, m, bs, bs), np.float32)
+
+    # unique tiles keyed (row-block, superblock-major column): np.unique
+    # yields every touched row's tile list already in schedule order
+    skey = (cb // sb).astype(np.int64) * bsr.n_cb + cb
+    span = np.int64(bsr.n_cb) * ((bsr.n_cb + sb - 1) // sb + 1)
+    uniq = np.unique(rb.astype(np.int64) * span + skey)
+    urow = slot_of_rb[uniq // span]               # 0..t-1, sorted runs
+    ucol = (uniq % span) % bsr.n_cb
+    counts = np.bincount(urow, minlength=touched.size)
+    if counts.max(initial=0) > m:
+        raise ValueError(
+            f"a patched row-block needs {counts.max()} tile slots, "
+            f"max_nbr={m} — rebuild the BSR")
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    uslot = np.arange(len(uniq)) - starts[urow]   # rank within its row
+    col_rows[urow, uslot] = ucol
+    mask_rows[urow, uslot] = True
+
+    # route every selected edge to its tile's slot by bisecting the
+    # sorted unique-tile keys (no per-edge python)
+    pos = np.searchsorted(uniq, rb.astype(np.int64) * span + skey)
+    np.add.at(val_rows, (slot_of_rb[rb], uslot[pos], r_t % bs, c_t % bs),
+              v_t)
+
+    # scatter the patched rows on device: the big tile array is updated
+    # in place (no host round-trip of untouched rows)
+    ti = jnp.asarray(touched)
+    col_idx = bsr.col_idx.at[ti].set(jnp.asarray(col_rows))
+    nbr_mask = bsr.nbr_mask.at[ti].set(jnp.asarray(mask_rows))
+    new_vals = bsr.vals.at[ti].set(jnp.asarray(val_rows))
+
+    kept_prev = int(np.asarray(bsr.nbr_mask).sum())
+    kept_touched_prev = int(np.asarray(bsr.nbr_mask[ti]).sum())
+    kept = kept_prev - kept_touched_prev + int(mask_rows.sum())
+    fill = nnz / max(kept * bs * bs, 1)
+    return BSR(bs=bs, sb=sb, n=bsr.n, n_rb=bsr.n_rb, n_cb=bsr.n_cb,
+               col_idx=col_idx, nbr_mask=nbr_mask, vals=new_vals,
+               fill=fill, max_nbr=m)
 
 
 def random_bsr(key_seed: int, n: int, bs: int, nbr: int, *, sb: int = 8,

@@ -10,7 +10,6 @@ shard's row-blocks.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
@@ -25,21 +24,33 @@ def spmv_sharded(bsr: BSR, x: jax.Array, mesh: Mesh, axis: str = "data"
                  ) -> jax.Array:
     """y = A x with row-blocks sharded over ``axis``.
 
-    Requires n_rb divisible by the axis size (pad the matrix if not).
-    Single-vector charges only: the local einsum and the final reshape
-    assume ``x`` of shape (n,) — reject (n, f) loudly rather than
-    scrambling it.
+    A row-block count that does not divide the axis size is padded with
+    empty row-blocks (column 0, zero tiles — they contribute zero rows
+    that are sliced off), so any plan runs on any mesh. Single-vector
+    charges only: the local einsum and the final reshape assume ``x`` of
+    shape (n,) — reject (n, f) loudly rather than scrambling it.
     """
     if x.ndim != 1:
         raise ValueError(f"spmv_sharded supports 1-D charges only, "
                          f"got x.shape={x.shape}")
     n_rb = bsr.vals.shape[0]
     size = mesh.shape[axis]
-    if n_rb % size:
-        raise ValueError(f"n_rb={n_rb} not divisible by |{axis}|={size}")
+    pad_rb = (-n_rb) % size
+    vals, col_idx = bsr.vals, bsr.col_idx
+    if pad_rb:
+        # memoize the padded tile tensor on the BSR: serving loops call
+        # this every matvec and must not re-copy O(n_rb*nbr*bs^2) data
+        cache = getattr(bsr, "_dist_pad", None)
+        if cache is not None and cache[0] == size:
+            vals, col_idx = cache[1], cache[2]
+        else:
+            vals = jnp.pad(vals, ((0, pad_rb), (0, 0), (0, 0), (0, 0)))
+            col_idx = jnp.pad(col_idx, ((0, pad_rb), (0, 0)))
+            if not isinstance(vals, jax.core.Tracer):  # never cache traces
+                bsr._dist_pad = (size, vals, col_idx)
 
     def local(vals, col_idx, xg):
-        # vals (n_rb/size, nbr, bs, bs); xg fully replicated (all-gathered)
+        # vals (n_rb_p/size, nbr, bs, bs); xg fully replicated (all-gathered)
         xb = xg.reshape(-1, bsr.bs)
         seg = xb[col_idx]                            # (rb_l, nbr, bs)
         return jnp.einsum("rnij,rnj->ri", vals, seg)
@@ -51,7 +62,7 @@ def spmv_sharded(bsr: BSR, x: jax.Array, mesh: Mesh, axis: str = "data"
         check_vma=False)
     pad = n_rb * bsr.bs - x.shape[0]
     xp = jnp.pad(x, (0, pad)) if pad else x
-    y = f(bsr.vals, bsr.col_idx, xp)
+    y = f(vals, col_idx, xp)
     return y.reshape(-1)[:bsr.n]
 
 
@@ -60,14 +71,12 @@ def _dist_backend(plan, x: jax.Array, *, mesh: Mesh | None = None,
                   axis: str = "data", **_kw) -> jax.Array:
     """InteractionPlan SpMV with row-blocks sharded over a mesh axis.
 
-    With no mesh given, builds a 1-axis mesh over the largest device count
-    that divides the plan's row-block count (so the default works for any
-    plan regardless of how many host devices XLA was forced to expose).
-    Only single-vector charges (``x`` of shape (n,)) are supported; with an
-    explicit mesh, ``n_rb`` must divide by the axis size — autotuning
-    skips this backend otherwise.
+    With no mesh given, builds a 1-axis mesh over every host device; row-
+    block counts that do not divide the axis size are padded inside
+    :func:`spmv_sharded`, so the registry probe (``backend="auto"``) can
+    consider this backend for any plan. Only single-vector charges (``x``
+    of shape (n,)) are supported.
     """
     if mesh is None:
-        size = math.gcd(plan.bsr.vals.shape[0], jax.device_count())
-        mesh = jax.make_mesh((size,), (axis,))
+        mesh = jax.make_mesh((jax.device_count(),), (axis,))
     return spmv_sharded(plan.bsr, x, mesh, axis)

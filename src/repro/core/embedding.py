@@ -59,6 +59,24 @@ def embed(x: jax.Array, d: int, iters: int = 8,
     return xc @ axes
 
 
+def pca_map(x: jax.Array, d: int, iters: int = 8
+            ) -> Tuple[jax.Array, jax.Array]:
+    """The affine embedding map itself: ``(mean (D,), axes (D, d))``.
+
+    ``apply_pca_map(x, mean, axes) == embed(x, d)`` for the fitting data;
+    plans store the map so that *moved* points re-embed into the same
+    coordinate frame (refresh migration detection needs comparable cells).
+    """
+    axes, _ = pca_axes(x, d, iters)
+    return jnp.mean(x, axis=0), axes
+
+
+def apply_pca_map(x: jax.Array, mean: jax.Array, axes: jax.Array
+                  ) -> jax.Array:
+    """Project ``x`` with a previously fitted :func:`pca_map`."""
+    return (x - mean[None, :]) @ axes
+
+
 def pca_project_det(x: jax.Array, d: int, iters: int = 4) -> jax.Array:
     """Top-``d`` principal projection with a deterministic start.
 

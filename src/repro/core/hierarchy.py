@@ -41,19 +41,12 @@ def _part1by2(v: jax.Array) -> jax.Array:
 MAX_BITS = {1: 30, 2: 16, 3: 10}   # per-dim resolution cap (32-bit codes)
 
 
-@functools.partial(jax.jit, static_argnames=("bits",))
-def morton_codes(y: jax.Array, bits: int = 0) -> jax.Array:
-    """Morton codes for points ``y`` (N, d) with d in {1, 2, 3}.
+def eff_bits(d: int, bits: int = 0) -> int:
+    """Per-dim quantization bits actually used for dimension ``d``."""
+    return min(bits or MAX_BITS[d], MAX_BITS[d])
 
-    Coordinates are min-max quantized to ``bits`` bits per dimension
-    (default: the maximum that fits a 32-bit code: 30/16/10 for d=1/2/3).
-    """
-    n, d = y.shape
-    b = min(bits or MAX_BITS[d], MAX_BITS[d])
-    lo = jnp.min(y, axis=0, keepdims=True)
-    hi = jnp.max(y, axis=0, keepdims=True)
-    span = jnp.maximum(hi - lo, 1e-30)
-    q = ((y - lo) / span * (2**b - 1)).astype(jnp.uint32)
+
+def _interleave(q: jax.Array, d: int) -> jax.Array:
     if d == 1:
         return q[:, 0]
     if d == 2:
@@ -62,7 +55,38 @@ def morton_codes(y: jax.Array, bits: int = 0) -> jax.Array:
         return (_part1by2(q[:, 0])
                 | (_part1by2(q[:, 1]) << 1)
                 | (_part1by2(q[:, 2]) << 2))
-    raise ValueError(f"morton_codes supports d<=3, got d={d}")
+    raise ValueError(f"morton codes support d<=3, got d={d}")
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def morton_codes(y: jax.Array, bits: int = 0) -> jax.Array:
+    """Morton codes for points ``y`` (N, d) with d in {1, 2, 3}.
+
+    Coordinates are min-max quantized to ``bits`` bits per dimension
+    (default: the maximum that fits a 32-bit code: 30/16/10 for d=1/2/3).
+    """
+    n, d = y.shape
+    lo = jnp.min(y, axis=0, keepdims=True)
+    hi = jnp.max(y, axis=0, keepdims=True)
+    return morton_codes_box(y, lo, hi, bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def morton_codes_box(y: jax.Array, lo: jax.Array, hi: jax.Array,
+                     bits: int = 0) -> jax.Array:
+    """Morton codes quantized against an *explicit* bounding box.
+
+    Cell identity is only comparable between two point sets when both are
+    quantized against the same box — the refresh migration detector codes
+    the old and new coordinates jointly through this. Points outside the
+    box clip to the boundary cells.
+    """
+    n, d = y.shape
+    b = eff_bits(d, bits)
+    span = jnp.maximum(hi - lo, 1e-30)
+    q = jnp.clip((y - lo) / span * (2**b - 1), 0, 2**b - 1
+                 ).astype(jnp.uint32)
+    return _interleave(q, d)
 
 
 @functools.partial(jax.jit, static_argnames=("bits",))
@@ -93,21 +117,19 @@ class Tree:
         return self.levels[level]
 
 
-def build_tree(y: np.ndarray, bits: int = 0, leaf_size: int = 64,
-               max_levels: int = 0) -> Tree:
-    """Adaptive hierarchical partition (paper §2.4).
+def tree_from_codes(codes: np.ndarray, perm: np.ndarray, d: int,
+                    bits: int = 0, leaf_size: int = 64,
+                    max_levels: int = 0) -> Tree:
+    """Levels of the adaptive 2^d tree from per-*original-index* Morton
+    ``codes`` and a permutation ``perm`` placing them in sorted order.
 
-    Splits every cluster by successive Morton-code prefixes (= 2^d spatial
+    Splits every cluster by successive code prefixes (= 2^d spatial
     subdivision) until clusters have at most ``leaf_size`` points; clusters
-    already small enough are not split further (adaptivity). Preprocessing
-    runs in numpy: the tree is built once per reordering, like the paper's.
+    already small enough are not split further (adaptivity).
     """
-    y = np.asarray(y)
-    n, d = y.shape
-    codes = np.asarray(morton_codes(jnp.asarray(y), bits))
-    perm = np.argsort(codes, kind="stable")
-    codes = codes[perm]
-    bits_eff = min(bits or MAX_BITS[d], MAX_BITS[d])
+    codes = np.asarray(codes)[perm]
+    n = len(codes)
+    bits_eff = eff_bits(d, bits)
     total_bits = d * bits_eff
     max_levels = max_levels or bits_eff   # default: full quantization depth
 
@@ -132,3 +154,33 @@ def build_tree(y: np.ndarray, bits: int = 0, leaf_size: int = 64,
         if sizes.max(initial=0) <= leaf_size or shift == 0:
             break
     return Tree(perm=perm, levels=levels, d=d, bits=bits)
+
+
+def build_tree(y: np.ndarray, bits: int = 0, leaf_size: int = 64,
+               max_levels: int = 0) -> Tree:
+    """Adaptive hierarchical partition (paper §2.4). Preprocessing runs in
+    numpy: the tree is built once per reordering, like the paper's."""
+    y = np.asarray(y)
+    n, d = y.shape
+    codes = np.asarray(morton_codes(jnp.asarray(y), bits))
+    perm = np.argsort(codes, kind="stable")
+    return tree_from_codes(codes, perm, d, bits, leaf_size, max_levels)
+
+
+def rebucket(y_new: np.ndarray, prev: Tree, leaf_size: int = 64,
+             max_levels: int = 0) -> Tree:
+    """Incremental re-bucket for moved points (plan refresh).
+
+    Reuses the previous tree's dimensionality/resolution and re-sorts the
+    *new* Morton codes stably with the previous leaf order as tiebreak —
+    points that stayed in their cell keep their relative order (so the
+    downstream reordered pattern changes only where points migrated), while
+    migrated points slot into their new cells. Levels are recomputed from
+    the code prefixes (cheap numpy; no re-embedding, no code re-fit).
+    """
+    y_new = np.asarray(y_new)
+    codes = np.asarray(morton_codes(jnp.asarray(y_new), prev.bits))
+    order = np.argsort(codes[prev.perm], kind="stable")
+    perm = np.asarray(prev.perm)[order]
+    return tree_from_codes(codes, perm, prev.d, prev.bits, leaf_size,
+                           max_levels)

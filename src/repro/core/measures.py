@@ -29,6 +29,8 @@ import numpy as np
 @jax.jit
 def gamma_exact(rows: jax.Array, cols: jax.Array, sigma: float) -> jax.Array:
     """Literal Eq. 4 over all nnz^2 pairs. Use only for small matrices."""
+    if rows.shape[0] == 0:                   # empty pattern: no mass, not NaN
+        return jnp.float32(0.0)
     p = jnp.stack([rows, cols], axis=1).astype(jnp.float32)
     d2 = jnp.sum((p[:, None, :] - p[None, :, :]) ** 2, axis=-1)
     return jnp.sum(jnp.exp(-d2 / sigma**2)) / (sigma * rows.shape[0])
@@ -52,6 +54,8 @@ def gamma_score(rows: jax.Array, cols: jax.Array, sigma: float, n: int,
     stencil.
     """
     nnz = rows.shape[0]
+    if nnz == 0:                             # empty pattern: no mass, not NaN
+        return jnp.float32(0.0)
     g = cells or max(8, min(2048, int(np.ceil(n / max(sigma, 1.0)))))
     cell = n / g
     ri = jnp.clip((rows.astype(jnp.float32) / cell).astype(jnp.int32), 0, g - 1)
@@ -82,6 +86,8 @@ def beta_estimate(rows: np.ndarray, cols: np.ndarray, n: int,
     rows = np.asarray(rows)
     cols = np.asarray(cols)
     nnz = len(rows)
+    if nnz == 0:
+        return {"beta": 0.0, "block": None, "per_block": {}}
     out = {}
     best = 0.0
     best_b = None
@@ -109,8 +115,39 @@ def beta_estimate(rows: np.ndarray, cols: np.ndarray, n: int,
 
 
 def fill_ratio(rows: np.ndarray, cols: np.ndarray, n: int, b: int) -> float:
-    """nnz / area of the uniform-b covering — density of the kept tiles."""
+    """nnz / area of the uniform-b covering — density of the kept tiles.
+
+    An empty pattern covers no tiles: its fill is 0 (never a division by
+    zero — drift monitoring polls this on arbitrary patched patterns).
+    """
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    if len(rows) == 0:
+        return 0.0
     rb, cb = rows // b, cols // b
     tid = rb.astype(np.int64) * ((n + b - 1) // b) + cb
     count = len(np.unique(tid))
     return len(rows) / (count * b * b)
+
+
+# ---------------------------------------------------------------------------
+# drift monitoring (plan refresh lifecycle)
+# ---------------------------------------------------------------------------
+
+
+def gamma_drift(gamma_ref: "float | None",
+                gamma_now: "float | None") -> float:
+    """Relative γ degradation since ``gamma_ref`` (positive = locality got
+    worse). Returns 0 when either score is missing or the reference is 0,
+    so drift checks are safe on unscored / empty / single-block plans."""
+    if gamma_ref is None or gamma_now is None or gamma_ref == 0:
+        return 0.0
+    return float((gamma_ref - gamma_now) / abs(gamma_ref))
+
+
+def fill_drift(fill_ref: "float | None", fill_now: "float | None") -> float:
+    """Relative fill degradation since ``fill_ref`` (positive = storage got
+    emptier). Same None/zero-safety as :func:`gamma_drift`."""
+    if fill_ref is None or fill_now is None or fill_ref == 0:
+        return 0.0
+    return float((fill_ref - fill_now) / abs(fill_ref))
