@@ -1,0 +1,84 @@
+"""Sharded-plan matvec: halo exchange vs single-device block SpMV.
+
+The ROADMAP's serving posture wants the ``dist`` backend to *win* on
+multi-device meshes, not merely match. This benchmark times the sharded
+halo-exchange matvec (``api.shard(plan, mesh)``) against the single-device
+``bsr`` backend on the same plan, on whatever mesh the process has:
+
+  banded_gate   n=16384, 16 dense tiles/row-block (paper §4.1 banded
+                best case) — the ACCEPTANCE scenario: on a >=8-device
+                mesh the sharded matvec must be >=1.5x faster than
+                single-device ``bsr`` (asserted, like bench_refresh)
+  banded_wide   n=32768, 8 tiles/row-block — scaling headroom (reported)
+  clustered     a real ``build_plan`` over a feature mixture — reports
+                the halo transfer fraction the cluster ordering earns
+                (the quantity all-gather would pin at 1.0)
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src:. python benchmarks/run.py --only bench_shard
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro import api
+from repro.core.blocksparse import random_bsr
+from repro.data.pipeline import feature_mixture
+
+GATE_DEVICES = 8        # gate only on a real multi-device mesh
+GATE_MIN_N = 16384      # and only at serving-relevant sizes
+GATE_SPEEDUP = 1.5
+
+
+def _compare(plan, name: str, emit):
+    sp = api.shard(plan)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(plan.n),
+                    jnp.float32)
+    t_bsr = timeit(lambda: plan.apply(x, backend="bsr"), warmup=2, iters=10)
+    t_sh = timeit(lambda: sp.apply(x), warmup=2, iters=10)
+    y = np.asarray(sp.apply(x))
+    y_ref = np.asarray(plan.apply(x, backend="bsr"))
+    err = float(np.abs(y - y_ref).max())
+    assert err < 1e-3, f"sharded matvec diverged: {err:.2e}"
+    speedup = t_bsr / t_sh
+    emit(f"bench_shard/{name}_bsr,{t_bsr*1e6:.0f},devices={sp.spec.n_dev}")
+    emit(f"bench_shard/{name}_sharded,{t_sh*1e6:.0f},"
+         f"speedup={speedup:.2f}x;mode={sp.spec.mode};"
+         f"transfer={sp.transfer_fraction:.3f}")
+    return speedup, sp
+
+
+def run(emit) -> None:
+    ndev = jax.device_count()
+
+    bsr = random_bsr(0, 16384, 32, 16, banded=True)
+    assert bsr.n >= GATE_MIN_N, "gate scenario must stay serving-sized"
+    speedup, _ = _compare(api.InteractionPlan.from_bsr(bsr), "banded_gate",
+                          emit)
+    if ndev >= GATE_DEVICES:
+        # ISSUE 3 acceptance: sharded matvec >=1.5x single-device bsr on
+        # >=8 devices at n>=16k
+        assert speedup >= GATE_SPEEDUP, (
+            f"sharded matvec {speedup:.2f}x < {GATE_SPEEDUP}x over "
+            f"single-device bsr on {ndev} devices (n=16384)")
+
+    bsr = random_bsr(1, 32768, 32, 8, banded=True)
+    _compare(api.InteractionPlan.from_bsr(bsr), "banded_wide", emit)
+
+    x = feature_mixture(8192, 32, n_clusters=32, seed=0)
+    plan = api.build_plan(x, k=16, bs=32, sb=8, backend="bsr")
+    _, sp = _compare(plan, "clustered", emit)
+    assert sp.transfer_fraction <= 1.0
+    if ndev >= 2:
+        # the cluster ordering must keep the halo below replication
+        assert sp.spec.transfer_blocks < sp.spec.allgather_blocks, (
+            f"clustered plan fell back to {sp.spec.mode}: transfer "
+            f"{sp.spec.transfer_blocks} blocks >= all-gather "
+            f"{sp.spec.allgather_blocks}")
+
+
+if __name__ == "__main__":
+    run(print)

@@ -1,5 +1,8 @@
 """Benchmark harness: one module per paper table/figure (+ beyond-paper).
-Prints ``name,us_per_call,derived`` CSV lines.
+Prints ``name,us_per_call,derived`` CSV lines; ``--json out.json``
+additionally records every line as a structured result (plus environment
+metadata) so CI can upload the numbers as an artifact and later PRs can
+diff them — the bench trajectory convention is ``BENCH_plan.json``.
 
   fig1_orderings   paper Fig. 1  (beta/gamma, four orderings)
   table1_gamma     paper Table 1 (gamma across orderings, SIFT/GIST-like)
@@ -7,22 +10,63 @@ Prints ``name,us_per_call,derived`` CSV lines.
   micro_blas       paper §4.1    (banded best case vs scattered base case)
   attention_bench  beyond-paper  (cluster-sparse vs dense attention)
   bench_refresh    beyond-paper  (plan refresh vs rebuild, §3.2 drift)
+  bench_shard      beyond-paper  (halo-exchange sharded matvec vs bsr)
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+
+def merge(out: str, parts: list) -> None:
+    """Combine several ``--json`` outputs into one trajectory file (CI
+    runs suites under different env/mesh settings, then uploads one
+    ``BENCH_plan.json`` artifact). Accepts both single-run docs
+    (``env``) and already-merged docs (``envs``), so trajectories can be
+    extended; each result is stamped with its run's device_count so the
+    mesh context survives the flattening."""
+    docs = [json.load(open(p)) for p in parts]
+    suites, envs, results = [], [], []
+    for d in docs:
+        suites += d["suites"]
+        part_envs = d.get("envs") or [d["env"]]
+        envs += part_envs
+        dev = (part_envs[0].get("device_count")
+               if len(part_envs) == 1 else None)
+        for r in d["results"]:
+            if dev is not None and "device_count" not in r:
+                r = {**r, "device_count": dev}
+            results.append(r)
+    combined = {"schema": 1, "suites": suites, "envs": envs,
+                "results": results}
+    with open(out, "w") as f:
+        json.dump(combined, f, indent=2)
+    print(f"# merged {len(parts)} files -> {out} "
+          f"({len(results)} results)", file=sys.stderr)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmark names")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write results as structured JSON to OUT")
+    ap.add_argument("--merge", nargs="+", default=None,
+                    metavar=("OUT", "IN"),
+                    help="merge JSON result files: OUT IN [IN ...]")
     args = ap.parse_args()
 
-    from benchmarks import (attention_bench, bench_refresh, fig1_orderings,
-                            fig3_throughput, micro_blas, table1_gamma)
+    if args.merge:
+        if len(args.merge) < 2:
+            ap.error("--merge needs OUT and at least one IN file")
+        merge(args.merge[0], args.merge[1:])
+        return
+
+    from benchmarks import (attention_bench, bench_refresh, bench_shard,
+                            fig1_orderings, fig3_throughput, micro_blas,
+                            table1_gamma)
     suites = {
         "fig1_orderings": fig1_orderings.run,
         "table1_gamma": table1_gamma.run,
@@ -30,6 +74,7 @@ def main() -> None:
         "micro_blas": micro_blas.run,
         "attention_bench": attention_bench.run,
         "bench_refresh": bench_refresh.run,
+        "bench_shard": bench_shard.run,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     unknown = [c for c in chosen if c not in suites]
@@ -37,11 +82,48 @@ def main() -> None:
         ap.error(f"unknown benchmark(s) {unknown}; "
                  f"available: {', '.join(suites)}")
 
+    results = []
+
+    def emit(line: str) -> None:
+        print(line, flush=True)
+        name, us, derived = (line.split(",", 2) + ["", ""])[:3]
+        try:
+            us_val = float(us)      # some suites emit "skipped" here
+        except ValueError:
+            us_val = None
+        rec = {"name": name, "us_per_call": us_val}
+        # derived is a ;-separated key=value bag (backend, speedup, ...)
+        for kv in filter(None, derived.split(";")):
+            k, _, v = kv.partition("=")
+            rec[k] = v
+        results.append(rec)
+
     print("name,us_per_call,derived")
     for name in chosen:
         t0 = time.time()
-        suites[name](lambda line: print(line, flush=True))
+        suites[name](emit)
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+    if args.json:
+        import platform
+
+        import jax
+
+        doc = {
+            "schema": 1,
+            "suites": chosen,
+            "env": {
+                "jax": jax.__version__,
+                "backend": jax.default_backend(),
+                "device_count": jax.device_count(),
+                "python": platform.python_version(),
+            },
+            "results": results,
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"# wrote {len(results)} results to {args.json}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -91,10 +91,11 @@ from repro.core.hierarchy import Tree, build_tree
 from repro.core.ordering import ORDERINGS  # noqa: F401  (re-export)
 from repro.core.registry import (backend_names, get_backend,  # noqa: F401
                                  register_backend)
+from repro.core.shardplan import ShardedPlan, shard  # noqa: F401
 
 __all__ = [
     "PlanConfig", "InteractionPlan", "RefreshStats", "build_plan",
-    "refresh_plan", "cluster_order",
+    "refresh_plan", "cluster_order", "shard", "ShardedPlan",
     "ORDERINGS", "register_backend", "backend_names", "get_backend",
 ]
 
@@ -172,6 +173,12 @@ class _PlanHost:
     values_mode: str = "ones"            # ones | fn | static
     values_fn: Optional[Callable] = None
     refresh: RefreshStats = dataclasses.field(default_factory=RefreshStats)
+    last_patch_rb: Optional[np.ndarray] = None  # row-blocks the last patch
+    #   tier touched (None once the ordering changed) — ShardedPlan.refresh
+    #   patches exactly these shards instead of re-sharding
+    shard_cache: dict = dataclasses.field(default_factory=dict)
+    # ^ ShardedPlan per (n_dev, axis) for the "dist" backend; entries are
+    #   validated by BSR identity, so a refreshed lineage re-shards lazily
 
 
 def _symmetrize_pattern(rows: np.ndarray, cols: np.ndarray,
@@ -404,9 +411,14 @@ class InteractionPlan:
         bsr = build_bsr(r2, c2, vals, self.n, bs=b.bs, sb=b.sb,
                         max_nbr=b.max_nbr)
         host = dataclasses.replace(self.host, coo=(r2, c2, vals),
-                                   coo_dev=None)
+                                   coo_dev=None, shard_cache={})
         return InteractionPlan(self.config, self.n, bsr, self.pi, self.inv,
                                host)
+
+    def shard(self, mesh=None, axis: str = "data") -> ShardedPlan:
+        """Per-device row-block shards with halo exchange — see
+        :func:`repro.core.shardplan.shard`."""
+        return shard(self, mesh, axis=axis)
 
     # -- lifecycle (refresh + drift monitoring) ----------------------------
 
@@ -671,24 +683,25 @@ def _refresh_patch(plan: InteractionPlan, x_new, y_new, moved, stats,
     if not refreshes_pattern:
         # pattern does not follow the coords (or nothing changed cells):
         # bookkeeping only; ordering drift keeps accumulating
-        host2 = dataclasses.replace(host, y_last=y_new, refresh=stats)
+        host2 = dataclasses.replace(host, y_last=y_new, refresh=stats,
+                                    last_patch_rb=np.empty(0, np.int64))
         return InteractionPlan(cfg, n, plan.bsr, plan.pi, plan.inv, host2)
     r_all, c_all, v_all, dropped_rows = _patch_pattern(host, cfg, n, x_new,
                                                        rows_m)
     r2n, c2n = ordering_mod.apply_ordering(r_all, c_all, host.pi)
     bsr = plan.bsr
+    affected = np.concatenate([host.inv[dropped_rows], host.inv[rows_m]])
+    touched_rb = np.unique(affected // cfg.bs)
     if bsr is not None:
-        affected = np.concatenate([host.inv[dropped_rows],
-                                   host.inv[rows_m]])
         try:
-            bsr = patch_bsr(bsr, r2n, c2n, v_all,
-                            np.unique(affected // cfg.bs))
+            bsr = patch_bsr(bsr, r2n, c2n, v_all, touched_rb)
         except ValueError:
             return None
         if measures.fill_drift(stats.fill0, bsr.fill) > cfg.drift_tol:
             stats = dataclasses.replace(stats, degraded=True)
     host2 = dataclasses.replace(host, coo=(r2n, c2n, v_all), coo_dev=None,
-                                gamma=None, y_last=y_new, refresh=stats)
+                                gamma=None, y_last=y_new, refresh=stats,
+                                last_patch_rb=touched_rb, shard_cache={})
     return InteractionPlan(cfg, n, bsr, plan.pi, plan.inv, host2)
 
 
@@ -734,7 +747,7 @@ def _refresh_rebucket(plan: InteractionPlan, x_new, y_new, moved, stats,
     host2 = dataclasses.replace(
         host, pi=pi, inv=inv, coo=(r2n, c2n, v2), coo_dev=None, tree=tree,
         embedding=y_new, y_last=y_new, gamma=None, refresh=stats,
-        tuned_backend={})
+        tuned_backend={}, last_patch_rb=None, shard_cache={})
     return InteractionPlan(cfg, n, bsr, jnp.asarray(pi, jnp.int32),
                            jnp.asarray(inv, jnp.int32), host2)
 

@@ -165,10 +165,22 @@ class Checkpointer:
         bit-identical); config, tree levels, and refresh telemetry ride in
         the JSON manifest. A ``values`` *callable* cannot be serialized:
         the restored plan refreshes in pattern-frozen (reorder-only) mode.
+
+        Shard-aware: a ``repro.api.ShardedPlan`` is accepted directly —
+        the *unsharded* plan is what lands on disk (shard arrays are a
+        pure transform of it, and the restoring mesh may have a different
+        device count), plus a manifest note of the sharding axis so
+        ``restore_plan(mesh=...)`` re-shards on load.
         """
         import dataclasses
 
         self.wait()
+        shard_meta = None
+        if hasattr(plan, "spec") and hasattr(plan, "unshard"):
+            sp = plan
+            shard_meta = {"axis": sp.spec.axis, "n_dev": sp.spec.n_dev,
+                          "mode": sp.spec.mode}
+            plan = sp.plan
         host = plan.host
         arrays = {"pi": np.asarray(host.pi), "inv": np.asarray(host.inv)}
         if plan.bsr is not None:
@@ -206,6 +218,7 @@ class Checkpointer:
             "tree": (None if host.tree is None else {
                 "d": host.tree.d, "bits": host.tree.bits,
                 "n_levels": host.tree.n_levels}),
+            "shard": shard_meta,
         }
 
         def work():
@@ -230,7 +243,9 @@ class Checkpointer:
 
     def restore_plan(self, step: Optional[int] = None, name: str = "plan",
                      refresh_with: Any = None,
-                     policy: Optional[str] = None) -> Tuple[Any, int]:
+                     policy: Optional[str] = None,
+                     mesh: Any = None, axis: Optional[str] = None
+                     ) -> Tuple[Any, int]:
         """Restore an ``InteractionPlan`` saved by :meth:`save_plan`.
 
         With ``refresh_with`` (the *current* points, original order), the
@@ -238,6 +253,14 @@ class Checkpointer:
         recorded cell/γ-drift policy decides whether the persisted ordering
         still stands, gets patched, or is rebuilt, so serving restarts are
         safe against points that moved while the process was down.
+
+        With ``mesh`` (a ``jax.sharding.Mesh``, or ``"auto"`` for a 1-axis
+        mesh over every local device), the plan is re-sharded after any
+        refresh and a ``ShardedPlan`` is returned — elastic by
+        construction: the halo analysis runs against the *restoring*
+        mesh's device count, so a plan saved from an 8-way serving mesh
+        restores onto any pod shape. ``axis`` defaults to the recorded
+        sharding axis (or ``"data"``).
         """
         from repro import api
         from repro.core.blocksparse import BSR
@@ -288,4 +311,14 @@ class Checkpointer:
             jnp.asarray(arrays["inv"], jnp.int32), host)
         if refresh_with is not None:
             plan = api.refresh_plan(plan, refresh_with, policy=policy)
+        if mesh is not None:
+            # a real single-axis mesh names the axis; otherwise fall back
+            # to the recorded saving axis (restoring meshes need not reuse
+            # the saving mesh's axis names)
+            if (axis is None and hasattr(mesh, "axis_names")
+                    and len(mesh.axis_names) == 1):
+                axis = mesh.axis_names[0]
+            axis = axis or (m.get("shard") or {}).get("axis") or "data"
+            plan = api.shard(plan, None if mesh == "auto" else mesh,
+                             axis=axis)
         return plan, step

@@ -35,6 +35,15 @@ class BSR:
     fill: float             # nnz / (kept tiles * bs^2)
     max_nbr: int
 
+    def rowblock_cols(self, r0: int, r1: int) -> np.ndarray:
+        """Sorted unique kept column-blocks of row-blocks ``[r0, r1)`` —
+        the column support a row-range's charge window must cover (what
+        the sharded halo analysis in ``core.shardplan`` reads). Requires
+        concrete (non-traced) index arrays."""
+        ci = np.asarray(self.col_idx[r0:r1])
+        mk = np.asarray(self.nbr_mask[r0:r1])
+        return np.unique(ci[mk]).astype(np.int64)
+
     def to_dense(self) -> np.ndarray:
         a = np.zeros((self.n_rb * self.bs, self.n_cb * self.bs), np.float32)
         ci = np.asarray(self.col_idx)

@@ -3,13 +3,13 @@
 The paper parallelizes SpMV with pthreads over row blocks; the TPU-native
 mapping shards row-blocks over a mesh axis. Because the dual-tree ordering
 makes each row-block's column footprint compact, every shard needs only a
-small window of the charge vector — here realized as one all-gather of the
-(cluster-ordered, hence contiguous) charge vector, amortized across the
-shard's row-blocks.
+small window of the charge vector. The registry backend ("dist") realizes
+that window as a minimal halo exchange via :mod:`repro.core.shardplan`;
+:func:`spmv_sharded` below keeps the simpler replicate-the-charges
+all-gather path as the traced-plan fallback and as the traffic baseline
+the halo exchange is measured against.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -71,12 +71,20 @@ def _dist_backend(plan, x: jax.Array, *, mesh: Mesh | None = None,
                   axis: str = "data", **_kw) -> jax.Array:
     """InteractionPlan SpMV with row-blocks sharded over a mesh axis.
 
-    With no mesh given, builds a 1-axis mesh over every host device; row-
-    block counts that do not divide the axis size are padded inside
-    :func:`spmv_sharded`, so the registry probe (``backend="auto"``) can
-    consider this backend for any plan. Only single-vector charges (``x``
-    of shape (n,)) are supported.
+    Routes through :mod:`repro.core.shardplan`: the plan is sharded once
+    (halo exchange analyzed from its ELL schedule, memoized on the plan
+    host per mesh shape) and every subsequent call reuses the shards —
+    ppermute halos move only the charge window each device actually
+    needs, instead of this module's historical full all-gather. Traced
+    plans (the plan itself a jit argument) cannot be halo-analyzed on the
+    host and fall back to :func:`spmv_sharded`. With no mesh given,
+    builds a 1-axis mesh over every host device. Only single-vector
+    charges (``x`` of shape (n,)) are supported.
     """
+    from repro.core.shardplan import default_mesh, shard
+
     if mesh is None:
-        mesh = jax.make_mesh((jax.device_count(),), (axis,))
-    return spmv_sharded(plan.bsr, x, mesh, axis)
+        mesh = default_mesh(axis)
+    if isinstance(plan.bsr.col_idx, jax.core.Tracer):
+        return spmv_sharded(plan.bsr, x, mesh, axis)
+    return shard(plan, mesh, axis=axis).apply(x)

@@ -12,11 +12,14 @@ backends register themselves on first use:
   bsr       flat single-level block path       (core.interact)
   bsr_ml    multi-level superblock scan        (core.interact)
   pallas    MXU Pallas kernel                  (kernels.ops)
-  dist      shard_map row-block-sharded SpMV   (core.dist, needs a mesh)
+  dist      row-block-sharded SpMV with halo   (core.dist -> core.shardplan;
+            exchange for the charge window      shards memoized on the plan)
 
 ``core.autotune.tune_backend`` probes this registry to resolve
-``backend="auto"``; user code can ``register_backend`` custom paths and they
-become visible to autotuning and ``plan.apply`` immediately.
+``backend="auto"`` — device-count-aware: on multi-device meshes ``dist``
+wins whenever its halo analysis moves less charge than replication. User
+code can ``register_backend`` custom paths and they become visible to
+autotuning and ``plan.apply`` immediately.
 """
 from __future__ import annotations
 
