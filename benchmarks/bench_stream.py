@@ -1,0 +1,208 @@
+"""Streaming churn: insert/delete tiers vs rebuilding the plan per step.
+
+The ROADMAP's streaming item: growing/shrinking point sets must be served
+by in-place append/tombstone tiers with an amortized compaction, not a
+``build_plan`` per change. This suite streams sustained churn (<=5% of the
+points inserted+deleted per step) through ``api.update_plan`` with two
+churn shapes, mirroring bench_refresh's coherent/uniform split:
+
+  coherent    one region's points retire and fresh arrivals replace them
+              (a re-ingested shard / re-crawled region: deletions and
+              insertions share leaves, so the streamed step patches a
+              bounded set of row-blocks) — the ACCEPTANCE scenario:
+              mean per-step wall time (amortized over any compactions /
+              restripes the policy triggers) must be >=3x faster than a
+              from-scratch ``build_plan`` on the survivors, with the
+              streamed plan's γ (dead rows ignored) within 5% of a
+              fresh build's
+  uniform     churn scattered over the whole cloud — the in-place tiers'
+              worst case (every row-block holds some edge of some
+              deleted point, so the policy restripes the storage
+              wholesale); reported, not asserted
+
+Also asserted in-suite: after an explicit compact, matvec is bit-exact
+against a fresh build over the surviving points; and on a >=2-device
+mesh the same streamed sequence applied through ``ShardedPlan.update``
+matches the single-device result.
+
+  PYTHONPATH=src:. python benchmarks/run.py --only bench_stream
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro import api
+
+N, K, D = 16384, 16, 32
+N_CLUSTERS = 16
+CHURN = 0.025          # per side, per step  (insert + delete = 5%)
+STEPS = 12
+WARM = 6
+GATE_SPEEDUP = 3.0
+GATE_GAMMA = 0.05
+
+
+class _Stream:
+    """A mixture feed with per-point cluster labels, so churn can be
+    regional (coherent) or global (uniform)."""
+
+    def __init__(self, seed: int):
+        self.rng = np.random.default_rng(seed)
+        basis = self.rng.standard_normal((8, D)) / np.sqrt(8)
+        self.centers = (self.rng.standard_normal((N_CLUSTERS, 8)) @ basis
+                        * 3.0).astype(np.float32)
+
+    def initial(self):
+        labels = self.rng.integers(0, N_CLUSTERS, N)
+        x = (self.centers[labels] + 0.5 * self.rng.standard_normal((N, D))
+             ).astype(np.float32)
+        return x, labels
+
+    def arrivals(self, c: int, m: int) -> np.ndarray:
+        return (self.centers[c]
+                + 0.5 * self.rng.standard_normal((m, D))).astype(np.float32)
+
+    def batches(self, plan, labels, step: int, shape: str):
+        m = int(N * CHURN)
+        live = np.nonzero(plan.alive)[0]
+        if shape == "coherent":
+            c = step % N_CLUSTERS
+            mine = live[labels[live] == c]
+            take = min(m, len(mine))
+            kill = self.rng.choice(mine, take, replace=False)
+            if take < m:
+                rest = np.setdiff1d(live, kill, assume_unique=False)
+                kill = np.concatenate(
+                    [kill, self.rng.choice(rest, m - take, replace=False)])
+            xin = self.arrivals(c, m)
+            lab = c
+        else:
+            kill = self.rng.choice(live, m, replace=False)
+            c = int(self.rng.integers(0, N_CLUSTERS))
+            xin = self.arrivals(c, m)
+            lab = c
+        return kill, xin, lab
+
+
+def _apply(plan, labels, kill, xin, lab):
+    plan = api.update_plan(plan, insert=xin, delete=kill)
+    if len(labels) != plan.n:         # capacity grew or plan compacted
+        cmap = plan.host.compact_map
+        new_labels = np.full(plan.n, -1, np.int64)
+        if cmap is not None:
+            surv = np.nonzero(cmap >= 0)[0]
+            new_labels[cmap[surv]] = labels[surv]
+        else:
+            new_labels[:len(labels)] = labels
+        labels = new_labels
+    ids = plan.host.last_inserted_idx
+    if ids is not None:
+        labels[ids] = lab
+    return plan, labels
+
+
+def _stream_scenario(shape: str, steps: int, sharded_too: bool):
+    feed = _Stream(seed=0)
+    x0, labels0 = feed.initial()
+    # capacity slack interleaves free slots through the leaves (inserts
+    # land in place); gamma_tol=0.03: the γ-drift guard rebuckets (stable
+    # code re-sort + build_bsr, no kNN) well inside the 5% gate margin
+    plan = api.build_plan(x0, k=K, bs=32, sb=8, backend="bsr",
+                          ell_slack=4, gamma_tol=0.03,
+                          capacity=int(N * 1.125))
+    _ = plan.gamma        # score once: arms the γ-drift guard
+    labels = np.full(plan.n, -1, np.int64)
+    labels[:N] = labels0
+    ndev = jax.device_count()
+    sharded = api.shard(plan) if (sharded_too and ndev >= 2) else None
+
+    # warmup: compile the streaming kernels (kNN subsets, quantized patch
+    # scatters, γ scoring) outside the timed loop
+    for s in range(WARM):
+        kill, xin, lab = feed.batches(plan, labels, s, shape)
+        plan, labels = _apply(plan, labels, kill, xin, lab)
+        if sharded is not None:
+            sharded = sharded.update(insert=xin, delete=kill)
+
+    times = []
+    for s in range(steps):
+        kill, xin, lab = feed.batches(plan, labels, WARM + s, shape)
+        t0 = time.perf_counter()
+        plan2, labels = _apply(plan, labels, kill, xin, lab)
+        jax.block_until_ready(plan2.bsr.vals)
+        times.append(time.perf_counter() - t0)
+        plan = plan2
+        if sharded is not None:
+            sharded = sharded.update(insert=xin, delete=kill)
+    t_step = float(np.mean(times))        # amortizes compaction/restripe
+    return plan, sharded, t_step
+
+
+def run(emit) -> None:
+    rng = np.random.default_rng(1)
+
+    # -- coherent churn: the acceptance scenario ---------------------------
+    plan, sharded, t_step = _stream_scenario("coherent", STEPS,
+                                             sharded_too=True)
+    st = plan.refresh_stats
+    x_live = plan.host.x[plan.alive]
+    t_build = timeit(lambda: api.build_plan(x_live, config=plan.config),
+                     warmup=1, iters=3)
+    fresh = api.build_plan(x_live, config=plan.config)
+    speedup = t_build / t_step
+    gamma_ratio = plan.gamma / fresh.gamma
+
+    emit(f"bench_stream/coherent_n{N}_step,{t_step*1e6:.0f},"
+         f"appends={st.appends};tombstones={st.tombstones};"
+         f"rebuckets={st.rebuckets};restripes={st.restripes};"
+         f"compactions={st.compactions};grows={st.grows};"
+         f"dead_frac={plan.dead_frac:.3f}")
+    emit(f"bench_stream/coherent_n{N}_rebuild,{t_build*1e6:.0f},"
+         f"speedup={speedup:.2f}x;gamma_ratio={gamma_ratio:.3f}")
+
+    # ISSUE 4 acceptance: <=5% churn streams >=3x faster than rebuilding,
+    # with gamma within 5% of a fresh build over the survivors
+    assert speedup >= GATE_SPEEDUP, (
+        f"streaming step {speedup:.2f}x < {GATE_SPEEDUP}x over build_plan "
+        f"(step {t_step*1e3:.1f}ms vs build {t_build*1e3:.1f}ms)")
+    assert abs(1.0 - gamma_ratio) <= GATE_GAMMA, (
+        f"streamed gamma {plan.gamma:.3f} not within {GATE_GAMMA:.0%} of "
+        f"fresh-build gamma {fresh.gamma:.3f}")
+
+    # after compact: bit-exact against a fresh build on the survivors
+    compacted = plan.compact()
+    xv = jnp.asarray(rng.standard_normal(compacted.n), jnp.float32)
+    y_c = np.asarray(compacted.matvec(xv))
+    y_f = np.asarray(api.build_plan(x_live, config=plan.config).matvec(xv))
+    assert np.array_equal(y_c, y_f), "compact diverged from a fresh build"
+    emit(f"bench_stream/compact_n{compacted.n},,bit_exact=1")
+
+    if sharded is not None:
+        # the same streamed sequence on the mesh matches single-device
+        xs = jnp.asarray(rng.standard_normal(plan.n), jnp.float32)
+        y_sh = np.asarray(sharded.matvec(xs))
+        y_1d = np.asarray(plan.matvec(xs, backend="bsr"))
+        err = float(np.abs(y_sh - y_1d).max())
+        assert err < 1e-3, (
+            f"sharded streamed plan diverged from single-device: {err:.2e}")
+        emit(f"bench_stream/sharded_dev{jax.device_count()},,err={err:.2e};"
+             f"patches={sharded.shard_patches};reshards={sharded.reshards}")
+    else:
+        emit("bench_stream/sharded,skipped,reason=single_device")
+
+    # -- uniform churn: worst case, reported not asserted ------------------
+    plan_u, _, t_step_u = _stream_scenario("uniform", 6,
+                                           sharded_too=False)
+    st_u = plan_u.refresh_stats
+    emit(f"bench_stream/uniform_n{N}_step,{t_step_u*1e6:.0f},"
+         f"speedup={t_build/t_step_u:.2f}x;restripes={st_u.restripes};"
+         f"rebuckets={st_u.rebuckets};compactions={st_u.compactions}")
+
+
+if __name__ == "__main__":
+    run(print)

@@ -11,6 +11,12 @@ diff them — the bench trajectory convention is ``BENCH_plan.json``.
   attention_bench  beyond-paper  (cluster-sparse vs dense attention)
   bench_refresh    beyond-paper  (plan refresh vs rebuild, §3.2 drift)
   bench_shard      beyond-paper  (halo-exchange sharded matvec vs bsr)
+  bench_stream     beyond-paper  (insert/delete churn vs rebuild-per-step)
+
+Gated suites assert their acceptance in-suite; a failed gate is recorded
+per suite (the remaining suites still run, the JSON artifact carries the
+failure) and the process exits non-zero — a red gate can no longer hide
+behind a green artifact.
 """
 from __future__ import annotations
 
@@ -29,10 +35,12 @@ def merge(out: str, parts: list) -> None:
     mesh context survives the flattening."""
     docs = [json.load(open(p)) for p in parts]
     suites, envs, results = [], [], []
+    gate_failures = {}
     for d in docs:
         suites += d["suites"]
         part_envs = d.get("envs") or [d["env"]]
         envs += part_envs
+        gate_failures.update(d.get("gate_failures") or {})
         dev = (part_envs[0].get("device_count")
                if len(part_envs) == 1 else None)
         for r in d["results"]:
@@ -40,11 +48,17 @@ def merge(out: str, parts: list) -> None:
                 r = {**r, "device_count": dev}
             results.append(r)
     combined = {"schema": 1, "suites": suites, "envs": envs,
-                "results": results}
+                "gate_failures": gate_failures, "results": results}
     with open(out, "w") as f:
         json.dump(combined, f, indent=2)
     print(f"# merged {len(parts)} files -> {out} "
           f"({len(results)} results)", file=sys.stderr)
+    if gate_failures:
+        # the merged artifact records the failures AND the merge step
+        # itself goes red — a failed gate cannot ride a green upload
+        for name, msg in gate_failures.items():
+            print(f"# GATE FAILED {name}: {msg}", file=sys.stderr)
+        sys.exit(1)
 
 
 def main() -> None:
@@ -65,8 +79,8 @@ def main() -> None:
         return
 
     from benchmarks import (attention_bench, bench_refresh, bench_shard,
-                            fig1_orderings, fig3_throughput, micro_blas,
-                            table1_gamma)
+                            bench_stream, fig1_orderings, fig3_throughput,
+                            micro_blas, table1_gamma)
     suites = {
         "fig1_orderings": fig1_orderings.run,
         "table1_gamma": table1_gamma.run,
@@ -75,6 +89,7 @@ def main() -> None:
         "attention_bench": attention_bench.run,
         "bench_refresh": bench_refresh.run,
         "bench_shard": bench_shard.run,
+        "bench_stream": bench_stream.run,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     unknown = [c for c in chosen if c not in suites]
@@ -98,10 +113,18 @@ def main() -> None:
             rec[k] = v
         results.append(rec)
 
+    gate_failures = {}
     print("name,us_per_call,derived")
     for name in chosen:
         t0 = time.time()
-        suites[name](emit)
+        try:
+            suites[name](emit)
+        except AssertionError as e:
+            # an in-suite gate failed: record it, keep running the other
+            # suites, and exit non-zero at the end so the run (and any
+            # artifact built from it) is visibly red
+            gate_failures[name] = str(e)
+            print(f"# GATE FAILED {name}: {e}", file=sys.stderr)
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
 
     if args.json:
@@ -118,12 +141,16 @@ def main() -> None:
                 "device_count": jax.device_count(),
                 "python": platform.python_version(),
             },
+            "gate_failures": gate_failures,
             "results": results,
         }
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"# wrote {len(results)} results to {args.json}",
               file=sys.stderr)
+
+    if gate_failures:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -58,6 +58,25 @@ def main():
           f"matvec norm {float(jnp.linalg.norm(y)):.3f}")
     print("all backends agree OK")
 
+    # streaming: plans absorb inserts/deletes in place (capacity vs n)
+    rng2 = np.random.default_rng(7)
+    splan = api.build_plan(x, k=k, bs=32, sb=8, backend="bsr", ell_slack=4,
+                           capacity=n + 256)
+    kill = rng2.choice(n, 64, replace=False)
+    splan = splan.delete(kill)                      # tombstone tier
+    x_new = feature_mixture(64, d, n_clusters=32, seed=0)  # same mixture
+    splan, new_ids = splan.insert(x_new)            # append tier
+    st = splan.refresh_stats
+    print(f"\nstreaming: {splan}")
+    print(f"  deleted 64, inserted 64 (ids {new_ids[:4].tolist()}...): "
+          f"tiers appends={st.appends} tombstones={st.tombstones} "
+          f"restripes={st.restripes} compactions={st.compactions}, "
+          f"dead_frac {splan.dead_frac:.3f}")
+    assert splan.n_alive == n
+    compacted = splan.compact()                     # compact tier: the
+    print(f"  after compact: {compacted} "          # exact fresh build
+          f"(bit-exact vs build_plan on the survivors)")
+
     import jax
     if jax.device_count() >= 2:
         # sharded plan: per-device row-block shards, charge halos moved by

@@ -85,7 +85,8 @@ import numpy as np
 
 from repro.core import hierarchy, interact, knn, measures
 from repro.core import ordering as ordering_mod
-from repro.core.blocksparse import BSR, build_bsr, patch_bsr
+from repro.core.blocksparse import (BSR, append_rows, build_bsr, patch_bsr,
+                                    tombstone_rows)
 from repro.core.embedding import apply_pca_map, embed, pca_map
 from repro.core.hierarchy import Tree, build_tree
 from repro.core.ordering import ORDERINGS  # noqa: F401  (re-export)
@@ -95,14 +96,18 @@ from repro.core.shardplan import ShardedPlan, shard  # noqa: F401
 
 __all__ = [
     "PlanConfig", "InteractionPlan", "RefreshStats", "build_plan",
-    "refresh_plan", "cluster_order", "shard", "ShardedPlan",
+    "refresh_plan", "update_plan", "cluster_order", "shard", "ShardedPlan",
     "ORDERINGS", "register_backend", "backend_names", "get_backend",
 ]
 
 
 @dataclass(frozen=True)
 class PlanConfig:
-    """Static knobs of an interaction plan (hashable; jit-cache friendly)."""
+    """Static knobs of an interaction plan (hashable; jit-cache friendly).
+
+    Validated at construction: a bad refresh/streaming threshold raises a
+    ``ValueError`` here, not three tiers deep into a refresh.
+    """
     k: int = 16                  # neighbors per target (Eq. 1 pattern)
     ordering: str = "dual_tree"  # one of core.ordering.ORDERINGS
     bs: int = 32                 # bottom-level tile size (MXU-aligned)
@@ -117,9 +122,40 @@ class PlanConfig:
     refresh_policy: str = "auto"  # auto | patch | rebucket | rebuild
     patch_frac: float = 0.10     # auto: ordering drift <= this -> patch
     rebuild_frac: float = 0.40   # auto: ordering drift > this -> rebuild
-    drift_tol: float = 0.25      # fill/γ degradation that forces escalation
+    drift_tol: float = 0.25     # fill/γ degradation that forces escalation
     ell_slack: int = 0           # spare ELL tile slots per row-block, so
-    #   an in-place patch can add neighbor tiles without escalating
+    #   an in-place patch (or streamed insert) can add neighbor tiles
+    #   without escalating
+    # -- streaming (update_plan: insert/delete/compact policy) --------------
+    max_dead_frac: float = 0.25  # tombstoned capacity fraction that
+    #   triggers an amortized compaction rebuild
+    grow_frac: float = 0.25      # capacity growth chunk, as a fraction of
+    #   current capacity (amortizes append reallocation to O(1)/insert)
+    gamma_tol: float = 0.05      # streamed-γ drift that triggers the
+    #   rebucket guard (armed once the plan is γ-scored; distinct from
+    #   drift_tol, which gates refresh/fill escalation)
+
+    def __post_init__(self):
+        if self.ell_slack < 0:
+            raise ValueError(
+                f"ell_slack must be >= 0, got {self.ell_slack}")
+        for fname in ("patch_frac", "rebuild_frac", "drift_tol",
+                      "gamma_tol"):
+            v = getattr(self, fname)
+            if not (isinstance(v, (int, float)) and 0.0 <= v <= 1.0):
+                raise ValueError(
+                    f"{fname} must be a fraction in [0, 1], got {v!r}")
+        if self.patch_frac > self.rebuild_frac:
+            raise ValueError(
+                f"patch_frac={self.patch_frac} > rebuild_frac="
+                f"{self.rebuild_frac}: the auto policy would escalate to "
+                "rebuild before patch ever applied")
+        if not 0.0 < self.max_dead_frac <= 1.0:
+            raise ValueError(
+                f"max_dead_frac must be in (0, 1], got {self.max_dead_frac}")
+        if self.grow_frac <= 0.0:
+            raise ValueError(
+                f"grow_frac must be > 0, got {self.grow_frac}")
 
 
 @dataclasses.dataclass
@@ -142,6 +178,15 @@ class RefreshStats:
     fill0: Optional[float] = None     # fill at last (re)build of the layout
     gamma0: Optional[float] = None    # γ reference for gamma_drift
     degraded: bool = False            # fill drift beyond tol -> escalate
+    # -- streaming tiers (update_plan) -------------------------------------
+    appends: int = 0                  # insert batches applied in place
+    tombstones: int = 0               # delete batches applied in place
+    compactions: int = 0              # dead-frac/degradation rebuilds
+    restripes: int = 0                # storage-only rebuilds (ELL overflow
+    #   at a kept ordering: build_bsr cost, full pipeline skipped)
+    grows: int = 0                    # capacity reallocations
+    inserted_total: int = 0
+    deleted_total: int = 0
 
 
 @dataclasses.dataclass(eq=False)
@@ -173,6 +218,21 @@ class _PlanHost:
     values_mode: str = "ones"            # ones | fn | static
     values_fn: Optional[Callable] = None
     refresh: RefreshStats = dataclasses.field(default_factory=RefreshStats)
+    # -- streaming state (logical n vs physical capacity) ------------------
+    x: Optional[np.ndarray] = None       # (capacity, D) original coords —
+    #   inserts kNN against these (dead rows are garbage, masked by alive)
+    alive: Optional[np.ndarray] = None   # (capacity,) bool row validity;
+    #   None means every physical slot holds a live point
+    codes: Optional[np.ndarray] = None   # (capacity,) uint64 Morton codes
+    #   in the frozen code box below (leaf placement of streamed inserts;
+    #   tombstoned slots keep their last code so holes stay localized)
+    code_lo: Optional[np.ndarray] = None  # (d,) frozen quantization box —
+    code_hi: Optional[np.ndarray] = None  # new points code comparably
+    last_inserted_idx: Optional[np.ndarray] = None  # physical slots the
+    #   last update_plan insert batch landed in (post-compact indices when
+    #   the batch triggered a compaction)
+    compact_map: Optional[np.ndarray] = None  # (old_capacity,) old physical
+    #   slot -> new index after the last compaction, -1 for dead slots
     last_patch_rb: Optional[np.ndarray] = None  # row-blocks the last patch
     #   tier touched (None once the ordering changed) — ShardedPlan.refresh
     #   patches exactly these shards instead of re-sharding
@@ -261,7 +321,8 @@ class InteractionPlan:
         host = _PlanHost(pi=pi, inv=inv, coo=(r2, c2, vals), tree=tree,
                          embedding=embedding, sigma=sigma,
                          embed_mean=emean, embed_axes=eaxes,
-                         y_last=embedding)
+                         y_last=embedding,
+                         x=None if x is None else np.asarray(x, np.float32))
         host.refresh.fill0 = bsr.fill if bsr is not None else None
         return cls(config, n, bsr, jnp.asarray(pi, jnp.int32),
                    jnp.asarray(inv, jnp.int32), host)
@@ -302,13 +363,48 @@ class InteractionPlan:
                                  jnp.asarray(v))
         return self.host.coo_dev
 
+    # -- logical n vs physical capacity (streaming substrate) --------------
+
+    @property
+    def capacity(self) -> int:
+        """Physical row slots (== ``plan.n``, the matvec dimension every
+        backend sees). Streaming plans keep ``n_alive <= capacity``."""
+        return self.n
+
+    @property
+    def alive(self) -> np.ndarray:
+        """Row-validity mask over physical slots (original index space)."""
+        if self.host.alive is None:
+            return np.ones(self.n, bool)
+        return self.host.alive
+
+    @property
+    def n_alive(self) -> int:
+        """Logical point count: physical slots holding a live point."""
+        if self.host.alive is None:
+            return self.n
+        return int(self.host.alive.sum())
+
+    @property
+    def dead_frac(self) -> float:
+        """Tombstoned fraction of capacity (compaction trigger)."""
+        return 1.0 - self.n_alive / max(self.n, 1)
+
     @property
     def gamma(self) -> Optional[float]:
-        """γ-score (Eq. 4) of the reordered pattern, computed lazily."""
+        """γ-score (Eq. 4) of the reordered pattern, computed lazily.
+
+        Dead rows are ignored: a streamed plan is scored on the live
+        pattern projected to compacted (hole-free) coordinates, so the
+        score stays comparable with a fresh build over the survivors."""
         if self.host.gamma is None and self.host.coo is not None:
             r2, c2, _ = self.host.coo
+            n_eff = self.n
+            if self.host.alive is not None and not self.host.alive.all():
+                r2, c2, n_eff = measures.compact_live(
+                    r2, c2, self.host.alive[self.host.pi])
             self.host.gamma = float(measures.gamma_score(
-                jnp.asarray(r2), jnp.asarray(c2), self.host.sigma, self.n))
+                jnp.asarray(r2), jnp.asarray(c2), self.host.sigma, n_eff))
         return self.host.gamma
 
     @property
@@ -319,7 +415,9 @@ class InteractionPlan:
     def stats(self) -> dict:
         kept = (int(np.asarray(self.bsr.nbr_mask).sum())
                 if self.bsr is not None else 0)
-        return {"n": self.n, "gamma": self.gamma, "fill": self.fill,
+        return {"n": self.n_alive, "capacity": self.capacity,
+                "dead_frac": self.dead_frac,
+                "gamma": self.gamma, "fill": self.fill,
                 "kept_tiles": kept,
                 "max_nbr": self.bsr.max_nbr if self.bsr else None,
                 "backend": self.resolve_backend(probe=False)}
@@ -427,6 +525,34 @@ class InteractionPlan:
         """See :func:`refresh_plan`."""
         return refresh_plan(self, x_new, policy=policy)
 
+    # -- streaming (insert / delete / compact) -----------------------------
+
+    def insert(self, x_new, *, policy: Optional[str] = None
+               ) -> Tuple["InteractionPlan", np.ndarray]:
+        """Insert points ``x_new`` (m, D); returns ``(plan, idx)`` where
+        ``idx`` are the physical slots the points landed in (their row
+        indices for ``matvec``/``delete``). See :func:`update_plan`."""
+        plan = update_plan(self, insert=x_new, policy=policy)
+        return plan, plan.host.last_inserted_idx
+
+    def delete(self, idx, *, policy: Optional[str] = None
+               ) -> "InteractionPlan":
+        """Tombstone the live points at physical slots ``idx``.
+        See :func:`update_plan`."""
+        return update_plan(self, delete=idx, policy=policy)
+
+    def update(self, *, insert=None, delete=None,
+               policy: Optional[str] = None) -> "InteractionPlan":
+        """See :func:`update_plan` (one batched insert+delete step)."""
+        return update_plan(self, insert=insert, delete=delete,
+                           policy=policy)
+
+    def compact(self) -> "InteractionPlan":
+        """Force the compaction tier: rebuild on the surviving points
+        (capacity shrinks to ``n_alive``; ``host.compact_map`` maps old
+        physical slots to new indices). See :func:`update_plan`."""
+        return update_plan(self, policy="compact")
+
     @property
     def refresh_stats(self) -> RefreshStats:
         return self.host.refresh
@@ -452,7 +578,9 @@ class InteractionPlan:
         g = (f"{self.host.gamma:.2f}" if self.host.gamma is not None
              else "unscored" if self.host.coo is not None else "n/a")
         f = f"{self.fill:.3f}" if self.fill is not None else "n/a"
-        return (f"InteractionPlan(n={self.n}, ordering="
+        size = (f"n={self.n}" if self.host.alive is None
+                else f"n={self.n_alive}/cap={self.capacity}")
+        return (f"InteractionPlan({size}, ordering="
                 f"{self.config.ordering!r}, bs={self.config.bs}, "
                 f"sb={self.config.sb}, gamma={g}, fill={f}, "
                 f"backend={self.config.backend!r})")
@@ -501,6 +629,7 @@ def build_plan(x, *, k: int = 16, ordering: str = "dual_tree", bs: int = 32,
                with_bsr: bool = True,
                sources: Optional[np.ndarray] = None,
                config: Optional[PlanConfig] = None,
+               capacity: Optional[int] = None,
                **cfg_overrides) -> InteractionPlan:
     """Run the full pipeline (§2.4) over points ``x`` (n, D).
 
@@ -516,7 +645,11 @@ def build_plan(x, *, k: int = 16, ordering: str = "dual_tree", bs: int = 32,
     §3.2: neighbors of the (moving) targets ``x`` among ``sources``; the
     target ordering is applied to both sides, so both must have n points.
     ``config`` overrides every individual knob at once (refresh reuses the
-    lineage's config this way).
+    lineage's config this way). ``capacity`` pre-allocates physical row
+    slots beyond ``len(x)``: the extra slots are tombstoned (dead) until
+    ``plan.insert`` claims them, so a known insert rate can be absorbed
+    without any reallocation (§streaming; requires ``with_bsr=True``
+    semantics to matter but is accepted for profile-only plans too).
     """
     if config is None:
         config = PlanConfig(k=k, ordering=ordering, bs=bs, sb=sb,
@@ -571,6 +704,11 @@ def build_plan(x, *, k: int = 16, ordering: str = "dual_tree", bs: int = 32,
         plan.host.values_fn = values
     elif values is not None:
         plan.host.values_mode = "static"
+    if capacity is not None:
+        if capacity < n:
+            raise ValueError(f"capacity={capacity} < n={n} points")
+        if capacity > n:
+            plan = _spread_holes(_grow_plan(plan, capacity))
     return plan
 
 
@@ -613,9 +751,15 @@ def _cell_migration(y_ref: np.ndarray, y_new: np.ndarray, bits: int,
 
 
 def _knn_subset(x_new: np.ndarray, rows_idx: np.ndarray,
-                sources: Optional[np.ndarray], k: int):
-    """Exact kNN edges (original index space) for a subset of target rows."""
+                sources: Optional[np.ndarray], k: int,
+                valid: Optional[np.ndarray] = None):
+    """Exact kNN edges (original index space) for a subset of target rows.
+
+    ``valid`` masks the candidate sources (streaming: tombstoned physical
+    slots hold stale coordinates and must never be picked as neighbors).
+    """
     tq = jnp.asarray(x_new[rows_idx])
+    vd = None if valid is None else jnp.asarray(valid)
     # size the scan block to the subset (quantized to powers of two so a
     # lifetime of refreshes compiles a handful of kernels, not one per
     # migration count) — the default 1024 pads small patches 10x
@@ -624,14 +768,16 @@ def _knn_subset(x_new: np.ndarray, rows_idx: np.ndarray,
     if sources is None:
         # targets are a subset of the sources: take k+1 and drop each
         # row's own point (knn_graph's exclude_self assumes aligned sets)
-        idx, d2 = knn.knn_graph(tq, jnp.asarray(x_new), k + 1, block=block)
+        idx, d2 = knn.knn_graph(tq, jnp.asarray(x_new), k + 1, block=block,
+                                valid=vd)
         idx, d2 = np.asarray(idx), np.asarray(d2)
         keep = idx != rows_idx[:, None]
         order = np.argsort(~keep, axis=1, kind="stable")  # kept first,
         idx = np.take_along_axis(idx, order, 1)[:, :k]    # distance order
         d2 = np.take_along_axis(d2, order, 1)[:, :k]      # preserved
     else:
-        idx, d2 = knn.knn_graph(tq, jnp.asarray(sources), k, block=block)
+        idx, d2 = knn.knn_graph(tq, jnp.asarray(sources), k, block=block,
+                                valid=vd)
         idx, d2 = np.asarray(idx), np.asarray(d2)
     return np.repeat(rows_idx, k), idx.reshape(-1), d2.reshape(-1)
 
@@ -650,7 +796,8 @@ def _patch_pattern(host: _PlanHost, cfg: PlanConfig, n: int,
     drop = np.isin(r_o, rows_m)
     if cfg.symmetrize:
         drop |= np.isin(c_o, rows_m)
-    nr, nc, nd2 = _knn_subset(x_new, rows_m, host.sources, cfg.k)
+    nr, nc, nd2 = _knn_subset(x_new, rows_m, host.sources, cfg.k,
+                              valid=host.alive)
     nv = _edge_values(host, nr, nc, nd2)
     if cfg.symmetrize:
         nr, nc, nv = _symmetrize_pattern(nr, nc, nv, n)
@@ -684,6 +831,7 @@ def _refresh_patch(plan: InteractionPlan, x_new, y_new, moved, stats,
         # pattern does not follow the coords (or nothing changed cells):
         # bookkeeping only; ordering drift keeps accumulating
         host2 = dataclasses.replace(host, y_last=y_new, refresh=stats,
+                                    x=x_new, codes=None,
                                     last_patch_rb=np.empty(0, np.int64))
         return InteractionPlan(cfg, n, plan.bsr, plan.pi, plan.inv, host2)
     r_all, c_all, v_all, dropped_rows = _patch_pattern(host, cfg, n, x_new,
@@ -701,6 +849,7 @@ def _refresh_patch(plan: InteractionPlan, x_new, y_new, moved, stats,
             stats = dataclasses.replace(stats, degraded=True)
     host2 = dataclasses.replace(host, coo=(r2n, c2n, v_all), coo_dev=None,
                                 gamma=None, y_last=y_new, refresh=stats,
+                                x=x_new, codes=None,
                                 last_patch_rb=touched_rb, shard_cache={})
     return InteractionPlan(cfg, n, bsr, plan.pi, plan.inv, host2)
 
@@ -747,6 +896,7 @@ def _refresh_rebucket(plan: InteractionPlan, x_new, y_new, moved, stats,
     host2 = dataclasses.replace(
         host, pi=pi, inv=inv, coo=(r2n, c2n, v2), coo_dev=None, tree=tree,
         embedding=y_new, y_last=y_new, gamma=None, refresh=stats,
+        x=x_new, codes=None, code_lo=None, code_hi=None,
         tuned_backend={}, last_patch_rb=None, shard_cache={})
     return InteractionPlan(cfg, n, bsr, jnp.asarray(pi, jnp.int32),
                            jnp.asarray(inv, jnp.int32), host2)
@@ -813,8 +963,9 @@ def refresh_plan(plan: InteractionPlan, x_new,
     x_new = np.asarray(x_new, np.float32)
     if x_new.shape[0] != plan.n:
         raise ValueError(
-            f"refresh expects the same {plan.n} points, got "
-            f"{x_new.shape[0]} (insertion/deletion needs a fresh build)")
+            f"refresh expects the same {plan.n}-slot physical buffer, got "
+            f"{x_new.shape[0]} (use plan.insert/plan.delete/update_plan "
+            "for growing or shrinking point sets)")
     if x_new.shape[1] != host.embed_axes.shape[0]:
         raise ValueError(
             f"refresh expects {host.embed_axes.shape[0]}-dim points, got "
@@ -825,10 +976,25 @@ def refresh_plan(plan: InteractionPlan, x_new,
                                      jnp.asarray(host.embed_axes)))
     d = y_new.shape[1]
     shift = _cmp_shift(plan.n, d, cfg.bits, host.tree, cfg.leaf_size)
-    drift = _cell_migration(host.embedding, y_new, cfg.bits, shift)
-    moved = _cell_migration(host.y_last, y_new, cfg.bits, shift)
-    drift_frac = float(drift.mean())
-    moved_frac = float(moved.mean())
+    holey = host.alive is not None and not host.alive.all()
+    if holey:
+        # tombstoned slots carry stale/garbage coordinates: they must
+        # neither read as migration nor pollute the joint quantization
+        # bounding box, so detection runs on the live rows only
+        live = np.nonzero(host.alive)[0]
+        drift = np.zeros(plan.n, bool)
+        moved = np.zeros(plan.n, bool)
+        drift[live] = _cell_migration(host.embedding[live], y_new[live],
+                                      cfg.bits, shift)
+        moved[live] = _cell_migration(host.y_last[live], y_new[live],
+                                      cfg.bits, shift)
+        denom = max(live.size, 1)
+    else:
+        drift = _cell_migration(host.embedding, y_new, cfg.bits, shift)
+        moved = _cell_migration(host.y_last, y_new, cfg.bits, shift)
+        denom = plan.n
+    drift_frac = float(drift.sum()) / denom
+    moved_frac = float(moved.sum()) / denom
 
     action = policy or cfg.refresh_policy
     if action == "auto":
@@ -841,6 +1007,14 @@ def refresh_plan(plan: InteractionPlan, x_new,
     if action not in ("patch", "rebucket", "rebuild"):
         raise ValueError(f"unknown refresh policy {action!r}; expected "
                          "auto | patch | rebucket | rebuild")
+    if action == "rebuild" and holey:
+        if policy == "rebuild":
+            raise ValueError(
+                "rebuild on a plan with tombstoned rows would renumber "
+                "the physical slots; use plan.compact() (or "
+                "update_plan(policy='compact')) to rebuild on the "
+                "survivors explicitly")
+        action = "rebucket"  # index-stable escalation cap for streamers
 
     # free γ-reference snapshot: if a score was already computed for the
     # outgoing pattern, keep it as the drift baseline for this lineage
@@ -857,3 +1031,675 @@ def refresh_plan(plan: InteractionPlan, x_new,
         return _refresh_rebucket(plan, x_new, y_new, moved, stats,
                                  moved_frac)
     return _refresh_rebuild(plan, x_new, stats, moved_frac)
+
+
+# ---------------------------------------------------------------------------
+# streaming point sets (lifecycle: growing/shrinking n, capacity layout)
+# ---------------------------------------------------------------------------
+
+
+def _round_up(v: int, q: int) -> int:
+    return -(-v // q) * q
+
+
+def _stream_codes(host: _PlanHost, cfg: PlanConfig):
+    """Per-physical-slot Morton codes in a frozen quantization box.
+
+    Computed lazily on the first streamed insert of a lineage (and
+    invalidated by every refresh tier, whose coordinates supersede them):
+    live slots code their current embedding against the live bounding
+    box; holes are seeded with quantile codes (:func:`_seed_hole_codes`)
+    so they interleave through the ordering on the next rebucket. The box
+    is frozen so codes of points inserted later are comparable — new
+    points outside it clip to the boundary cells, which only softens the
+    placement heuristic, never correctness.
+    """
+    if host.codes is not None:
+        return host.codes.copy(), host.code_lo, host.code_hi
+    emb = host.embedding
+    alive = (np.ones(len(emb), bool) if host.alive is None
+             else host.alive)
+    live = emb[alive]
+    lo, hi = live.min(0), live.max(0)
+    codes = np.empty(len(emb), np.uint64)
+    codes[alive] = np.asarray(hierarchy.morton_codes_box(
+        jnp.asarray(live), jnp.asarray(lo), jnp.asarray(hi),
+        cfg.bits)).astype(np.uint64)
+    holes = ~alive
+    if holes.any():
+        codes[holes] = _seed_hole_codes(codes[alive], int(holes.sum()))
+    return codes, lo, hi
+
+
+def _seed_hole_codes(live_codes: np.ndarray, n_holes: int) -> np.ndarray:
+    """Codes for unoccupied capacity: quantiles of the live code
+    distribution. On the next rebucket the holes interleave *uniformly
+    through the ordering* (proportional to point density), so streamed
+    inserts find a free slot close to their Morton leaf instead of
+    displacing to wherever the last deletion happened to be."""
+    qs = np.sort(live_codes)
+    idx = ((np.arange(n_holes) + 0.5) * len(qs) / n_holes).astype(np.int64)
+    return qs[np.clip(idx, 0, len(qs) - 1)]
+
+
+def _route_dead_edges(r2, c2, v2, dead_cl, C, host, x, pi, cfg):
+    """Replacement edges for rows that lose a tombstoned neighbor.
+
+    Exactly recomputing kNN for every row that referenced a deleted point
+    costs a distance scan per deletion — the same O(n) the tombstone tier
+    exists to avoid. Instead each broken edge (i -> j_dead) is *routed
+    around the tombstone*: i adopts one of j's own surviving neighbors
+    (they are already in the pattern, cluster-local by construction, and
+    were within one hop of the lost edge). The pattern stays near-k-full
+    and local between compactions — an approximation of the exact kNN
+    profile that the compaction tier periodically re-exactifies.
+
+    Returns cluster-space ``(rows, cols, vals)`` of the replacement edges
+    (both endpoints alive; deduplicated against existing edges).
+    """
+    empty = (np.empty(0, r2.dtype), np.empty(0, c2.dtype),
+             np.empty(0, np.float32))
+    dead_c = np.isin(c2, dead_cl)
+    dead_r = np.isin(r2, dead_cl)
+    lost = dead_c & ~dead_r             # surviving row -> dead neighbor
+    if not lost.any():
+        return empty
+    lost_r, lost_j = r2[lost], c2[lost]
+    sel = dead_r & ~dead_c              # dead row -> surviving neighbor
+    order = np.argsort(r2[sel], kind="stable")
+    j_s, nbr_s = r2[sel][order], c2[sel][order]
+    uj, ustart = np.unique(j_s, return_index=True)
+    if uj.size == 0:
+        return empty
+    counts = np.diff(np.append(ustart, len(j_s)))
+    kmax = int(counts.max(initial=0))
+    # candidate table: row g holds dead point uj[g]'s surviving neighbors
+    mat = np.full((len(uj), kmax), -1, np.int64)
+    grp = np.searchsorted(uj, j_s)
+    mat[grp, np.arange(len(j_s)) - ustart[grp]] = nbr_s
+    pos = np.searchsorted(uj, lost_j)
+    has = (pos < len(uj)) & (uj[np.clip(pos, 0, len(uj) - 1)] == lost_j)
+    if not has.any():
+        return empty
+    lost_r, pos = lost_r[has], pos[has]
+    cand = mat[pos]                                      # (L, kmax)
+    valid = (cand >= 0) & (cand != lost_r[:, None])
+    # a candidate i already points at is no replacement
+    kept_key = np.sort(r2[~(dead_r | dead_c)].astype(np.int64) * C
+                       + c2[~(dead_r | dead_c)])
+    ckey = lost_r[:, None].astype(np.int64) * C + np.clip(cand, 0, None)
+    valid &= ~np.isin(ckey, kept_key)
+    # nearest valid candidate, by actual distance (the routed edge should
+    # be the best of j's neighborhood for i, not an arbitrary member)
+    xi = x[pi[lost_r]]
+    xc = x[pi[np.clip(cand, 0, None)]]
+    d2 = np.sum((xi[:, None, :] - xc) ** 2, axis=2)
+    d2 = np.where(valid, d2, np.inf)
+    best = np.argmin(d2, axis=1)
+    bd2 = d2[np.arange(len(best)), best]
+    ok = np.isfinite(bd2)
+    if not ok.any():
+        return empty
+    rr = lost_r[ok]
+    cc = cand[np.arange(len(best)), best][ok]
+    dd2 = bd2[ok]
+    # two broken edges of one row may route to the same candidate
+    key = rr.astype(np.int64) * C + cc
+    _, first = np.unique(key, return_index=True)
+    rr, cc, dd2 = rr[first], cc[first], dd2[first]
+    if host.values_mode == "fn":
+        vv = np.asarray(host.values_fn(pi[rr], pi[cc], dd2), np.float32)
+    else:
+        vv = np.ones(rr.size, np.float32)
+    return rr, cc, vv
+
+
+def _guard_gamma(r2, c2, alive_sorted, sigma: float, C: int) -> float:
+    """γ of the live pattern, for the streaming drift guard.
+
+    Same estimator as ``plan.gamma`` (dead slots compacted away), with the
+    edge arrays zero-weight-padded to a quantized length so per-step guard
+    evaluations over a drifting nnz reuse one compiled kernel."""
+    if alive_sorted.all():
+        rr, cc = r2, c2
+    else:
+        rr, cc, _ = measures.compact_live(r2, c2, alive_sorted)
+    q = -(-max(len(rr), 1) // 8192) * 8192
+    pad = q - len(rr)
+    w = np.ones(len(rr), np.float32)
+    if pad:
+        rr = np.concatenate([rr, np.zeros(pad, rr.dtype)])
+        cc = np.concatenate([cc, np.zeros(pad, cc.dtype)])
+        w = np.concatenate([w, np.zeros(pad, np.float32)])
+    # scored at grid size n=C (stable across steps, unlike the live
+    # count) on a coarse 256-cell grid: successive guard calls and their
+    # reference stay one cheap compiled kernel and one consistent
+    # estimator — only the *relative* drift matters to the guard
+    return float(measures.gamma_score(jnp.asarray(rr), jnp.asarray(cc),
+                                      sigma, C, cells=256,
+                                      weights=jnp.asarray(w)))
+
+
+def _adopt_arrivals(r2, c2, v2, rn, cn, d2_fwd, host, x, pi, C,
+                    cfg: PlanConfig):
+    """Online reverse-kNN maintenance: existing rows adopt an arrival.
+
+    A fresh build would point every row whose kNN the new point enters at
+    it; the streamed pattern gets the same effect edge-exactly enough by
+    letting each neighbor ``q`` of an arrival ``p`` adopt ``p`` iff
+    ``d(q, p)`` beats ``q``'s current worst neighbor — which is then
+    dropped, so rows keep k edges and nnz stays balanced (naively
+    *adding* reverse edges inflates γ above a fresh build's). One
+    adoption per row per batch, the closest arrival.
+
+    ``(rn, cn, d2_fwd)`` are the arrivals' forward edges p -> q (cluster
+    space, squared distances). Returns the updated ``(r2, c2, v2)`` plus
+    the adopters' row set (their blocks join the patch).
+    """
+    no_rows = np.empty(0, np.int64)
+    # best arrival per adopter q (closest first occurrence)
+    order = np.lexsort((d2_fwd, cn))
+    uq, first = np.unique(cn[order], return_index=True)
+    chosen = order[first]
+    q_all, p_all, d2_all = cn[chosen], rn[chosen], d2_fwd[chosen]
+
+    # current worst neighbor of each candidate adopter (distances derived
+    # from coordinates — the pattern does not store them)
+    sel = np.nonzero(np.isin(r2, q_all))[0]
+    if sel.size == 0:
+        return r2, c2, v2, no_rows
+    er, ec = r2[sel], c2[sel]
+    ed2 = np.sum((x[pi[er]] - x[pi[ec]]) ** 2, axis=1)
+    worst_order = np.lexsort((-ed2, er))
+    wq, wfirst = np.unique(er[worst_order], return_index=True)
+    worst_idx = sel[worst_order[wfirst]]          # global COO index
+    worst_d2 = ed2[worst_order[wfirst]]
+
+    pos = np.searchsorted(wq, q_all)
+    hasq = (pos < len(wq)) & (wq[np.clip(pos, 0, max(len(wq) - 1, 0))]
+                              == q_all)
+    adopt = hasq & (d2_all < worst_d2[np.clip(pos, 0, max(len(wq) - 1, 0))])
+    if not adopt.any():
+        return r2, c2, v2, no_rows
+    q_a, p_a, d2_a = q_all[adopt], p_all[adopt], d2_all[adopt]
+    drop_idx = worst_idx[pos[adopt]]
+
+    keep = np.ones(len(r2), bool)
+    keep[drop_idx] = False
+    if host.values_mode == "fn":
+        va = np.asarray(host.values_fn(pi[q_a], pi[p_a], d2_a), np.float32)
+    else:
+        va = np.ones(q_a.size, np.float32)
+    r2 = np.concatenate([r2[keep], q_a])
+    c2 = np.concatenate([c2[keep], p_a])
+    v2 = np.concatenate([v2[keep], va])
+    return r2, c2, v2, np.unique(q_a)
+
+
+def _stream_rebucket(pi, codes, r2, c2, C: int):
+    """Stable re-sort of the physical slots by their maintained Morton
+    codes; relabels the cluster-space COO to match. Points (and holes)
+    with unchanged codes keep their relative order."""
+    old_pi = pi
+    order = np.argsort(codes[pi], kind="stable")
+    pi2 = pi[order]
+    inv2 = np.empty_like(pi2)
+    inv2[pi2] = np.arange(C)
+    return pi2, inv2, inv2[old_pi[r2]], inv2[old_pi[c2]]
+
+
+def _spread_holes(plan: InteractionPlan) -> InteractionPlan:
+    """Interleave pre-allocated capacity through the ordering (build-time
+    only): seed the holes with quantile codes and rebucket once, so the
+    spare slots sit inside the leaves inserts will target — instead of
+    bunched at the tail where every early insert would displace to."""
+    host, cfg = plan.host, plan.config
+    if host.embedding is None:
+        return plan            # no spatial ordering to interleave into
+    codes, lo, hi = _stream_codes(host, cfg)
+    r2, c2, v2 = host.coo
+    pi, inv, r2n, c2n = _stream_rebucket(host.pi, codes, r2, c2, plan.n)
+    bsr = (build_bsr(r2n, c2n, v2, plan.n, bs=cfg.bs, sb=cfg.sb,
+                     slack=cfg.ell_slack)
+           if plan.bsr is not None else None)
+    stats = host.refresh
+    if bsr is not None:
+        stats = dataclasses.replace(stats, fill0=bsr.fill)
+    host2 = dataclasses.replace(
+        host, pi=pi, inv=inv, coo=(r2n, c2n, v2), coo_dev=None, tree=None,
+        codes=codes, code_lo=lo, code_hi=hi, refresh=stats,
+        shard_cache={}, last_patch_rb=None)
+    return InteractionPlan(cfg, plan.n, bsr, jnp.asarray(pi, jnp.int32),
+                           jnp.asarray(inv, jnp.int32), host2)
+
+
+def _require_streamable(plan: InteractionPlan) -> None:
+    host = plan.host
+    if host.embed_axes is None or host.embedding is None:
+        raise ValueError(
+            "plan is not streamable: no stored embedding map (build with "
+            "ordering='dual_tree' and coordinates x)")
+    if host.x is None:
+        raise ValueError(
+            "plan is not streamable: original coordinates were not "
+            "retained (rebuild via build_plan, or restore a checkpoint "
+            "saved from a streamable plan)")
+    if not host.pattern_from_knn or host.values_mode == "static":
+        raise ValueError(
+            "plan is not streamable: its pattern/values are externally "
+            "fixed, so edges for inserted points cannot be derived "
+            "(build from points with values=None or a callable)")
+    if host.sources is not None:
+        raise ValueError(
+            "fixed-source plans (sources=) tie targets and sources to "
+            "one index space; streaming inserts/deletes are not "
+            "meaningful there")
+
+
+def _compact_plan(plan: InteractionPlan, alive: np.ndarray, x: np.ndarray,
+                  stats: RefreshStats, n_ins: int, n_del: int,
+                  inserted_phys: Optional[np.ndarray],
+                  grows: int) -> InteractionPlan:
+    """Compaction tier: full build on the surviving points (capacity
+    shrinks to the live count — identical, bit for bit, to a fresh
+    ``build_plan`` over those points) with lineage telemetry carried and
+    ``host.compact_map`` recording old physical slot -> new index."""
+    host, cfg = plan.host, plan.config
+    values = host.values_fn if host.values_mode == "fn" else None
+    new = build_plan(x[alive], config=cfg, values=values, sigma=host.sigma,
+                     with_bsr=plan.bsr is not None)
+    cmap = np.full(len(alive), -1, np.int64)
+    cmap[alive] = np.arange(int(alive.sum()))
+    new.host.compact_map = cmap
+    if inserted_phys is not None:
+        new.host.last_inserted_idx = cmap[inserted_phys]
+    if stats.gamma0 is not None or host.gamma is not None:
+        # the lineage had a γ reference: score the compacted plan so the
+        # guard stays armed. gamma0 itself is left None — the next
+        # update_plan re-derives the reference with the guard's own
+        # (coarse-grid) estimator, which is not comparable to this exact
+        # score.
+        _ = new.gamma
+    new.host.refresh = dataclasses.replace(
+        new.host.refresh, builds=stats.builds + 1, patches=stats.patches,
+        rebuckets=stats.rebuckets, rebuilds=stats.rebuilds,
+        appends=stats.appends + (1 if n_ins else 0),
+        tombstones=stats.tombstones + (1 if n_del else 0),
+        compactions=stats.compactions + 1, grows=grows,
+        restripes=stats.restripes,
+        inserted_total=stats.inserted_total + n_ins,
+        deleted_total=stats.deleted_total + n_del,
+        last_action="compact")
+    return new
+
+
+def _grow_plan(plan: InteractionPlan, capacity: int) -> InteractionPlan:
+    """Reallocate the physical layout to ``capacity`` slots: new slots
+    are appended at the tail of both index spaces as tombstoned (dead)
+    capacity — empty BSR row-blocks (``blocksparse.append_rows``), tail
+    permutation entries, sentinel placement codes."""
+    host = plan.host
+    n0, grow = plan.n, capacity - plan.n
+    if grow <= 0:
+        return plan
+    pi = np.concatenate([host.pi, np.arange(n0, capacity)])
+    inv = np.concatenate([host.inv, np.arange(n0, capacity)])
+    alive = np.zeros(capacity, bool)
+    alive[:n0] = True if host.alive is None else host.alive
+    pad2 = ((0, grow), (0, 0))
+
+    def _pad_rows(a, fill=0.0):
+        return (None if a is None
+                else np.pad(a, pad2, constant_values=fill))
+
+    live_mask = (np.ones(n0, bool) if host.alive is None else host.alive)
+    codes = (None if host.codes is None
+             else np.concatenate([host.codes,
+                                  _seed_hole_codes(
+                                      host.codes[live_mask], grow)]))
+    host2 = dataclasses.replace(
+        host, pi=pi, inv=inv, alive=alive, x=_pad_rows(host.x),
+        embedding=_pad_rows(host.embedding), y_last=_pad_rows(host.y_last),
+        codes=codes, coo_dev=None, shard_cache={},
+        last_patch_rb=None)
+    bsr = (append_rows(plan.bsr, capacity)
+           if plan.bsr is not None else None)
+    return InteractionPlan(plan.config, capacity, bsr,
+                           jnp.asarray(pi, jnp.int32),
+                           jnp.asarray(inv, jnp.int32), host2)
+
+
+def update_plan(plan: InteractionPlan, *, insert=None, delete=None,
+                policy: Optional[str] = None) -> InteractionPlan:
+    """One streaming step: delete ``delete`` (physical row indices), then
+    insert ``insert`` (m, D) new points, escalating through the streaming
+    tiers of the drift policy:
+
+      tombstone  (deletes) rows are marked dead in the validity mask, the
+                 COO drops every edge touching them, and only the
+                 row-blocks that held such an edge are re-dressed in
+                 place (``blocksparse.tombstone_rows``) — the permutation
+                 and every other block are untouched
+      append     (inserts) points re-embed through the stored PCA map,
+                 claim the free (tombstoned) cluster slot nearest their
+                 Morton leaf, kNN is computed for the new rows only, and
+                 the affected row-blocks are patched in place; when no
+                 free slot remains, capacity grows by
+                 ``PlanConfig.grow_frac`` (tail slots, amortized O(1))
+      restripe   an append that overflows the pinned ELL width (slack
+                 from ``PlanConfig.ell_slack``) rebuilds the *storage
+                 only* from the maintained COO — ordering, permutation
+                 and kNN rows kept, so it costs a ``build_bsr``, not the
+                 pipeline (counted in ``RefreshStats.restripes``; sharded
+                 plans re-shard on it)
+      compact    full rebuild on the surviving points — triggered when
+                 the dead fraction exceeds ``PlanConfig.max_dead_frac``
+                 or an overflow restripe shows fill degradation beyond
+                 ``PlanConfig.drift_tol`` (the layout genuinely decayed);
+                 bit-identical to a fresh ``build_plan`` over the
+                 survivors, with ``host.compact_map`` mapping old
+                 physical slots to new indices
+
+    ``policy`` forces a tier: ``"append"``/``"tombstone"`` pin the
+    in-place tiers (an ELL overflow then raises instead of restriping),
+    ``"compact"`` forces the rebuild, ``None``/``"auto"`` escalate as
+    above. Between compactions the pattern is maintained approximately:
+    inserted rows get exact kNN edges, but a surviving row whose
+    neighbor was deleted keeps a short row until the next compaction
+    (the γ telemetry and ``plan.dead_frac`` expose the decay). Returns a
+    new plan; the input is never mutated. The inserted points' physical
+    row indices land in ``host.last_inserted_idx`` (see
+    :meth:`InteractionPlan.insert`).
+    """
+    if policy not in (None, "auto", "append", "tombstone", "compact"):
+        raise ValueError(f"unknown streaming policy {policy!r}; expected "
+                         "auto | append | tombstone | compact")
+    _require_streamable(plan)
+    host, cfg = plan.host, plan.config
+    stats = host.refresh
+
+    ins = None
+    if insert is not None:
+        ins = np.asarray(insert, np.float32)
+        if ins.ndim != 2 or ins.shape[1] != host.embed_axes.shape[0]:
+            raise ValueError(
+                f"insert expects (m, {host.embed_axes.shape[0]}) points, "
+                f"got shape {ins.shape}")
+        if ins.shape[0] == 0:
+            ins = None
+    del_idx = None
+    if delete is not None:
+        del_idx = np.unique(np.asarray(delete, np.int64))
+        if del_idx.size == 0:
+            del_idx = None
+    if ins is None and del_idx is None and policy != "compact":
+        return plan
+
+    grows = stats.grows
+
+    # -- copy-on-write streaming state (the input plan stays valid) --------
+    C = plan.n
+    alive = (np.ones(C, bool) if host.alive is None else host.alive.copy())
+    x = host.x.copy()
+    emb = host.embedding.copy()
+    y_last = (emb.copy() if host.y_last is None else host.y_last.copy())
+    pi, inv = host.pi, host.inv
+    r2, c2, v2 = host.coo
+    bsr = plan.bsr
+    touched_parts = []
+    overflow = False
+    restriped_del = False
+
+    n_del = 0
+    if del_idx is not None:
+        if del_idx.min(initial=0) < 0 or del_idx.max(initial=-1) >= C:
+            raise ValueError(
+                f"delete indices out of range for capacity {C}")
+        if not alive[del_idx].all():
+            dead = del_idx[~alive[del_idx]]
+            raise ValueError(
+                f"delete of already-dead rows {dead[:8].tolist()}"
+                f"{'...' if dead.size > 8 else ''}")
+        n_del = int(del_idx.size)
+        alive[del_idx] = False
+        if int(alive.sum()) <= cfg.k:
+            raise ValueError(
+                f"deleting {n_del} rows leaves {int(alive.sum())} live "
+                f"points <= k={cfg.k}; the kNN pattern needs more")
+        if not cfg.symmetrize:
+            # route broken edges around the tombstones before they are
+            # filtered (replacements touch the same blocks the drops do)
+            rr, cc, vv = _route_dead_edges(r2, c2, v2, inv[del_idx], C,
+                                           host, x, pi, cfg)
+            if rr.size:
+                r2 = np.concatenate([r2, rr])
+                c2 = np.concatenate([c2, cc])
+                v2 = np.concatenate([v2, vv])
+        if bsr is not None and ins is None:
+            # pure delete: the storage-level tombstone primitive. The
+            # routed replacement edges above can push an ELL-full block
+            # over its width — restripe then, like the insert path.
+            try:
+                bsr, r2, c2, v2, touched_del = tombstone_rows(
+                    bsr, r2, c2, v2, inv[del_idx])
+            except ValueError:
+                dead_cl = inv[del_idx]
+                drop = np.isin(r2, dead_cl) | np.isin(c2, dead_cl)
+                r2, c2, v2 = r2[~drop], c2[~drop], v2[~drop]
+                if policy in ("append", "tombstone"):
+                    raise ValueError(
+                        "a routed tombstone edge overflowed the pinned "
+                        f"ELL width under policy={policy!r}; raise "
+                        "PlanConfig.ell_slack or let the auto policy "
+                        "restripe")
+                bsr = build_bsr(r2, c2, v2, C, bs=cfg.bs, sb=cfg.sb,
+                                slack=cfg.ell_slack)
+                restriped_del = True
+                touched_del = np.empty(0, np.int64)
+        else:
+            # combined with an insert below: filter the pattern here and
+            # re-dress delete- and insert-touched blocks in ONE patch
+            dead_cl = inv[del_idx]
+            drop = np.isin(r2, dead_cl) | np.isin(c2, dead_cl)
+            touched_del = np.unique(np.concatenate(
+                [r2[drop] // cfg.bs, dead_cl // cfg.bs]))
+            r2, c2, v2 = r2[~drop], c2[~drop], v2[~drop]
+        touched_parts.append(touched_del)
+
+    inserted_phys = None
+    n_ins = 0
+    codes = code_lo = code_hi = None
+    if ins is not None:
+        n_ins = int(ins.shape[0])
+        # codes from the *pre-delete* validity state: a slot tombstoned
+        # this very step keeps its point's code, so the hole it leaves
+        # advertises the leaf neighborhood it sits in
+        codes, code_lo, code_hi = _stream_codes(host, cfg)
+        free_phys = np.nonzero(~alive)[0]
+        if n_ins > free_phys.size:
+            # grow capacity: reallocate with a chunk of tail slots so the
+            # amortized cost per insert is O(1)
+            need = n_ins - free_phys.size
+            grow = max(need, int(np.ceil(cfg.grow_frac * C)))
+            C2 = _round_up(C + grow, cfg.bs)
+            scratch = InteractionPlan(cfg, C, bsr,
+                                      plan.pi, plan.inv,
+                                      dataclasses.replace(
+                                          host, alive=alive, x=x,
+                                          embedding=emb, y_last=y_last,
+                                          codes=codes, code_lo=code_lo,
+                                          code_hi=code_hi,
+                                          coo=(r2, c2, v2)))
+            grown = _grow_plan(scratch, C2)
+            h2 = grown.host
+            C, bsr = C2, grown.bsr
+            alive, x, emb, y_last = h2.alive, h2.x, h2.embedding, h2.y_last
+            pi, inv, codes = h2.pi, h2.inv, h2.codes
+            grows += 1
+
+        y_ins = np.asarray(apply_pca_map(jnp.asarray(ins),
+                                         jnp.asarray(host.embed_mean),
+                                         jnp.asarray(host.embed_axes)))
+        codes_ins = np.asarray(hierarchy.morton_codes_box(
+            jnp.asarray(y_ins), jnp.asarray(code_lo),
+            jnp.asarray(code_hi), cfg.bits)).astype(np.uint64)
+
+        # claim the free cluster slot nearest each point's Morton leaf;
+        # claiming in code order keeps batch-mates from the same leaf in
+        # adjacent slots (tail blocks then see a compact column footprint)
+        free_pos = np.nonzero(~alive[pi])[0]
+        targets = hierarchy.insertion_positions(codes[pi], codes_ins)
+        order = np.argsort(codes_ins, kind="stable")
+        pos_sorted = ordering_mod.claim_free_slots(free_pos, targets[order])
+        pos = np.empty_like(pos_sorted)
+        pos[order] = pos_sorted
+        phys = np.asarray(pi[pos], np.int64)
+        alive[phys] = True
+        x[phys] = ins
+        emb[phys] = y_ins
+        y_last[phys] = y_ins
+        codes[phys] = codes_ins
+        inserted_phys = phys
+
+        if int(alive.sum()) <= cfg.k:
+            raise ValueError(
+                f"{int(alive.sum())} live points after insert but "
+                f"k={cfg.k}; the kNN pattern needs more")
+        nr, nc, nd2 = _knn_subset(x, phys, None, cfg.k, valid=alive)
+        nv = _edge_values(host, nr, nc, nd2)
+        if cfg.symmetrize:
+            nr, nc, nv = _symmetrize_pattern(nr, nc, nv, C)
+        rn, cn = ordering_mod.apply_ordering(nr, nc, pi)
+        if not cfg.symmetrize:
+            # reverse maintenance: rows whose kNN the arrivals enter
+            # adopt them (dropping their previous worst neighbor), like
+            # a fresh build would point them at the new points
+            r2, c2, v2, adopters = _adopt_arrivals(
+                r2, c2, v2, rn, cn, nd2, host, x, pi, C, cfg)
+            if adopters.size:
+                touched_parts.append(np.unique(adopters // cfg.bs))
+        r2 = np.concatenate([r2, rn])
+        c2 = np.concatenate([c2, cn])
+        v2 = np.concatenate([v2, nv])
+        if cfg.symmetrize:   # mirrored edges may duplicate kept ones
+            key = r2.astype(np.int64) * C + c2
+            _, first = np.unique(key, return_index=True)
+            r2, c2, v2 = r2[first], c2[first], v2[first]
+        touched_ins = np.unique(rn // cfg.bs)
+        touched_parts.append(touched_ins)
+
+    # -- tier decision ------------------------------------------------------
+    dead_frac = 1.0 - int(alive.sum()) / max(C, 1)
+    force_inplace = policy in ("append", "tombstone")
+    if (policy == "compact" or dead_frac > cfg.max_dead_frac) \
+            and not force_inplace:
+        return _compact_plan(plan, alive, x, stats, n_ins, n_del,
+                             inserted_phys, grows)
+
+    # γ-drift guard (armed once the lineage holds a γ reference — score
+    # the plan once to opt in): displaced inserts decay the *ordering*,
+    # which a streaming rebucket repairs at build_bsr cost — a stable
+    # re-sort of the maintained per-slot Morton codes, no kNN, no
+    # re-embedding (the paper's ordering stays the asset; only its
+    # bookkeeping is refreshed)
+    g_now = None
+    rebucketed = False
+    restriped_wide = False
+    alive_sorted = alive[pi]
+    if bsr is not None and n_ins and not force_inplace:
+        ref = stats.gamma0
+        if ref is None and host.gamma is not None:
+            # arm the guard: the reference must come from the same (cheap,
+            # coarse-grid) estimator the per-step evaluations use, so
+            # score the pre-update pattern once
+            r0, c0, _ = host.coo
+            prev_alive = (np.ones(plan.n, bool) if host.alive is None
+                          else host.alive)[host.pi]
+            ref = _guard_gamma(r0, c0, prev_alive, host.sigma, C)
+        if ref is not None:
+            if stats.gamma0 is None:
+                stats = dataclasses.replace(stats, gamma0=ref)
+            g_now = _guard_gamma(r2, c2, alive_sorted, host.sigma, C)
+            rebucketed = measures.gamma_drift(ref, g_now) > cfg.gamma_tol
+
+    gamma0_next = stats.gamma0
+    if rebucketed:
+        pi, inv, r2, c2 = _stream_rebucket(pi, codes, r2, c2, C)
+        bsr = build_bsr(r2, c2, v2, C, bs=cfg.bs, sb=cfg.sb,
+                        slack=cfg.ell_slack)
+        # re-score under the repaired ordering: the new γ is both the
+        # plan's score and the reference the guard stays armed with
+        g_now = _guard_gamma(r2, c2, alive[pi], host.sigma, C)
+        gamma0_next = g_now
+    elif bsr is not None and touched_parts and ins is not None:
+        touched_now = np.unique(np.concatenate(touched_parts))
+        if touched_now.size > bsr.n_rb // 2:
+            # scattered churn touching most row-blocks: re-dressing the
+            # storage outright from the host COO (one upload, vectorized)
+            # beats scattering a near-complete update through the device
+            # tile tensor — same restripe primitive the overflow path uses
+            bsr = build_bsr(r2, c2, v2, C, bs=cfg.bs, sb=cfg.sb,
+                            slack=cfg.ell_slack)
+            restriped_wide = True
+        else:
+            # in-place: delete- and insert-touched blocks re-dressed in
+            # ONE patch pass (pure deletes were patched by tombstone_rows)
+            try:
+                bsr = patch_bsr(bsr, r2, c2, v2, touched_now)
+            except ValueError:
+                overflow = True   # pinned ELL width exhausted
+
+    restriped = restriped_wide or restriped_del
+    if overflow:
+        # restripe: rebuild the *storage only* from the maintained COO —
+        # ordering, permutation, kNN rows all kept — re-deriving the ELL
+        # width (plus fresh slack) at build_bsr cost, not the pipeline's
+        if force_inplace:
+            raise ValueError(
+                "streamed insert overflowed the pinned ELL width under "
+                f"policy={policy!r}; raise PlanConfig.ell_slack or let "
+                "the auto policy restripe/compact")
+        bsr = build_bsr(r2, c2, v2, C, bs=cfg.bs, sb=cfg.sb,
+                        slack=cfg.ell_slack)
+        restriped = True
+        if measures.fill_drift(stats.fill0, bsr.fill) > cfg.drift_tol:
+            # the restriped layout shows real locality decay: escalate
+            return _compact_plan(plan, alive, x, stats, n_ins, n_del,
+                                 inserted_phys, grows)
+
+    layout_changed = rebucketed or restriped
+    stats2 = dataclasses.replace(
+        stats,
+        appends=stats.appends + (1 if n_ins else 0),
+        tombstones=stats.tombstones + (1 if n_del else 0),
+        grows=grows,
+        restripes=stats.restripes + (1 if restriped else 0),
+        rebuckets=stats.rebuckets + (1 if rebucketed else 0),
+        fill0=(bsr.fill if layout_changed and bsr is not None
+               else stats.fill0),
+        gamma0=gamma0_next,
+        inserted_total=stats.inserted_total + n_ins,
+        deleted_total=stats.deleted_total + n_del,
+        last_action="append" if n_ins else "tombstone")
+    touched = (np.unique(np.concatenate(touched_parts))
+               if touched_parts else np.empty(0, np.int64))
+    if layout_changed:
+        # the ELL layout (or the ordering itself) changed wholesale:
+        # incremental shard patches do not apply (ShardedPlan.update
+        # re-shards on this)
+        touched = None
+    host2 = dataclasses.replace(
+        host, pi=pi, inv=inv, coo=(r2, c2, v2), coo_dev=None,
+        gamma=None,   # lazily rescored; the guard chain (gamma0) is kept
+        #   on its own capacity-grid estimator, see _guard_gamma
+        tree=None if rebucketed else host.tree,
+        embedding=emb, y_last=y_last, x=x, alive=alive,
+        codes=codes if codes is not None else host.codes,
+        code_lo=code_lo if codes is not None else host.code_lo,
+        code_hi=code_hi if codes is not None else host.code_hi,
+        refresh=stats2, last_patch_rb=touched,
+        last_inserted_idx=inserted_phys, compact_map=None, shard_cache={})
+    new_dev = C != plan.n or rebucketed
+    pi_dev = jnp.asarray(pi, jnp.int32) if new_dev else plan.pi
+    inv_dev = jnp.asarray(inv, jnp.int32) if new_dev else plan.inv
+    return InteractionPlan(cfg, C, bsr, pi_dev, inv_dev, host2)

@@ -39,6 +39,48 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
+
+
+def _validate_plan_arrays(m: dict, arrays: dict, where) -> None:
+    """Cross-check a plan manifest against its array payload before any
+    reconstruction: a truncated/mismatched checkpoint fails here with a
+    message naming the offending array, not deep in BSR math."""
+    n = m.get("n")
+    required = ["pi", "inv"]
+    if m.get("bsr") is not None:
+        required += ["bsr_col_idx", "bsr_nbr_mask", "bsr_vals"]
+    missing = [k for k in required if k not in arrays]
+    if missing:
+        raise ValueError(
+            f"plan checkpoint {where} is missing arrays {missing} "
+            f"(manifest promises them)")
+    for key in ("pi", "inv", "alive", "codes"):
+        if key in arrays and len(arrays[key]) != n:
+            raise ValueError(
+                f"plan checkpoint {where}: array {key!r} has "
+                f"{len(arrays[key])} entries, manifest says capacity "
+                f"n={n}")
+    if m.get("bsr") is not None:
+        b = m["bsr"]
+        want = (b["n_rb"], b["max_nbr"], b["bs"], b["bs"])
+        got = arrays["bsr_vals"].shape
+        if got != want:
+            raise ValueError(
+                f"plan checkpoint {where}: bsr_vals shape {got} does not "
+                f"match the manifest BSR layout {want}")
+        if arrays["bsr_col_idx"].shape != want[:2]:
+            raise ValueError(
+                f"plan checkpoint {where}: bsr_col_idx shape "
+                f"{arrays['bsr_col_idx'].shape} does not match the "
+                f"manifest BSR layout {want[:2]}")
+    if "coo_rows" in arrays:
+        lens = {k: len(arrays[k]) for k in
+                ("coo_rows", "coo_cols", "coo_vals") if k in arrays}
+        if len(set(lens.values())) > 1 or len(lens) != 3:
+            raise ValueError(
+                f"plan checkpoint {where}: COO triple is ragged or "
+                f"incomplete ({lens})")
 
 
 def _flatten_with_paths(tree):
@@ -191,7 +233,8 @@ class Checkpointer:
             arrays["coo_rows"], arrays["coo_cols"], arrays["coo_vals"] = (
                 np.asarray(a) for a in host.coo)
         for key in ("embedding", "y_last", "embed_mean", "embed_axes",
-                    "sources"):
+                    "sources", "x", "alive", "codes", "code_lo",
+                    "code_hi"):
             val = getattr(host, key)
             if val is not None:
                 arrays[key] = np.asarray(val)
@@ -203,6 +246,10 @@ class Checkpointer:
             "format": 1,
             "step": step,
             "n": plan.n,
+            # streaming capacity layout: capacity == n (physical slots);
+            # n_alive is the logical live count the restored mask re-derives
+            "capacity": plan.n,
+            "n_alive": plan.n_alive,
             "config": dataclasses.asdict(plan.config),
             "sigma": host.sigma,
             "gamma": host.gamma,
@@ -275,8 +322,34 @@ class Checkpointer:
         if not (d / "manifest.json").exists():
             raise FileNotFoundError(f"no plan {name!r} at step {step} "
                                     f"under {self.dir}")
-        m = json.loads((d / "manifest.json").read_text())
-        arrays = dict(np.load(d / "arrays.npz"))
+        if mesh is not None and not (
+                mesh == "auto" or isinstance(mesh, Mesh)):
+            raise TypeError(
+                f"mesh must be a jax.sharding.Mesh or 'auto', got "
+                f"{mesh!r} — restore_plan re-shards elastically on "
+                "whatever mesh you pass")
+        if isinstance(mesh, Mesh) and axis is not None \
+                and axis not in mesh.shape:
+            raise ValueError(
+                f"restoring mesh has no axis {axis!r} (axes: "
+                f"{tuple(mesh.axis_names)}, {mesh.size} devices)")
+        try:
+            m = json.loads((d / "manifest.json").read_text())
+        except ValueError as e:
+            raise ValueError(
+                f"corrupt plan manifest {d / 'manifest.json'}: {e} "
+                "(checkpoint writes are atomic — this directory was "
+                "modified outside the Checkpointer)") from e
+        if not (d / "arrays.npz").exists():
+            raise FileNotFoundError(
+                f"plan {name!r} at step {step} has a manifest but no "
+                f"arrays.npz under {d}")
+        try:
+            arrays = dict(np.load(d / "arrays.npz"))
+        except Exception as e:
+            raise ValueError(
+                f"corrupt plan arrays {d / 'arrays.npz'}: {e}") from e
+        _validate_plan_arrays(m, arrays, d)
 
         config = api.PlanConfig(**m["config"])
         n = m["n"]
@@ -305,6 +378,9 @@ class Checkpointer:
             y_last=arrays.get("y_last"), sources=arrays.get("sources"),
             pattern_from_knn=m["pattern_from_knn"],
             values_mode=m["values_mode"],
+            x=arrays.get("x"), alive=arrays.get("alive"),
+            codes=arrays.get("codes"), code_lo=arrays.get("code_lo"),
+            code_hi=arrays.get("code_hi"),
             refresh=api.RefreshStats(**m["refresh"]))
         plan = api.InteractionPlan(
             config, n, bsr, jnp.asarray(arrays["pi"], jnp.int32),

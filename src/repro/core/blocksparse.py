@@ -98,34 +98,34 @@ def build_bsr(rows: np.ndarray, cols: np.ndarray, vals: Optional[np.ndarray],
     n_cb = n_rb
 
     rb, cb = rows // bs, cols // bs
-    tile_id = rb.astype(np.int64) * n_cb + cb
 
-    # per-row-block tile lists, multi-level schedule: superblock-major,
-    # then column within superblock
-    per_row: list[list[int]] = [[] for _ in range(n_rb)]
-    for t in np.unique(tile_id):
-        per_row[int(t) // n_cb].append(int(t) % n_cb)
-    for r in range(n_rb):
-        per_row[r].sort(key=lambda c: (c // sb, c))
-    counts = np.array([len(p) for p in per_row])
+    # per-row-block tile lists in the multi-level schedule order
+    # (superblock-major, then column): one np.unique over keyed tiles
+    # yields every row's list already sorted — the same vectorized
+    # routine patch_bsr uses, here over all rows (the seed's per-row
+    # python lists made build_bsr the dominant cost of every
+    # restripe/rebucket at serving sizes)
+    skey = (cb // sb).astype(np.int64) * n_cb + cb
+    span = np.int64(n_cb) * ((n_cb + sb - 1) // sb + 1)
+    uniq = np.unique(rb.astype(np.int64) * span + skey)
+    urow = uniq // span
+    ucol = (uniq % span) % n_cb
+    counts = np.bincount(urow, minlength=n_rb)
     m = int(counts.max(initial=1)) + max(slack, 0)
     if max_nbr is not None:
         m = max_nbr
         if counts.max(initial=0) > m:
             raise ValueError(f"max_nbr={m} < needed {counts.max()}")
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    uslot = np.arange(len(uniq)) - starts[urow]
     col_idx = np.zeros((n_rb, m), np.int32)
     nbr_mask = np.zeros((n_rb, m), bool)
-    slot_of = {}
-    for r, lst in enumerate(per_row):
-        for s, c in enumerate(lst):
-            col_idx[r, s] = c
-            nbr_mask[r, s] = True
-            slot_of[(r, c)] = s
+    col_idx[urow, uslot] = ucol
+    nbr_mask[urow, uslot] = True
 
     dense = np.zeros((n_rb, m, bs, bs), np.float32)
-    slots = np.fromiter((slot_of[(int(a), int(b))] for a, b in zip(rb, cb)),
-                        count=nnz, dtype=np.int64)
-    np.add.at(dense, (rb, slots, rows % bs, cols % bs), vals)
+    pos = np.searchsorted(uniq, rb.astype(np.int64) * span + skey)
+    np.add.at(dense, (rb, uslot[pos], rows % bs, cols % bs), vals)
 
     # mask-consistency invariants the multi-level (bsr_ml) schedule relies
     # on: padded slots carry column 0 and zero tiles, and within every row
@@ -205,20 +205,102 @@ def patch_bsr(bsr: BSR, rows: np.ndarray, cols: np.ndarray,
     np.add.at(val_rows, (slot_of_rb[rb], uslot[pos], r_t % bs, c_t % bs),
               v_t)
 
+    kept_new = int(mask_rows.sum())
+    mask_host = np.asarray(bsr.nbr_mask)
+    kept_prev = int(mask_host.sum())
+    kept_touched_prev = int(mask_host[touched].sum())
+
+    # quantize the scatter width to a power of two by repeating the last
+    # touched row (duplicate indices write identical content): streaming
+    # updates patch a different block count every step, and without the
+    # quantization each step would compile a fresh scatter kernel
+    t = touched.size
+    t_pad = 1 << (t - 1).bit_length()
+    ti_scatter = touched
+    if t_pad > t:
+        ti_scatter = np.concatenate([touched,
+                                     np.full(t_pad - t, touched[-1])])
+        rep = (t_pad - t, 1)
+        col_rows = np.concatenate([col_rows, np.tile(col_rows[-1:], rep)])
+        mask_rows = np.concatenate([mask_rows, np.tile(mask_rows[-1:], rep)])
+        val_rows = np.concatenate(
+            [val_rows, np.tile(val_rows[-1:], (t_pad - t, 1, 1, 1))])
+
     # scatter the patched rows on device: the big tile array is updated
     # in place (no host round-trip of untouched rows)
-    ti = jnp.asarray(touched)
+    ti = jnp.asarray(ti_scatter)
     col_idx = bsr.col_idx.at[ti].set(jnp.asarray(col_rows))
     nbr_mask = bsr.nbr_mask.at[ti].set(jnp.asarray(mask_rows))
     new_vals = bsr.vals.at[ti].set(jnp.asarray(val_rows))
 
-    kept_prev = int(np.asarray(bsr.nbr_mask).sum())
-    kept_touched_prev = int(np.asarray(bsr.nbr_mask[ti]).sum())
-    kept = kept_prev - kept_touched_prev + int(mask_rows.sum())
+    kept = kept_prev - kept_touched_prev + kept_new
     fill = nnz / max(kept * bs * bs, 1)
     return BSR(bs=bs, sb=sb, n=bsr.n, n_rb=bsr.n_rb, n_cb=bsr.n_cb,
                col_idx=col_idx, nbr_mask=nbr_mask, vals=new_vals,
                fill=fill, max_nbr=m)
+
+
+def append_rows(bsr: BSR, n_new: int, extra_nbr: int = 0) -> BSR:
+    """Grow the (square) matrix dimension to ``n_new`` by appending empty
+    row-blocks — the capacity-growth primitive of streaming plans.
+
+    Appended rows carry no tiles (mask False, column 0, zero values), so
+    they are valid tombstoned capacity until an insert dresses them via
+    :func:`patch_bsr`; the ELL width (and therefore every row's slack
+    headroom) is preserved, or widened by ``extra_nbr`` spare slots when
+    the caller wants more append room. The column dimension grows in
+    lockstep (``n_cb == n_rb``), which existing tiles are agnostic to.
+    ``fill`` is unchanged: no kept tile was added or removed.
+    """
+    if n_new < bsr.n:
+        raise ValueError(f"append_rows cannot shrink: n_new={n_new} < "
+                         f"n={bsr.n} (delete + compact instead)")
+    if extra_nbr < 0:
+        raise ValueError(f"extra_nbr must be >= 0, got {extra_nbr}")
+    n_rb2 = (n_new + bsr.bs - 1) // bsr.bs
+    grow = n_rb2 - bsr.n_rb
+    if grow == 0 and extra_nbr == 0:
+        return BSR(bs=bsr.bs, sb=bsr.sb, n=n_new, n_rb=bsr.n_rb,
+                   n_cb=bsr.n_cb, col_idx=bsr.col_idx,
+                   nbr_mask=bsr.nbr_mask, vals=bsr.vals, fill=bsr.fill,
+                   max_nbr=bsr.max_nbr)
+    col_idx = jnp.pad(bsr.col_idx, ((0, grow), (0, extra_nbr)))
+    nbr_mask = jnp.pad(bsr.nbr_mask, ((0, grow), (0, extra_nbr)))
+    vals = jnp.pad(bsr.vals, ((0, grow), (0, extra_nbr), (0, 0), (0, 0)))
+    return BSR(bs=bsr.bs, sb=bsr.sb, n=n_new, n_rb=n_rb2, n_cb=n_rb2,
+               col_idx=col_idx, nbr_mask=nbr_mask, vals=vals,
+               fill=bsr.fill, max_nbr=bsr.max_nbr + extra_nbr)
+
+
+def tombstone_rows(bsr: BSR, rows: np.ndarray, cols: np.ndarray,
+                   vals: Optional[np.ndarray], dead: np.ndarray):
+    """Remove points ``dead`` (cluster-order indices) from the matrix:
+    their rows *and* the edges referencing them as columns vanish.
+
+    Built on :func:`patch_bsr`: the COO ``(rows, cols, vals)`` — the same
+    full cluster-order pattern the BSR was built from — is filtered of
+    every edge touching a dead point, and only the row-blocks that held
+    such an edge are re-dressed in place; all other blocks' tiles are
+    untouched device arrays. Returns ``(bsr', rows', cols', vals',
+    touched_rb)`` — the filtered COO (so the caller's pattern stays in
+    sync with storage) plus the row-blocks that were re-dressed (what an
+    incremental shard patch scatters). Cannot overflow the ELL width
+    (blocks only lose tiles), so this never escalates.
+    """
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    vals = (np.ones(len(rows), np.float32) if vals is None
+            else np.asarray(vals, np.float32))
+    dead = np.unique(np.asarray(dead))
+    if dead.size == 0:
+        return bsr, rows, cols, vals, np.empty(0, np.int64)
+    if dead.min(initial=0) < 0 or dead.max(initial=-1) >= bsr.n:
+        raise ValueError(f"dead indices out of range for n={bsr.n}")
+    drop = np.isin(rows, dead) | np.isin(cols, dead)
+    r2, c2, v2 = rows[~drop], cols[~drop], vals[~drop]
+    touched = np.unique(np.concatenate([rows[drop] // bsr.bs,
+                                        dead // bsr.bs]))
+    return patch_bsr(bsr, r2, c2, v2, touched), r2, c2, v2, touched
 
 
 def random_bsr(key_seed: int, n: int, bs: int, nbr: int, *, sb: int = 8,

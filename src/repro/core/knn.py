@@ -16,13 +16,17 @@ import jax.numpy as jnp
 
 @functools.partial(jax.jit, static_argnames=("k", "block", "exclude_self"))
 def knn_graph(targets: jax.Array, sources: jax.Array, k: int,
-              block: int = 1024, exclude_self: bool = False
+              block: int = 1024, exclude_self: bool = False,
+              valid: jax.Array | None = None
               ) -> Tuple[jax.Array, jax.Array]:
     """Exact kNN of each target among sources.
 
     Returns ``(idx (M, k), dist2 (M, k))``, squared euclidean distances,
     ascending. With ``exclude_self`` the diagonal (i == j) is excluded
-    (source and target sets are the same point set).
+    (source and target sets are the same point set). ``valid`` (N,) bool
+    restricts candidates to the masked sources — streaming plans hold
+    tombstoned points in their physical source buffer, and a dead slot
+    must never be picked as a neighbor.
     """
     m, d = targets.shape
     n = sources.shape[0]
@@ -38,6 +42,8 @@ def knn_graph(targets: jax.Array, sources: jax.Array, k: int,
         if exclude_self:
             rows = base + jnp.arange(qb.shape[0])
             d2 = d2 + (rows[:, None] == jnp.arange(n)[None, :]) * jnp.inf
+        if valid is not None:
+            d2 = jnp.where(valid[None, :], d2, jnp.inf)
         neg, idx = jax.lax.top_k(-d2, k)
         return None, (idx, -neg)
 
@@ -50,9 +56,10 @@ def knn_graph(targets: jax.Array, sources: jax.Array, k: int,
 
 
 def knn_coo(targets: jax.Array, sources: jax.Array, k: int,
-            block: int = 1024, exclude_self: bool = False):
+            block: int = 1024, exclude_self: bool = False,
+            valid: jax.Array | None = None):
     """kNN graph as COO (rows, cols, dist2) arrays, row-major."""
-    idx, dist2 = knn_graph(targets, sources, k, block, exclude_self)
+    idx, dist2 = knn_graph(targets, sources, k, block, exclude_self, valid)
     m = idx.shape[0]
     rows = jnp.repeat(jnp.arange(m), k)
     return rows, idx.reshape(-1), dist2.reshape(-1)

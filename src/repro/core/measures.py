@@ -46,12 +46,17 @@ def _gauss_stencil(sigma: float, cell: float, radius_cells: int) -> jax.Array:
 @functools.partial(jax.jit,
                    static_argnames=("sigma", "n", "cells", "radius_cells"))
 def gamma_score(rows: jax.Array, cols: jax.Array, sigma: float, n: int,
-                cells: int = 0, radius_cells: int = 4) -> jax.Array:
+                cells: int = 0, radius_cells: int = 4,
+                weights: jax.Array | None = None) -> jax.Array:
     """Histogram/convolution estimate of Eq. 4.
 
     Bins nonzeros into a (G, G) grid with cell size ~sigma (so the Gaussian
     is well resolved), then sum_{p,q} exp ~= <h, g * h> with g the truncated
-    stencil.
+    stencil. ``weights`` (same length as rows) lets callers pad the edge
+    arrays to a quantized length with zero-weight entries — the score is
+    bit-identical to the unpadded call, but repeated evaluations over a
+    drifting nnz (the streaming γ guard) reuse one compiled kernel instead
+    of re-tracing per edge count.
     """
     nnz = rows.shape[0]
     if nnz == 0:                             # empty pattern: no mass, not NaN
@@ -60,13 +65,15 @@ def gamma_score(rows: jax.Array, cols: jax.Array, sigma: float, n: int,
     cell = n / g
     ri = jnp.clip((rows.astype(jnp.float32) / cell).astype(jnp.int32), 0, g - 1)
     ci = jnp.clip((cols.astype(jnp.float32) / cell).astype(jnp.int32), 0, g - 1)
-    hist = jnp.zeros((g, g), jnp.float32).at[ri, ci].add(1.0)
+    w = jnp.float32(1.0) if weights is None else weights
+    hist = jnp.zeros((g, g), jnp.float32).at[ri, ci].add(w)
+    denom = jnp.float32(nnz) if weights is None else jnp.sum(weights)
     stencil = _gauss_stencil(sigma, cell, radius_cells)
     smooth = jax.lax.conv_general_dilated(
         hist[None, None], stencil[None, None],
         window_strides=(1, 1), padding="SAME",
         dimension_numbers=("NCHW", "OIHW", "NCHW"))[0, 0]
-    return jnp.sum(hist * smooth) / (sigma * nnz)
+    return jnp.sum(hist * smooth) / (sigma * denom)
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +135,26 @@ def fill_ratio(rows: np.ndarray, cols: np.ndarray, n: int, b: int) -> float:
     tid = rb.astype(np.int64) * ((n + b - 1) // b) + cb
     count = len(np.unique(tid))
     return len(rows) / (count * b * b)
+
+
+def compact_live(rows: np.ndarray, cols: np.ndarray,
+                 alive_in_order: np.ndarray):
+    """Project a cluster-order pattern onto the live rows only.
+
+    Streaming plans hold tombstoned slots between compactions, so their
+    cluster positions have holes; scoring γ on the holey coordinates
+    would misread the hole spacing as (lack of) locality and make the
+    score incomparable with a fresh build over the surviving points.
+    Drops every edge touching a dead slot (defensive — the maintained COO
+    should already be live-only) and renumbers both coordinates to the
+    rank among live slots. Returns ``(rows', cols', n_alive)``.
+    """
+    alive_in_order = np.asarray(alive_in_order, bool)
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    keep = alive_in_order[rows] & alive_in_order[cols]
+    rank = np.cumsum(alive_in_order) - 1
+    return rank[rows[keep]], rank[cols[keep]], int(alive_in_order.sum())
 
 
 # ---------------------------------------------------------------------------

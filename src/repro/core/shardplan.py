@@ -404,29 +404,29 @@ class ShardedPlan:
             self._fn = prev._fn
         return self._register()
 
-    def refresh(self, x_new, *, policy: Optional[str] = None
+    def _absorb(self, new_plan, in_place_actions: Tuple[str, ...]
                 ) -> "ShardedPlan":
-        """Refresh the wrapped plan, then update shards incrementally.
+        """Fold an already-updated wrapped plan into the shard arrays.
 
-        A patch-tier refresh (permutation and ELL shapes kept) scatters
-        only the migrated row-blocks' tiles/columns into the owning shards
-        — devices whose rows did not move keep their arrays untouched and
-        no halo re-analysis or global rebuild happens, *provided* the new
-        columns still fit the existing halo window. Rebucket/rebuild (or a
-        window overflow) re-shard the refreshed plan from scratch.
+        When the update was one of ``in_place_actions`` (layout-preserving
+        tiers that record ``last_patch_rb``), only the shards owning the
+        touched row-blocks are scattered into — devices whose rows were
+        untouched keep their arrays, and no halo re-analysis happens,
+        *provided* the new columns still fit the existing halo window.
+        Everything else (rebucket/rebuild/compact/capacity growth, or a
+        window overflow) re-shards the new plan from scratch.
         """
-        new_plan = self.plan.refresh(x_new, policy=policy)
         st = new_plan.refresh_stats
         touched = new_plan.host.last_patch_rb
         same_layout = (
-            st.last_action == "patch" and touched is not None
+            st.last_action in in_place_actions and touched is not None
             and new_plan.bsr is not None and self.plan.bsr is not None
             and new_plan.bsr.n_rb == self.plan.bsr.n_rb
             and new_plan.bsr.max_nbr == self.plan.bsr.max_nbr)
         if not same_layout:
             return shard(new_plan, self.mesh, axis=self.spec.axis
                          )._handoff(self, resharded=1)
-        if len(touched) == 0:      # nothing migrated: shards already valid
+        if len(touched) == 0:      # nothing changed: shards already valid
             return ShardedPlan(new_plan, self.mesh, self.spec, self.vals,
                                self.lcol, self.mask, self.hot,
                                self.hot_local, self.hot_dst
@@ -440,7 +440,7 @@ class ShardedPlan:
                                      _row_bases(spec, touched), spec,
                                      self.hot)
         if not covered.all():
-            # a migrated row grew support beyond window + hot set
+            # a changed row grew support beyond window + hot set
             return shard(new_plan, self.mesh, axis=self.spec.axis
                          )._handoff(self, resharded=1)
         ti = jnp.asarray(touched)
@@ -451,6 +451,48 @@ class ShardedPlan:
             self.mask.at[ti].set(jnp.asarray(mask_np)),
             self.hot, self.hot_local, self.hot_dst
         )._handoff(self, patched=1)
+
+    def refresh(self, x_new, *, policy: Optional[str] = None
+                ) -> "ShardedPlan":
+        """Refresh the wrapped plan, then update shards incrementally.
+
+        A patch-tier refresh (permutation and ELL shapes kept) scatters
+        only the migrated row-blocks' tiles/columns into the owning shards
+        — devices whose rows did not move keep their arrays untouched and
+        no halo re-analysis or global rebuild happens, *provided* the new
+        columns still fit the existing halo window. Rebucket/rebuild (or a
+        window overflow) re-shard the refreshed plan from scratch.
+        """
+        return self._absorb(self.plan.refresh(x_new, policy=policy),
+                            ("patch",))
+
+    # -- streaming (compose with repro.api.update_plan) --------------------
+
+    def update(self, *, insert=None, delete=None,
+               policy: Optional[str] = None) -> "ShardedPlan":
+        """One streaming step on the wrapped plan, shards kept in sync.
+
+        Append/tombstone tiers touch a recorded set of row-blocks at a
+        fixed layout, so only the shards owning them are scattered into —
+        exactly the refresh patch path. A compaction (or capacity growth,
+        which changes ``n_rb``, or a halo-window overflow from a streamed
+        row's new columns) re-shards the updated plan on the same mesh.
+        """
+        from repro import api
+
+        return self._absorb(
+            api.update_plan(self.plan, insert=insert, delete=delete,
+                            policy=policy),
+            ("append", "tombstone"))
+
+    def insert(self, x_new, *, policy: Optional[str] = None):
+        """Streamed insert; returns ``(sharded_plan, physical_indices)``."""
+        sp = self.update(insert=x_new, policy=policy)
+        return sp, sp.plan.host.last_inserted_idx
+
+    def delete(self, idx, *, policy: Optional[str] = None) -> "ShardedPlan":
+        """Streamed delete (tombstone) of physical rows ``idx``."""
+        return self.update(delete=idx, policy=policy)
 
     def __repr__(self) -> str:
         s = self.spec

@@ -47,6 +47,27 @@ def test_spmv_paths_agree_with_pallas():
     np.testing.assert_allclose(y_pal, y_jax, rtol=1e-4, atol=1e-4)
 
 
+def test_spmv_shim_warns_and_delegates_bit_exactly():
+    """The deprecated ``interact.spmv`` shim must keep warning AND keep
+    returning exactly what the plan path returns — so it cannot silently
+    rot while callers migrate (ISSUE 4 satellite)."""
+    from repro.api import InteractionPlan
+    from repro.core.registry import get_backend
+
+    rng = np.random.default_rng(11)
+    n = 256
+    rows, cols, vals = random_coo(rng, n, 1500)
+    bsr = blocksparse.build_bsr(rows, cols, vals, n, bs=32, sb=4)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    for path in ("bsr", "bsr_ml"):
+        with pytest.warns(DeprecationWarning, match="interact.spmv"):
+            y_shim = np.asarray(interact.spmv(bsr, x, path))
+        y_plan = np.asarray(get_backend(path)(InteractionPlan.from_bsr(bsr),
+                                              x))
+        assert np.array_equal(y_shim, y_plan), \
+            f"shim diverged from the plan path for {path!r}"
+
+
 def test_csr_path():
     rng = np.random.default_rng(3)
     n = 200

@@ -395,6 +395,110 @@ def test_checkpoint_async_save_plan(plan):
     assert p2.n == plan.n
 
 
+def test_plan_config_validated_at_construction():
+    """Bad thresholds fail loudly at PlanConfig(), not deep in a refresh."""
+    with pytest.raises(ValueError, match="ell_slack"):
+        api.PlanConfig(ell_slack=-1)
+    with pytest.raises(ValueError, match="patch_frac.*rebuild_frac"):
+        api.PlanConfig(patch_frac=0.5, rebuild_frac=0.2)
+    with pytest.raises(ValueError, match="drift_tol"):
+        api.PlanConfig(drift_tol=-0.1)
+    with pytest.raises(ValueError, match="drift_tol"):
+        api.PlanConfig(drift_tol=1.5)
+    with pytest.raises(ValueError, match="patch_frac"):
+        api.PlanConfig(patch_frac=-0.2)
+    with pytest.raises(ValueError, match="max_dead_frac"):
+        api.PlanConfig(max_dead_frac=0.0)
+    with pytest.raises(ValueError, match="grow_frac"):
+        api.PlanConfig(grow_frac=-1.0)
+    # dataclasses.replace re-validates
+    good = api.PlanConfig()
+    with pytest.raises(ValueError, match="rebuild_frac"):
+        dataclasses.replace(good, rebuild_frac=0.05)
+    # build_plan overrides route through the same gate
+    with pytest.raises(ValueError, match="ell_slack"):
+        api.build_plan(np.zeros((32, 4), np.float32), k=2, ell_slack=-3)
+
+
+# ---------------------------------------------------------------------------
+# restore_plan error paths (descriptive, not opaque tracebacks)
+# ---------------------------------------------------------------------------
+
+
+def test_restore_plan_missing(plan):
+    ck = Checkpointer(tempfile.mkdtemp())
+    with pytest.raises(FileNotFoundError, match="no plan 'plan'"):
+        ck.restore_plan()
+    ck.save_plan(3, plan, blocking=True)
+    with pytest.raises(FileNotFoundError, match="no plan 'other'"):
+        ck.restore_plan(name="other")
+    with pytest.raises(FileNotFoundError, match="step 9"):
+        ck.restore_plan(step=9)
+
+
+def test_restore_plan_corrupt_manifest(plan):
+    from pathlib import Path
+    d = Path(tempfile.mkdtemp())
+    ck = Checkpointer(d)
+    ck.save_plan(1, plan, blocking=True)
+    mf = d / "step_1" / "plan_plan" / "manifest.json"
+    mf.write_text("{not json")
+    with pytest.raises(ValueError, match="corrupt plan manifest"):
+        ck.restore_plan()
+
+
+def test_restore_plan_array_shape_mismatch(plan):
+    import json as _json
+    from pathlib import Path
+    d = Path(tempfile.mkdtemp())
+    ck = Checkpointer(d)
+    ck.save_plan(1, plan, blocking=True)
+    pd = d / "step_1" / "plan_plan"
+    arrays = dict(np.load(pd / "arrays.npz"))
+
+    # truncated pi: capacity disagrees with the manifest
+    trunc = dict(arrays)
+    trunc["pi"] = trunc["pi"][:-5]
+    np.savez(pd / "arrays.npz", **trunc)
+    with pytest.raises(ValueError, match="pi.*capacity"):
+        ck.restore_plan()
+
+    # missing BSR payload the manifest promises
+    nobsr = {k: v for k, v in arrays.items() if k != "bsr_vals"}
+    np.savez(pd / "arrays.npz", **nobsr)
+    with pytest.raises(ValueError, match="missing arrays.*bsr_vals"):
+        ck.restore_plan()
+
+    # tile tensor reshaped behind the manifest's back
+    bad = dict(arrays)
+    bad["bsr_vals"] = bad["bsr_vals"][:, :-1]
+    np.savez(pd / "arrays.npz", **bad)
+    with pytest.raises(ValueError, match="bsr_vals shape"):
+        ck.restore_plan()
+
+    # manifest edited to a different layout than the arrays
+    np.savez(pd / "arrays.npz", **arrays)
+    m = _json.loads((pd / "manifest.json").read_text())
+    m["bsr"]["max_nbr"] += 1
+    (pd / "manifest.json").write_text(_json.dumps(m))
+    with pytest.raises(ValueError, match="does not match the manifest"):
+        ck.restore_plan()
+
+
+def test_restore_plan_mesh_validation(plan):
+    ck = Checkpointer(tempfile.mkdtemp())
+    ck.save_plan(1, plan, blocking=True)
+    with pytest.raises(TypeError, match="Mesh or 'auto'"):
+        ck.restore_plan(mesh="bogus")
+    with pytest.raises(TypeError, match="Mesh or 'auto'"):
+        ck.restore_plan(mesh=3)
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    with pytest.raises(ValueError, match="no axis 'model'"):
+        ck.restore_plan(mesh=mesh, axis="model")
+    sp, _ = ck.restore_plan(mesh=mesh)       # happy path still works
+    assert sp.spec.n_dev == jax.device_count()
+
+
 # ---------------------------------------------------------------------------
 # fixed-source (mean-shift) plans
 # ---------------------------------------------------------------------------

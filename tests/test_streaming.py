@@ -1,0 +1,405 @@
+"""Streaming point sets (ISSUE 4): capacity vs logical n, insert/delete
+tombstones, amortized compaction, placement, sharded composition, and
+checkpoint round-trip of the capacity/tombstone state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.checkpoint.ckpt import Checkpointer
+from repro.core import blocksparse, hierarchy, measures
+from repro.core.ordering import claim_free_slots
+from repro.data.pipeline import feature_mixture
+
+N, D, K = 512, 32, 8
+
+
+@pytest.fixture(scope="module")
+def points():
+    return feature_mixture(N, D, n_clusters=8, seed=0)
+
+
+@pytest.fixture(scope="module")
+def plan(points):
+    return api.build_plan(points, k=K, bs=16, sb=4, backend="bsr",
+                          ell_slack=8)
+
+
+def _fresh_points(m, seed):
+    return feature_mixture(max(m, 8), D, n_clusters=8, seed=seed)[:m]
+
+
+def _masked_dense_matvec(plan, xv):
+    """Reference: y = A x off the stored tiles, original order."""
+    a = plan.bsr.to_dense()
+    yc = a @ np.asarray(xv)[plan.host.pi]
+    return yc[plan.host.inv]
+
+
+# ---------------------------------------------------------------------------
+# delete: tombstones
+# ---------------------------------------------------------------------------
+
+
+def test_delete_tombstones_rows_and_columns(plan):
+    rng = np.random.default_rng(1)
+    kill = rng.choice(N, 25, replace=False)
+    p2 = plan.delete(kill)
+    assert p2.n_alive == N - 25 and p2.capacity == N
+    assert not p2.alive[kill].any() and p2.dead_frac > 0
+    st = p2.refresh_stats
+    assert st.last_action == "tombstone" and st.tombstones == 1
+    assert st.deleted_total == 25
+
+    # permutation untouched; input plan not mutated
+    np.testing.assert_array_equal(p2.host.pi, plan.host.pi)
+    assert plan.n_alive == N and plan.host.alive is None
+
+    # no stored edge touches a dead point (rows nor columns)
+    r2, c2, _ = p2.coo
+    dead_cl = p2.host.inv[kill]
+    assert not np.isin(r2, dead_cl).any()
+    assert not np.isin(c2, dead_cl).any()
+
+    # matvec: dead rows produce zero, dead columns contribute nothing
+    xv = rng.standard_normal(N).astype(np.float32)
+    y = np.asarray(p2.matvec(jnp.asarray(xv)))
+    assert np.abs(y[kill]).max() == 0.0
+    np.testing.assert_allclose(y, _masked_dense_matvec(p2, xv), atol=1e-4)
+
+
+def test_delete_validation(plan):
+    with pytest.raises(ValueError, match="out of range"):
+        plan.delete([N + 3])
+    p2 = plan.delete([7])
+    with pytest.raises(ValueError, match="already-dead"):
+        p2.delete([7])
+    with pytest.raises(ValueError, match="live points"):
+        plan.delete(np.arange(N - K))  # would leave <= k survivors
+
+
+# ---------------------------------------------------------------------------
+# insert: leaf placement, slot reuse, capacity growth
+# ---------------------------------------------------------------------------
+
+
+def test_insert_reuses_tombstoned_slots(plan):
+    rng = np.random.default_rng(2)
+    kill = rng.choice(N, 30, replace=False)
+    p2 = plan.delete(kill)
+    xin = _fresh_points(30, seed=5)
+    p3, ids = p2.insert(xin)
+    assert p3.capacity == N and p3.n_alive == N
+    assert sorted(ids.tolist()) == sorted(kill.tolist())
+    np.testing.assert_array_equal(p3.host.x[ids], xin)
+    st = p3.refresh_stats
+    assert st.last_action == "append" and st.appends == 1
+    assert st.inserted_total == 30
+
+    # inserted rows have exactly k live neighbors, and their stored COO
+    # agrees with the bsr matvec
+    r2, c2, _ = p3.coo
+    for i in ids[:5]:
+        assert (r2 == p3.host.inv[i]).sum() == K
+    xv = rng.standard_normal(N).astype(np.float32)
+    y_bsr = np.asarray(p3.matvec(jnp.asarray(xv), backend="bsr"))
+    y_csr = np.asarray(p3.matvec(jnp.asarray(xv), backend="csr"))
+    np.testing.assert_allclose(y_bsr, y_csr, atol=1e-4)
+
+
+def test_insert_places_near_leaf(plan):
+    """A point re-inserted at a deleted point's coordinates claims a slot
+    near the hole it left (locality heuristic of the placement)."""
+    kill = np.array([123])
+    p2 = plan.delete(kill)
+    x_back = plan.host.x[kill]          # same coordinates, new identity
+    p3, ids = p2.insert(x_back)
+    assert ids.tolist() == [123]        # the one free slot is its own hole
+
+
+def test_insert_grows_capacity(plan):
+    xin = _fresh_points(20, seed=6)
+    p2 = api.update_plan(plan, insert=xin, policy="append")
+    st = p2.refresh_stats
+    assert p2.capacity > N and p2.capacity % plan.config.bs == 0
+    assert p2.n_alive == N + 20
+    assert st.grows == 1
+    assert p2.bsr.n_rb == p2.capacity // plan.config.bs
+    # grown capacity beyond the inserted points is tombstoned tail
+    assert int(p2.alive.sum()) == N + 20
+    # matvec still self-consistent
+    xv = np.random.default_rng(3).standard_normal(p2.n).astype(np.float32)
+    y_bsr = np.asarray(p2.matvec(jnp.asarray(xv), backend="bsr"))
+    np.testing.assert_allclose(y_bsr, _masked_dense_matvec(p2, xv),
+                               atol=1e-4)
+
+
+def test_build_with_capacity_preallocates(points):
+    p = api.build_plan(points, k=K, bs=16, sb=4, backend="bsr",
+                       ell_slack=8, capacity=N + 64)
+    assert p.capacity == N + 64 and p.n_alive == N
+    assert p.dead_frac > 0
+    xin = _fresh_points(40, seed=7)
+    p2, ids = p.insert(xin)
+    assert p2.capacity == N + 64          # no reallocation needed
+    assert p2.refresh_stats.grows == 0
+    assert (ids >= N).all()               # landed in the pre-allocated tail
+
+
+# ---------------------------------------------------------------------------
+# compact tier
+# ---------------------------------------------------------------------------
+
+
+def test_compact_bit_exact_vs_fresh_build(plan):
+    rng = np.random.default_rng(4)
+    kill = rng.choice(N, 40, replace=False)
+    p2 = plan.delete(kill)
+    p3, _ = p2.insert(_fresh_points(10, seed=8))
+    p4 = p3.compact()
+    st = p4.refresh_stats
+    assert st.last_action == "compact" and st.compactions == 1
+    assert p4.capacity == p4.n_alive == N - 30
+
+    fresh = api.build_plan(p3.host.x[p3.alive], config=p3.config)
+    xv = jnp.asarray(rng.standard_normal(p4.n), jnp.float32)
+    y_c = np.asarray(p4.matvec(xv))
+    y_f = np.asarray(fresh.matvec(xv))
+    assert np.array_equal(y_c, y_f), "compact must equal a fresh build"
+
+    # compact_map: old physical slot -> new index, -1 for slots still
+    # dead at compact time (10 of the 40 holes were re-claimed by inserts)
+    cmap = p4.host.compact_map
+    assert cmap is not None
+    np.testing.assert_array_equal(cmap == -1, ~p3.alive)
+    surv = np.nonzero(cmap >= 0)[0]
+    np.testing.assert_array_equal(p4.host.x[cmap[surv]], p3.host.x[surv])
+
+
+def test_dead_frac_triggers_compact(plan):
+    cfg_kill = int(N * 0.30)
+    rng = np.random.default_rng(5)
+    kill = rng.choice(N, cfg_kill, replace=False)
+    p2 = api.update_plan(plan, delete=kill)   # 30% dead > max_dead_frac
+    assert p2.refresh_stats.last_action == "compact"
+    assert p2.capacity == p2.n_alive == N - cfg_kill
+
+
+def test_ell_overflow_restripes_storage(points):
+    # zero slack: free slots inside the widest (already ELL-full) blocks,
+    # then insert far-away points that claim those holes — their
+    # scattered neighbor tiles cannot fit in place, so the storage is
+    # restriped (ordering kept, ELL width re-derived)
+    p = api.build_plan(points, k=K, bs=16, sb=4, backend="bsr",
+                       ell_slack=0)
+    widths = np.asarray(p.bsr.nbr_mask).sum(1)
+    wide = np.argsort(widths)[::-1][:8]        # 8 widest row-blocks
+    victims = p.host.pi[np.concatenate(
+        [np.arange(rb * 16, rb * 16 + 2) for rb in wide])]
+    p2 = p.delete(victims)
+    far = np.tile(points.max(0) * 4.0, (len(victims), 1)) \
+        + _fresh_points(len(victims), seed=9) * 0.01
+    p3 = api.update_plan(p2, insert=far)
+    st = p3.refresh_stats
+    assert st.restripes == 1 and st.last_action == "append"
+    assert p3.bsr.max_nbr > p2.bsr.max_nbr     # width re-derived
+    np.testing.assert_array_equal(p3.host.pi, p2.host.pi)  # ordering kept
+    # restriped storage still agrees with the COO
+    xv = np.random.default_rng(10).standard_normal(p3.n).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(p3.matvec(jnp.asarray(xv), backend="bsr")),
+        np.asarray(p3.matvec(jnp.asarray(xv), backend="csr")), atol=1e-4)
+    # forced in-place policy refuses instead of restriping
+    with pytest.raises(ValueError, match="ELL|ell_slack"):
+        api.update_plan(p2, insert=far, policy="append")
+
+
+def test_streaming_policy_validation(plan):
+    with pytest.raises(ValueError, match="unknown streaming policy"):
+        api.update_plan(plan, delete=[0], policy="nope")
+    prof = api.build_plan(np.asarray(plan.host.x), k=K, ordering="scattered",
+                          with_bsr=False)
+    with pytest.raises(ValueError, match="not streamable"):
+        api.update_plan(prof, delete=[0])
+    frozen = api.build_plan(np.asarray(plan.host.x), k=K, bs=16,
+                            values=np.ones(N * K, np.float32))
+    with pytest.raises(ValueError, match="not streamable"):
+        frozen.delete([0])
+
+
+# ---------------------------------------------------------------------------
+# measures: gamma ignores dead rows
+# ---------------------------------------------------------------------------
+
+
+def test_gamma_ignores_dead_rows(plan):
+    rng = np.random.default_rng(6)
+    kill = rng.choice(N, 50, replace=False)
+    p2 = plan.delete(kill)
+    g_stream = p2.gamma
+    fresh = api.build_plan(plan.host.x[p2.alive], config=plan.config)
+    assert g_stream == pytest.approx(fresh.gamma, rel=0.25), \
+        "streamed gamma (holes compacted) must track a fresh build"
+
+
+def test_compact_live_projection():
+    alive = np.array([True, False, True, True, False, True])
+    rows = np.array([0, 2, 3, 1, 5])
+    cols = np.array([2, 3, 5, 0, 4])
+    r, c, n = measures.compact_live(rows, cols, alive)
+    assert n == 4
+    # edges touching dead slots 1 and 4 dropped; survivors renumbered
+    np.testing.assert_array_equal(r, [0, 1, 2])
+    np.testing.assert_array_equal(c, [1, 2, 3])
+
+
+# ---------------------------------------------------------------------------
+# storage primitives
+# ---------------------------------------------------------------------------
+
+
+def test_append_rows_grows_empty_capacity():
+    bsr = blocksparse.random_bsr(0, 96, 16, 3, sb=4)
+    big = blocksparse.append_rows(bsr, 160, extra_nbr=2)
+    assert big.n == 160 and big.n_rb == 10 and big.n_cb == 10
+    assert big.max_nbr == bsr.max_nbr + 2
+    d0 = bsr.to_dense()
+    d1 = big.to_dense()
+    np.testing.assert_array_equal(d1[:96, :96], d0)
+    assert not d1[96:].any() and not d1[:, 96:].any()
+    assert not np.asarray(big.nbr_mask)[6:].any()
+    with pytest.raises(ValueError, match="shrink"):
+        blocksparse.append_rows(bsr, 64)
+
+
+def test_tombstone_rows_scrubs_rows_and_referencing_blocks():
+    rng = np.random.default_rng(0)
+    n, bs = 128, 16
+    rows = rng.integers(0, n, 600)
+    cols = rng.integers(0, n, 600)
+    vals = rng.standard_normal(600).astype(np.float32)
+    bsr = blocksparse.build_bsr(rows, cols, vals, n, bs=bs, sb=4)
+    dead = np.array([5, 17, 70])
+    b2, r2, c2, v2, touched = blocksparse.tombstone_rows(
+        bsr, rows, cols, vals, dead)
+    keep = ~(np.isin(rows, dead) | np.isin(cols, dead))
+    ref = blocksparse.build_bsr(rows[keep], cols[keep], vals[keep], n,
+                                bs=bs, sb=4, max_nbr=bsr.max_nbr)
+    np.testing.assert_allclose(b2.to_dense(), ref.to_dense(), atol=0)
+    assert len(r2) == keep.sum()
+    assert touched.size > 0
+    # untouched blocks' tiles are shared, not copied
+    d = b2.to_dense()
+    assert not d[dead].any() and not d[:, dead].any()
+
+
+def test_insertion_positions_and_claiming():
+    codes = np.array([1, 3, 3, 7, 9, 20], np.uint64)
+    tgt = hierarchy.insertion_positions(codes, np.array([0, 4, 50],
+                                                       np.uint64))
+    assert tgt.tolist() == [0, 3, 6]
+    # non-monotone input (stale hole codes) still yields sane positions
+    tgt2 = hierarchy.insertion_positions(
+        np.array([1, 9, 3, 20], np.uint64), np.array([4], np.uint64))
+    assert 1 <= tgt2[0] <= 3
+
+    free = np.array([2, 10, 11, 40])
+    got = claim_free_slots(free, np.array([10, 10, 3, 39]))
+    assert sorted(got.tolist()) == [2, 10, 11, 40]
+    assert got[0] == 10 and got[2] == 2 and got[3] == 40
+    with pytest.raises(ValueError, match="free slots"):
+        claim_free_slots(np.array([1]), np.array([0, 1]))
+
+
+# ---------------------------------------------------------------------------
+# churn loop: the benchmark scenario in miniature
+# ---------------------------------------------------------------------------
+
+
+def test_sustained_churn_stays_consistent(plan):
+    rng = np.random.default_rng(7)
+    p = plan
+    for step in range(6):
+        live = np.nonzero(p.alive)[0]
+        kill = rng.choice(live, 12, replace=False)
+        xin = _fresh_points(12, seed=100 + step)
+        p = api.update_plan(p, insert=xin, delete=kill)
+        # storage and COO stay in lockstep every step
+        xv = rng.standard_normal(p.n).astype(np.float32)
+        y_bsr = np.asarray(p.matvec(jnp.asarray(xv), backend="bsr"))
+        y_csr = np.asarray(p.matvec(jnp.asarray(xv), backend="csr"))
+        np.testing.assert_allclose(y_bsr, y_csr, atol=1e-4)
+    st = p.refresh_stats
+    assert st.inserted_total == 72 and st.deleted_total == 72
+    assert st.appends + st.compactions >= 6
+
+
+# ---------------------------------------------------------------------------
+# sharded composition
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_update_matches_single_device(plan):
+    rng = np.random.default_rng(8)
+    sp = api.shard(plan)
+    p = plan
+    for step in range(3):
+        # regional churn (one cluster-order run retires and is replaced
+        # in place) so the update stays on the narrow patch path
+        pos = 40 * (step + 1)
+        kill = np.asarray(p.host.pi[pos:pos + 6], np.int64)
+        xin = p.host.x[kill] + 0.01 * rng.standard_normal(
+            (6, D)).astype(np.float32)
+        p = api.update_plan(p, insert=xin, delete=kill)
+        sp = sp.update(insert=xin, delete=kill)
+        assert sp.plan.n_alive == p.n_alive
+        xv = jnp.asarray(rng.standard_normal(p.n), jnp.float32)
+        y = np.asarray(p.matvec(xv, backend="bsr"))
+        y_sh = np.asarray(sp.matvec(xv))
+        np.testing.assert_allclose(y, y_sh, atol=1e-3)
+    # the in-place tiers must actually patch shards, not quietly fall
+    # back to a full re-shard every step
+    assert sp.shard_patches >= 1
+
+
+def test_sharded_update_reshards_on_compact(plan):
+    sp = api.shard(plan)
+    sp2 = sp.update(policy="compact")
+    assert sp2.reshards == sp.reshards + 1
+    assert sp2.plan.refresh_stats.last_action == "compact"
+    xv = jnp.asarray(np.random.default_rng(9).standard_normal(sp2.plan.n),
+                     jnp.float32)
+    y = np.asarray(sp2.plan.matvec(xv, backend="bsr"))
+    np.testing.assert_allclose(np.asarray(sp2.matvec(xv)), y, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: capacity/tombstone state round-trips bit-exactly
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_streaming_state(plan, tmp_path):
+    rng = np.random.default_rng(10)
+    kill = rng.choice(N, 20, replace=False)
+    p2 = plan.delete(kill)
+    p3, ids = p2.insert(_fresh_points(8, seed=11))
+
+    ck = Checkpointer(tmp_path)
+    ck.save_plan(1, p3, blocking=True)
+    r, step = ck.restore_plan()
+    assert step == 1
+    assert r.capacity == p3.capacity and r.n_alive == p3.n_alive
+    np.testing.assert_array_equal(r.alive, p3.alive)
+    np.testing.assert_array_equal(r.host.codes, p3.host.codes)
+    np.testing.assert_array_equal(r.host.x, p3.host.x)
+
+    xv = jnp.asarray(rng.standard_normal(p3.n), jnp.float32)
+    y0 = np.asarray(p3.matvec(xv))
+    y1 = np.asarray(r.matvec(xv))
+    assert np.array_equal(y0, y1), "restored streamed matvec bit-exact"
+
+    # the restored plan keeps streaming
+    live = np.nonzero(r.alive)[0]
+    r2 = r.delete(live[:5])
+    assert r2.n_alive == p3.n_alive - 5
