@@ -1,0 +1,114 @@
+"""Batched plans: one vmapped kernel vs a python loop over single plans.
+
+The ROADMAP's batched-plans item: many small problems in lockstep (one
+plan per attention head / batch entry, clusterkv-style) must be served by
+ONE compiled kernel over stacked ``PlanData`` — not a python loop that
+pays a dispatch (and, for heterogeneous hosts, a retrace) per plan. This
+suite builds ``B`` small plans on distinct clustered clouds, stacks them
+into a ``PlanBatch``, and measures:
+
+  batched     ``batch.matvec(xs)`` — one vmapped kernel (the acceptance
+              path). GATES: >= 5x faster than the loop below, AND the
+              kernel traces exactly once for the whole batch (counted via
+              an instrumented backend).
+  loop        ``[p.matvec(x) for p in members]`` — the pre-PlanBatch
+              reality: B separate dispatches through the single-plan API
+              (the per-plan kernels are shape-shared and compile once;
+              the loop's cost is pure dispatch + small-kernel overhead,
+              i.e. the *best case* for the loop).
+  lockstep    one streamed insert+delete step through every member
+              (reported): per-plan tier escalation, one shared re-spec.
+
+  PYTHONPATH=src:. python benchmarks/run.py --only bench_batch
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit
+from repro import api
+from repro.core import registry
+from repro.data.pipeline import feature_mixture
+
+B, N, D, K = 64, 1024, 32, 8
+GATE_SPEEDUP = 5.0
+
+
+def run(emit) -> None:
+    rng = np.random.default_rng(0)
+    xs = [feature_mixture(N, D, n_clusters=32, seed=s) for s in range(B)]
+    batch = api.build_plan_batch(xs, k=K, bs=16, sb=8, backend="bsr")
+    charges = jnp.asarray(
+        rng.standard_normal((B, batch.capacity)), jnp.float32)
+
+    # -- one-compilation gate: the batched kernel must trace exactly once
+    calls = []
+
+    @api.register_backend("bench_batch_counter")
+    def _counting(p, x, **kw):
+        calls.append(1)
+        return api.get_backend("bsr")(p, x)
+
+    try:
+        jax.block_until_ready(
+            batch.matvec(charges, backend="bench_batch_counter"))
+        jax.block_until_ready(
+            batch.matvec(charges, backend="bench_batch_counter"))
+        n_traces = len(calls)
+    finally:
+        registry._BACKENDS.pop("bench_batch_counter", None)
+    assert n_traces == 1, (
+        f"batched matvec traced {n_traces}x for a batch of {B}; the "
+        "PlanBatch contract is ONE compilation for the whole batch")
+
+    # -- batched vs loop --------------------------------------------------
+    t_batched = timeit(lambda: batch.matvec(charges), warmup=2, iters=10)
+
+    members = batch.members()           # single-plan views, built once
+
+    def loop():
+        return [m.matvec(charges[i]) for i, m in enumerate(members)]
+
+    t_loop = timeit(lambda: jax.block_until_ready(loop()),
+                    warmup=2, iters=10)
+    speedup = t_loop / t_batched
+
+    emit(f"bench_batch/batched_B{B}_n{N},{t_batched*1e6:.0f},"
+         f"traces={n_traces};backend=bsr")
+    emit(f"bench_batch/loop_B{B}_n{N},{t_loop*1e6:.0f},"
+         f"speedup={speedup:.2f}x")
+
+    # correctness alongside the numbers: the two paths agree
+    y_b = np.asarray(batch.matvec(charges))
+    y_l = np.stack([np.asarray(y) for y in loop()])
+    err = float(np.abs(y_b - y_l).max())
+    assert err < 1e-4, f"batched vs loop disagreement {err:.2e}"
+
+    # ISSUE 5 acceptance: batched matvec over 64 plans of n=1024 must be
+    # >= 5x a python loop over the single plans, with one compilation
+    assert speedup >= GATE_SPEEDUP, (
+        f"batched matvec {speedup:.2f}x < {GATE_SPEEDUP}x over the "
+        f"single-plan loop (batched {t_batched*1e3:.2f}ms vs loop "
+        f"{t_loop*1e3:.2f}ms)")
+
+    # -- lockstep streaming step (reported, not gated) ---------------------
+    sbatch = api.build_plan_batch(xs[:8], k=K, bs=16, sb=8, backend="bsr",
+                                  ell_slack=4, capacity=N + 128)
+    kills = [rng.choice(N, 16, replace=False) for _ in range(8)]
+    arrivals = [feature_mixture(16, D, n_clusters=32, seed=100 + i)
+                for i in range(8)]
+    import time as _time
+    sbatch.update(insert=arrivals, delete=kills)      # warm the kernels
+    t0 = _time.perf_counter()
+    s2 = sbatch.update(insert=arrivals, delete=kills)
+    jax.block_until_ready(s2.data.vals)
+    t_step = _time.perf_counter() - t0
+    emit(f"bench_batch/lockstep_B8_n{N},{t_step*1e6:.0f},"
+         f"spec_stable={int(s2.spec == sbatch.spec)}")
+
+
+if __name__ == "__main__":
+    run(print)

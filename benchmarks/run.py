@@ -12,6 +12,7 @@ diff them — the bench trajectory convention is ``BENCH_plan.json``.
   bench_refresh    beyond-paper  (plan refresh vs rebuild, §3.2 drift)
   bench_shard      beyond-paper  (halo-exchange sharded matvec vs bsr)
   bench_stream     beyond-paper  (insert/delete churn vs rebuild-per-step)
+  bench_batch      beyond-paper  (PlanBatch vmapped matvec vs plan loop)
 
 Gated suites assert their acceptance in-suite; a failed gate is recorded
 per suite (the remaining suites still run, the JSON artifact carries the
@@ -78,9 +79,9 @@ def main() -> None:
         merge(args.merge[0], args.merge[1:])
         return
 
-    from benchmarks import (attention_bench, bench_refresh, bench_shard,
-                            bench_stream, fig1_orderings, fig3_throughput,
-                            micro_blas, table1_gamma)
+    from benchmarks import (attention_bench, bench_batch, bench_refresh,
+                            bench_shard, bench_stream, fig1_orderings,
+                            fig3_throughput, micro_blas, table1_gamma)
     suites = {
         "fig1_orderings": fig1_orderings.run,
         "table1_gamma": table1_gamma.run,
@@ -90,6 +91,7 @@ def main() -> None:
         "bench_refresh": bench_refresh.run,
         "bench_shard": bench_shard.run,
         "bench_stream": bench_stream.run,
+        "bench_batch": bench_batch.run,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     unknown = [c for c in chosen if c not in suites]

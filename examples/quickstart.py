@@ -77,6 +77,33 @@ def main():
     print(f"  after compact: {compacted} "          # exact fresh build
           f"(bit-exact vs build_plan on the survivors)")
 
+    # many small problems: one plan per head/batch entry, stacked on a
+    # shared spec — ONE compiled kernel serves the whole batch (the
+    # clusterkv-style workload; a python loop would pay B dispatches)
+    B = 8
+    xs_many = [feature_mixture(512, d, n_clusters=16, seed=s)
+               for s in range(B)]
+    batch = api.build_plan_batch(xs_many, k=k, bs=16, sb=4, backend="auto",
+                                 ell_slack=4, capacity=576)
+    # capacity slack + ELL slack: streamed inserts land in the shared
+    # spec, so the compiled batch kernels survive the churn
+    charges = batch.pad_charges(
+        [rng.standard_normal(512).astype(np.float32) for _ in range(B)])
+    ys = batch.matvec(charges)                    # one vmapped kernel
+    print(f"\nbatched plans: {batch}")
+    one = batch.member(3)                         # any member is a real plan
+    err_b = float(np.abs(np.asarray(ys[3])
+                         - np.asarray(one.matvec(charges[3]))).max())
+    print(f"  member 3 vs batched lane max-abs {err_b:.2e}")
+    assert err_b <= 1e-5
+    # lockstep streaming: every member inserts/deletes in one step,
+    # escalation decided per plan, executed against one shared spec
+    batch2, new_ids2 = batch.insert(
+        [feature_mixture(8, d, n_clusters=16, seed=100 + s)
+         for s in range(B)])
+    print(f"  after lockstep insert: n_alive={batch2.n_alive.tolist()} "
+          f"(spec stable: {batch2.spec == batch.spec})")
+
     import jax
     if jax.device_count() >= 2:
         # sharded plan: per-device row-block shards, charge halos moved by

@@ -72,17 +72,35 @@ escalation tiers against ``PlanConfig.refresh_policy``:
 γ and fill are recomputed lazily after a refresh (``plan.gamma`` /
 ``plan.gamma_drift()``), so the hot loop never pays for scoring it does
 not read.
+
+Spec/data split and batched plans
+---------------------------------
+
+Every plan factors into a hashable, structure-only :class:`PlanSpec`
+(config + capacity + ELL-BSR layout — everything that fixes shapes and
+compiled code paths) and an array-only :class:`PlanData` pytree (pi/inv,
+BSR arrays, alive mask); ``InteractionPlan.from_spec_data`` reconstructs a
+working plan from the pair. Spec-identical plans stack:
+``build_plan_batch(xs)`` returns a :class:`PlanBatch` — many small
+problems (one plan per attention head / batch entry, clusterkv-style) on
+one shared spec, served by ONE compiled kernel per
+(spec, backend, charge shape) however many plans ride the batch, with one
+shared autotune decision, lockstep streaming through the update tiers,
+and checkpoint support. Mapping a *single* plan with ``jax.vmap`` raises
+a TypeError pointing there.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from dataclasses import dataclass
-from typing import Callable, Optional, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import is_batch_tracer
 from repro.core import hierarchy, interact, knn, measures
 from repro.core import ordering as ordering_mod
 from repro.core.blocksparse import (BSR, append_rows, build_bsr, patch_bsr,
@@ -91,13 +109,16 @@ from repro.core.embedding import apply_pca_map, embed, pca_map
 from repro.core.hierarchy import Tree, build_tree
 from repro.core.ordering import ORDERINGS  # noqa: F401  (re-export)
 from repro.core.registry import (backend_names, get_backend,  # noqa: F401
-                                 register_backend)
+                                 get_batched_backend, register_backend,
+                                 register_batched_backend)
 from repro.core.shardplan import ShardedPlan, shard  # noqa: F401
 
 __all__ = [
-    "PlanConfig", "InteractionPlan", "RefreshStats", "build_plan",
-    "refresh_plan", "update_plan", "cluster_order", "shard", "ShardedPlan",
-    "ORDERINGS", "register_backend", "backend_names", "get_backend",
+    "PlanConfig", "PlanSpec", "PlanData", "InteractionPlan", "PlanBatch",
+    "RefreshStats", "build_plan", "build_plan_batch", "refresh_plan",
+    "update_plan", "cluster_order", "shard", "ShardedPlan", "ORDERINGS",
+    "register_backend", "register_batched_backend", "backend_names",
+    "get_backend", "get_batched_backend",
 ]
 
 
@@ -127,8 +148,11 @@ class PlanConfig:
     #   an in-place patch (or streamed insert) can add neighbor tiles
     #   without escalating
     # -- streaming (update_plan: insert/delete/compact policy) --------------
-    max_dead_frac: float = 0.25  # tombstoned capacity fraction that
-    #   triggers an amortized compaction rebuild
+    max_dead_frac: float = 0.25  # capacity fraction *lost since the
+    #   lineage's live peak* that triggers an amortized compaction
+    #   rebuild — tombstone debris, not pre-allocated capacity holes
+    #   (build_plan(capacity=) / PlanBatch padding never counts until
+    #   the slots have actually been claimed and then deleted)
     grow_frac: float = 0.25      # capacity growth chunk, as a fraction of
     #   current capacity (amortizes append reallocation to O(1)/insert)
     gamma_tol: float = 0.05      # streamed-γ drift that triggers the
@@ -156,6 +180,70 @@ class PlanConfig:
         if self.grow_frac <= 0.0:
             raise ValueError(
                 f"grow_frac must be > 0, got {self.grow_frac}")
+
+
+@dataclass(frozen=True)
+class PlanSpec:
+    """The structure-only half of a plan (hashable; shared across a batch).
+
+    Everything that fixes array *shapes* and compiled *code paths* lives
+    here: the config knobs, the physical capacity, and the ELL-BSR layout.
+    Two plans with equal specs are shape-compatible — their
+    :class:`PlanData` pytrees stack on a leading batch axis and one
+    compiled kernel serves all of them (:class:`PlanBatch`). ``jit`` can
+    treat a spec as a static argument; array state never lives here.
+
+    ``bs``/``sb``/``n_rb``/``n_cb``/``max_nbr`` are ``None`` for
+    profile-only plans (``with_bsr=False``).
+    """
+    config: PlanConfig
+    capacity: int                 # physical row slots (plan.n)
+    bs: Optional[int] = None      # BSR layout, None when no storage
+    sb: Optional[int] = None
+    n_rb: Optional[int] = None
+    n_cb: Optional[int] = None
+    max_nbr: Optional[int] = None
+
+    @property
+    def shape_key(self) -> tuple:
+        """Structural key without the config: what autotune memoizes on
+        (two plans with these numbers equal compile to the same kernels,
+        whatever their drift thresholds say)."""
+        return (self.capacity, self.bs, self.sb, self.n_rb, self.n_cb,
+                self.max_nbr)
+
+
+@dataclasses.dataclass
+class PlanData:
+    """The array-only half of a plan (a JAX pytree; every leaf traced).
+
+    Holds exactly the device state a plan's compute path reads: the
+    permutation pair, the ELL-BSR arrays, and (for streaming plans) the
+    row-validity mask. Stacking the ``PlanData`` of spec-identical plans
+    on a leading axis yields the batched data a :class:`PlanBatch` vmaps
+    over. Per-slot Morton codes and the rest of the streaming state stay
+    host-side (``_PlanHost``): they are bookkeeping for *plan mutation*,
+    which runs on the host anyway, and uint64 codes do not round-trip
+    through 32-bit-default JAX.
+    """
+    pi: jax.Array
+    inv: jax.Array
+    col_idx: Optional[jax.Array] = None
+    nbr_mask: Optional[jax.Array] = None
+    vals: Optional[jax.Array] = None
+    alive: Optional[jax.Array] = None
+
+    def tree_flatten(self):
+        return ((self.pi, self.inv, self.col_idx, self.nbr_mask,
+                 self.vals, self.alive), None)
+
+    @classmethod
+    def tree_unflatten(cls, _aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    PlanData, PlanData.tree_flatten, PlanData.tree_unflatten)
 
 
 @dataclasses.dataclass
@@ -231,6 +319,10 @@ class _PlanHost:
     last_inserted_idx: Optional[np.ndarray] = None  # physical slots the
     #   last update_plan insert batch landed in (post-compact indices when
     #   the batch triggered a compaction)
+    peak_alive: Optional[int] = None  # highest live count this layout has
+    #   held (None = never streamed): the compaction trigger measures
+    #   debris against this peak, so pre-allocated capacity holes are
+    #   not mistaken for decay
     compact_map: Optional[np.ndarray] = None  # (old_capacity,) old physical
     #   slot -> new index after the last compaction, -1 for dead slots
     last_patch_rb: Optional[np.ndarray] = None  # row-blocks the last patch
@@ -328,6 +420,35 @@ class InteractionPlan:
                    jnp.asarray(inv, jnp.int32), host)
 
     @classmethod
+    def from_spec_data(cls, spec: PlanSpec, data: PlanData,
+                       host: Optional[_PlanHost] = None,
+                       fill: float = 0.0) -> "InteractionPlan":
+        """Thin view over a (spec, data) pair — the split's constructor.
+
+        The pair fully determines the compute path: ``spec`` pins shapes
+        and code paths, ``data`` carries every traced array. With concrete
+        arrays and no ``host``, a minimal host is derived so the view is a
+        fully working single plan; with traced ``data`` (inside the
+        :class:`PlanBatch` vmap) the host stays ``None`` and only the
+        compute surface (``bsr``/``n``) may be touched. ``fill`` dresses
+        the reconstructed BSR's (data-dependent) fill statistic.
+        """
+        bsr = None
+        if spec.max_nbr is not None and data.vals is not None:
+            bsr = BSR(bs=spec.bs, sb=spec.sb, n=spec.capacity,
+                      n_rb=spec.n_rb, n_cb=spec.n_cb, col_idx=data.col_idx,
+                      nbr_mask=data.nbr_mask, vals=data.vals, fill=fill,
+                      max_nbr=spec.max_nbr)
+        if host is None and not isinstance(data.pi, jax.core.Tracer):
+            pi = np.asarray(data.pi)
+            inv = np.asarray(data.inv)
+            host = _PlanHost(pi=pi, inv=inv, coo=None, tree=None,
+                             embedding=None,
+                             alive=(None if data.alive is None
+                                    else np.asarray(data.alive)))
+        return cls(spec.config, spec.capacity, bsr, data.pi, data.inv, host)
+
+    @classmethod
     def from_bsr(cls, bsr: BSR,
                  config: Optional[PlanConfig] = None) -> "InteractionPlan":
         """Wrap an existing BSR (identity ordering, no COO/tree/gamma)."""
@@ -336,6 +457,48 @@ class InteractionPlan:
         host = _PlanHost(pi=pi, inv=pi, coo=None, tree=None, embedding=None)
         dev = jnp.asarray(pi, jnp.int32)
         return cls(config, bsr.n, bsr, dev, dev, host)
+
+    # -- spec/data split (the vmap-able halves of a plan) ------------------
+
+    @property
+    def spec(self) -> PlanSpec:
+        """Structure-only half: hashable, shared by shape-compatible
+        plans, static under ``jit`` (see :class:`PlanSpec`)."""
+        b = self.bsr
+        if b is None:
+            return PlanSpec(config=self.config, capacity=self.n)
+        return PlanSpec(config=self.config, capacity=self.n, bs=b.bs,
+                        sb=b.sb, n_rb=b.n_rb, n_cb=b.n_cb,
+                        max_nbr=b.max_nbr)
+
+    @property
+    def data(self) -> PlanData:
+        """Array-only half: the traced leaves this plan's compute path
+        reads (see :class:`PlanData`). ``from_spec_data(spec, data)``
+        reconstructs an equivalent view."""
+        b = self.bsr
+        alive = (None if self.host is None or self.host.alive is None
+                 else jnp.asarray(self.host.alive))
+        if b is None:
+            return PlanData(pi=self.pi, inv=self.inv, alive=alive)
+        return PlanData(pi=self.pi, inv=self.inv, col_idx=b.col_idx,
+                        nbr_mask=b.nbr_mask, vals=b.vals, alive=alive)
+
+    def _reject_vmapped(self) -> None:
+        """Single plans cannot be mapped over by ``jax.vmap`` — their host
+        aux is identity-hashed, so batching them either fails to stack or
+        dies in an opaque tracer/shape error. Catch it early and point at
+        the supported path."""
+        batched = is_batch_tracer(self.pi) or (
+            self.bsr is not None and is_batch_tracer(self.bsr.vals))
+        if batched:
+            raise TypeError(
+                "this InteractionPlan is being batched by jax.vmap; single"
+                " plans carry identity-hashed host state and cannot be"
+                " vmapped/scanned over. Stack shape-compatible plans with"
+                " api.build_plan_batch(...) (or PlanBatch.from_plans) and"
+                " call PlanBatch.matvec/apply — one compiled kernel for"
+                " the whole batch.")
 
     # -- stage artifacts ---------------------------------------------------
 
@@ -387,7 +550,9 @@ class InteractionPlan:
 
     @property
     def dead_frac(self) -> float:
-        """Tombstoned fraction of capacity (compaction trigger)."""
+        """Tombstoned fraction of capacity (reporting only — the
+        compaction trigger measures capacity lost since the lineage's
+        live peak, so pre-allocated holes never read as decay)."""
         return 1.0 - self.n_alive / max(self.n, 1)
 
     @property
@@ -462,6 +627,7 @@ class InteractionPlan:
     def apply(self, x: jax.Array, backend: Optional[str] = None,
               **kwargs) -> jax.Array:
         """``y = A' x`` in cluster order (``A'`` the reordered matrix)."""
+        self._reject_vmapped()
         name = self.resolve_backend(backend, x=x)
         if self.bsr is None and name != "csr":
             raise ValueError(
@@ -472,6 +638,7 @@ class InteractionPlan:
     def matvec(self, x: jax.Array, backend: Optional[str] = None,
                **kwargs) -> jax.Array:
         """``y = A x`` in original order: unpermute ∘ apply ∘ permute."""
+        self._reject_vmapped()
         return self.unpermute(self.apply(self.permute(x), backend, **kwargs))
 
     # -- iterative value-update hooks (paper §3) ---------------------------
@@ -1393,7 +1560,9 @@ def update_plan(plan: InteractionPlan, *, insert=None, delete=None,
                  pipeline (counted in ``RefreshStats.restripes``; sharded
                  plans re-shard on it)
       compact    full rebuild on the surviving points — triggered when
-                 the dead fraction exceeds ``PlanConfig.max_dead_frac``
+                 the capacity fraction lost since the lineage's live
+                 peak exceeds ``PlanConfig.max_dead_frac`` (tombstone
+                 debris; pre-allocated holes never count)
                  or an overflow restripe shows fill degradation beyond
                  ``PlanConfig.drift_tol`` (the layout genuinely decayed);
                  bit-identical to a fresh ``build_plan`` over the
@@ -1589,9 +1758,18 @@ def update_plan(plan: InteractionPlan, *, insert=None, delete=None,
         touched_parts.append(touched_ins)
 
     # -- tier decision ------------------------------------------------------
-    dead_frac = 1.0 - int(alive.sum()) / max(C, 1)
+    # debris, not holes: the compaction trigger measures live points LOST
+    # since the layout's peak, so capacity pre-allocated as insert
+    # headroom (build_plan(capacity=) / PlanBatch pow2 padding — often a
+    # large fraction by construction) never reads as decay. Otherwise a
+    # generously padded plan would compact on its first delete, and the
+    # re-padded result would compact again on every subsequent step.
+    n_alive_now = int(alive.sum())
+    prev_alive = plan.n if host.alive is None else int(host.alive.sum())
+    peak = max(host.peak_alive or 0, prev_alive, n_alive_now)
+    debris_frac = (peak - n_alive_now) / max(C, 1)
     force_inplace = policy in ("append", "tombstone")
-    if (policy == "compact" or dead_frac > cfg.max_dead_frac) \
+    if (policy == "compact" or debris_frac > cfg.max_dead_frac) \
             and not force_inplace:
         return _compact_plan(plan, alive, x, stats, n_ins, n_del,
                              inserted_phys, grows)
@@ -1697,9 +1875,480 @@ def update_plan(plan: InteractionPlan, *, insert=None, delete=None,
         codes=codes if codes is not None else host.codes,
         code_lo=code_lo if codes is not None else host.code_lo,
         code_hi=code_hi if codes is not None else host.code_hi,
-        refresh=stats2, last_patch_rb=touched,
+        refresh=stats2, last_patch_rb=touched, peak_alive=peak,
         last_inserted_idx=inserted_phys, compact_map=None, shard_cache={})
     new_dev = C != plan.n or rebucketed
     pi_dev = jnp.asarray(pi, jnp.int32) if new_dev else plan.pi
     inv_dev = jnp.asarray(inv, jnp.int32) if new_dev else plan.inv
     return InteractionPlan(cfg, C, bsr, pi_dev, inv_dev, host2)
+
+
+# ---------------------------------------------------------------------------
+# batched plans (many small problems in lockstep: one plan per head/batch
+# entry, one compiled kernel for the whole batch)
+# ---------------------------------------------------------------------------
+
+
+def _pow2_capacity(n: int, bs: int) -> int:
+    """Shared physical capacity for a batch: the next power of two at or
+    above ``n``, rounded up to a whole bottom-level block. Quantizing keeps
+    a *stream* of heterogeneous batches on a handful of compiled specs
+    instead of one per max-member-size."""
+    cap = 1 << max(int(np.ceil(np.log2(max(n, 1)))), 0)
+    return _round_up(max(cap, n), bs)
+
+
+# backends whose compute is pure device arrays (plan.bsr + n), and therefore
+# vmap cleanly over stacked PlanData; csr reads the host COO and dist runs
+# mesh collectives — neither can live under vmap
+_BATCHED_BACKENDS = ("bsr", "bsr_ml", "pallas")
+
+
+def _batch_take(xs: jax.Array, idx: jax.Array) -> jax.Array:
+    """Per-lane permutation of a stacked batch: ``xs`` (B, n, ...) indexed
+    by ``idx`` (B, n) along axis 1. Flattened to ONE offset gather — a
+    vmapped/batched take lowers to scalar loops on the CPU backend."""
+    B, n = idx.shape
+    flat = xs.reshape((B * n,) + xs.shape[2:])
+    off = (jnp.arange(B) * n)[:, None]
+    return flat[(idx + off).reshape(-1)].reshape(xs.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "backend", "mode"))
+def _batch_apply_kernel(spec: PlanSpec, data: PlanData, xs: jax.Array,
+                        backend: str, mode: str) -> jax.Array:
+    """One SpMV kernel over a whole stacked batch.
+
+    ``spec`` (static) fixes shapes/code paths for every member; ``data``
+    carries the stacked arrays. Backends with a registered *batched*
+    implementation (``register_batched_backend`` — bsr/bsr_ml ship one)
+    get the whole stack at once; anything else falls back to a generic
+    ``vmap`` of its single-plan path, each lane reconstructing a traced
+    view via ``InteractionPlan.from_spec_data`` — the spec/data split is
+    exactly what makes both legal. Compiles once per (spec, backend,
+    charge shape), however many plans ride the batch.
+    """
+    bfn = get_batched_backend(backend)
+    if bfn is not None:
+        if mode == "matvec":
+            xs = _batch_take(xs, data.pi)
+        ys = bfn(spec, data, xs)
+        if mode == "matvec":
+            ys = _batch_take(ys, data.inv)
+        return ys
+
+    fn = get_backend(backend)
+
+    def one(d: PlanData, x: jax.Array) -> jax.Array:
+        view = InteractionPlan.from_spec_data(spec, d)
+        if mode == "matvec":
+            x = jnp.take(x, d.pi, axis=0)
+        y = fn(view, x)
+        if mode == "matvec":
+            y = jnp.take(y, d.inv, axis=0)
+        return y
+
+    return jax.vmap(one)(data, xs)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "backend", "mode"))
+def _batch_apply_scan(spec: PlanSpec, data: PlanData, xs: jax.Array,
+                      backend: str, mode: str) -> jax.Array:
+    """Serial variant of :func:`_batch_apply_kernel`: ``lax.scan`` over the
+    batch axis, so the working set per step is one member's tiles (memory-
+    bound batches). Still one trace/compilation for the whole batch."""
+    fn = get_backend(backend)
+
+    def step(_, dx):
+        d, x = dx
+        view = InteractionPlan.from_spec_data(spec, d)
+        if mode == "matvec":
+            x = jnp.take(x, d.pi, axis=0)
+        y = fn(view, x)
+        if mode == "matvec":
+            y = jnp.take(y, d.inv, axis=0)
+        return None, y
+
+    _, ys = jax.lax.scan(step, None, (data, xs))
+    return ys
+
+
+class PlanBatch:
+    """Many spec-identical plans stacked on a leading batch axis.
+
+    The highest-traffic consumers of near-neighbor interaction run many
+    *small* problems in lockstep — one interaction pattern per attention
+    head or batch entry (the clusterkv-style workload). A single
+    :class:`InteractionPlan` is identity-hashed static aux under ``jit``,
+    so N plans mean N traces; a ``PlanBatch`` holds ONE hashable
+    :class:`PlanSpec` plus stacked :class:`PlanData`, and every
+    ``matvec``/``apply`` is one vmapped (or scanned) kernel — one
+    compilation and one dispatch for the whole batch, any batch size.
+
+    Members are padded to the shared spec at construction: capacity is
+    pow2-quantized (`_pow2_capacity`) with the spare slots living as
+    tombstoned streaming holes, and the ELL width is the max over members
+    (extra slots are exactly `ell_slack` headroom). Both paddings are the
+    PR-4 streaming substrate, so a member view (:meth:`member`) is a fully
+    functional, streamable single plan.
+
+    Streaming runs in lockstep: :meth:`update` pushes per-member
+    insert/delete batches through the usual tiers (escalation decided
+    *per plan* by each member's own drift policy), then re-unifies the
+    spec — capacity/width only grow when some member outgrew the shared
+    layout, so the compiled kernels survive almost every step.
+    """
+
+    def __init__(self, spec: PlanSpec, data: PlanData,
+                 hosts: Sequence[_PlanHost], fills: Sequence[float],
+                 tuned: Optional[dict] = None):
+        self.spec = spec
+        self.data = data
+        self.hosts = list(hosts)
+        self.fills = list(fills)
+        self.tuned = dict(tuned or {})   # shared auto winners, per charge ndim
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_plans(cls, plans: Sequence[InteractionPlan], *,
+                   capacity: Optional[int] = None) -> "PlanBatch":
+        """Stack shape-compatible plans into one batch.
+
+        Every member must share one ``PlanConfig`` (the spec is shared, so
+        the knobs must be too) and agree on ``with_bsr``-ness. Members are
+        padded to a common capacity (given, or the max member size pow2-
+        quantized when sizes differ) and to the widest member's ELL width;
+        padding reuses the streaming primitives (tail tombstone slots +
+        spare ELL slots), so member views stay real streamable plans.
+        """
+        plans = list(plans)
+        if not plans:
+            raise ValueError("PlanBatch needs at least one plan")
+        cfg = plans[0].config
+        has_bsr = plans[0].bsr is not None
+        for p in plans:
+            if p.config != cfg:
+                raise ValueError(
+                    "PlanBatch members must share one PlanConfig (the "
+                    f"spec is shared); got {p.config} vs {cfg}")
+            if (p.bsr is not None) != has_bsr:
+                raise ValueError("cannot mix profile-only (with_bsr=False) "
+                                 "and storage-backed plans in one batch")
+        ns = [p.n for p in plans]
+        bs = plans[0].bsr.bs if has_bsr else cfg.bs
+        if capacity is None:
+            cap = ns[0] if len(set(ns)) == 1 else _pow2_capacity(max(ns), bs)
+        else:
+            if capacity < max(ns):
+                raise ValueError(f"capacity={capacity} < largest member "
+                                 f"n={max(ns)}")
+            cap = capacity
+
+        padded = []
+        for p in plans:
+            if p.n < cap:
+                p = _grow_plan(p, cap)
+                if p.host.embedding is not None:
+                    # interleave the new holes through the ordering, like
+                    # build_plan(capacity=): streamed inserts then land
+                    # near their Morton leaf instead of at the tail
+                    p = _spread_holes(p)
+            padded.append(p)
+        if has_bsr:
+            m = max(p.bsr.max_nbr for p in padded)
+            padded = [
+                p if p.bsr.max_nbr == m
+                else InteractionPlan(p.config, p.n,
+                                     append_rows(p.bsr, p.n,
+                                                 extra_nbr=m - p.bsr.max_nbr),
+                                     p.pi, p.inv, p.host)
+                for p in padded]
+
+        spec = padded[0].spec
+        for p in padded[1:]:
+            assert p.spec == spec, (p.spec, spec)
+        any_alive = any(p.host.alive is not None for p in padded)
+        data = PlanData(
+            pi=jnp.stack([p.pi for p in padded]),
+            inv=jnp.stack([p.inv for p in padded]),
+            col_idx=(jnp.stack([p.bsr.col_idx for p in padded])
+                     if has_bsr else None),
+            nbr_mask=(jnp.stack([p.bsr.nbr_mask for p in padded])
+                      if has_bsr else None),
+            vals=(jnp.stack([p.bsr.vals for p in padded])
+                  if has_bsr else None),
+            alive=(jnp.stack([jnp.asarray(p.alive) for p in padded])
+                   if any_alive else None))
+        fills = [p.bsr.fill if has_bsr else 0.0 for p in padded]
+        return cls(spec, data, [p.host for p in padded], fills)
+
+    # -- shape surface -----------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self.hosts)
+
+    @property
+    def batch(self) -> int:
+        return len(self.hosts)
+
+    @property
+    def capacity(self) -> int:
+        return self.spec.capacity
+
+    @property
+    def n_alive(self) -> np.ndarray:
+        """(B,) live point count per member."""
+        return np.array([int(np.asarray(h.alive).sum())
+                         if h.alive is not None else self.capacity
+                         for h in self.hosts])
+
+    @property
+    def stats(self) -> dict:
+        return {"batch": self.batch, "capacity": self.capacity,
+                "max_nbr": self.spec.max_nbr,
+                "n_alive": self.n_alive.tolist(),
+                "fill_mean": float(np.mean(self.fills)),
+                "backend": self.tuned.get(1, self.spec.config.backend)}
+
+    def __repr__(self) -> str:
+        return (f"PlanBatch(B={self.batch}, capacity={self.capacity}, "
+                f"bs={self.spec.bs}, max_nbr={self.spec.max_nbr}, "
+                f"backend={self.tuned.get(1, self.spec.config.backend)!r})")
+
+    # -- members (single-plan views over slices of the stacked data) -------
+
+    def member(self, i: int) -> InteractionPlan:
+        """The i-th plan as a real single ``InteractionPlan`` view (its
+        BSR arrays are slices of the stacked data; its host is the live
+        per-member host, so lifecycle/streaming calls work)."""
+        d = PlanData(
+            pi=self.data.pi[i], inv=self.data.inv[i],
+            col_idx=None if self.data.col_idx is None else
+            self.data.col_idx[i],
+            nbr_mask=None if self.data.nbr_mask is None else
+            self.data.nbr_mask[i],
+            vals=None if self.data.vals is None else self.data.vals[i],
+            alive=None if self.data.alive is None else self.data.alive[i])
+        return InteractionPlan.from_spec_data(self.spec, d,
+                                              host=self.hosts[i],
+                                              fill=self.fills[i])
+
+    def members(self) -> List[InteractionPlan]:
+        return [self.member(i) for i in range(self.batch)]
+
+    # -- charges -----------------------------------------------------------
+
+    def pad_charges(self, charges: Sequence[np.ndarray]) -> jax.Array:
+        """Per-member charge arrays (n_i, ...) -> one (B, capacity, ...)
+        batch, zero-padded on the capacity slots (construction-time
+        convenience: member points occupy physical slots 0..n_i-1)."""
+        if len(charges) != self.batch:
+            raise ValueError(f"{len(charges)} charge arrays for batch of "
+                             f"{self.batch}")
+        first = np.asarray(charges[0])
+        out = np.zeros((self.batch, self.capacity) + first.shape[1:],
+                       np.float32)
+        for i, c in enumerate(charges):
+            c = np.asarray(c, np.float32)
+            out[i, :c.shape[0]] = c
+        return jnp.asarray(out)
+
+    # -- interaction (one kernel for the whole batch) ----------------------
+
+    def resolve_backend(self, name: Optional[str] = None,
+                        x: Optional[jax.Array] = None) -> str:
+        """Resolve a backend for the *whole batch* (one shared decision).
+        ``"auto"`` probes the batched kernel over the batchable backends
+        once per charge ndim — memoized structurally in
+        ``core.autotune``, so spec-identical batches never re-probe."""
+        name = name or self.spec.config.backend
+        if name != "auto":
+            if name in ("csr", "dist"):
+                raise ValueError(
+                    f"backend {name!r} cannot run batched: csr reads the "
+                    "host-side COO and dist issues mesh collectives, "
+                    "neither of which is vmappable — use one of "
+                    f"{_BATCHED_BACKENDS} (or register a vmappable "
+                    "backend)")
+            return name
+        ndim = (x.ndim - 1) if x is not None else 1
+        if ndim not in self.tuned:
+            if self.spec.max_nbr is None:
+                raise ValueError("profile-only batch has no storage to "
+                                 "run; rebuild with with_bsr=True")
+            from repro.core.autotune import tune_batch_backend
+            probe_x = x
+            if probe_x is not None and isinstance(probe_x,
+                                                  jax.core.Tracer):
+                # can't time a tracer, but its (static) shape is exactly
+                # what the probe must match — backend ranking changes
+                # with the charge shape, so a synthetic stand-in of the
+                # same shape keeps the cached winner honest
+                probe_x = jnp.asarray(np.random.default_rng(0)
+                                      .standard_normal(x.shape),
+                                      jnp.float32)
+            self.tuned[ndim], _ = tune_batch_backend(self, probe_x)
+        return self.tuned[ndim]
+
+    def _dispatch(self, xs: jax.Array, backend: Optional[str], mode: str,
+                  serial: bool) -> jax.Array:
+        if self.spec.max_nbr is None:
+            raise ValueError("profile-only batch (with_bsr=False) has no "
+                             "storage; rebuild with with_bsr=True")
+        xs = jnp.asarray(xs)
+        if xs.ndim not in (2, 3) or xs.shape[0] != self.batch \
+                or xs.shape[1] != self.capacity:
+            raise ValueError(
+                f"batched charges must be (B={self.batch}, "
+                f"capacity={self.capacity}) or (B, capacity, f); got "
+                f"{xs.shape} (pad_charges packs ragged member charges)")
+        name = self.resolve_backend(backend, x=xs)
+        kern = _batch_apply_scan if serial else _batch_apply_kernel
+        return kern(self.spec, self.data, xs, name, mode)
+
+    def apply(self, xs: jax.Array, backend: Optional[str] = None, *,
+              serial: bool = False) -> jax.Array:
+        """Batched ``y_b = A'_b x_b`` in each member's cluster order.
+        ``serial=True`` scans members instead of vmapping them (one
+        member's tiles resident at a time); both compile once."""
+        return self._dispatch(xs, backend, "apply", serial)
+
+    def matvec(self, xs: jax.Array, backend: Optional[str] = None, *,
+               serial: bool = False) -> jax.Array:
+        """Batched ``y_b = A_b x_b`` in original order (per-member
+        permute/apply/unpermute fused into the same compiled kernel)."""
+        return self._dispatch(xs, backend, "matvec", serial)
+
+    # -- lockstep streaming (per-member tiers, one shared re-spec) ---------
+
+    @staticmethod
+    def _per_member(arg, B: int, what: str) -> list:
+        if arg is None:
+            return [None] * B
+        if isinstance(arg, (list, tuple)):
+            if len(arg) != B:
+                raise ValueError(f"{what} has {len(arg)} entries for a "
+                                 f"batch of {B}")
+            return list(arg)
+        arr = np.asarray(arg)
+        if arr.shape[0] != B:
+            raise ValueError(f"{what} leading axis {arr.shape[0]} != batch "
+                             f"{B} (pass a (B, ...) array or a length-B "
+                             "list, None entries to skip members)")
+        return [arr[i] for i in range(B)]
+
+    def update(self, *, insert=None, delete=None,
+               policy: Optional[str] = None) -> "PlanBatch":
+        """One lockstep streaming step over every member.
+
+        ``insert``: (B, m, D) array or length-B list of (m_i, D) arrays
+        (``None`` entries skip a member); ``delete`` likewise with
+        physical row indices. Each member escalates through its own
+        tombstone/append/rebucket/restripe/compact tiers
+        (:func:`update_plan` — escalation is decided per plan), then the
+        batch re-unifies: capacity and ELL width grow only when some
+        member outgrew the shared layout, so the compiled batch kernels
+        survive the step whenever no member escalated shapes. Returns a
+        new batch; the input batch stays valid. Members skipped with
+        ``None`` entries are carried through untouched — their host
+        telemetry (``last_inserted_idx`` included) still reflects their
+        *previous* step (:meth:`insert` masks this for its return value).
+        """
+        B = self.batch
+        ins = self._per_member(insert, B, "insert")
+        dels = self._per_member(delete, B, "delete")
+        new = []
+        for i in range(B):
+            p = self.member(i)
+            if ins[i] is not None or dels[i] is not None \
+                    or policy == "compact":
+                p = update_plan(p, insert=ins[i], delete=dels[i],
+                                policy=policy)
+            new.append(p)
+        cap = max(p.n for p in new)
+        cap = (self.capacity if cap <= self.capacity
+               else _pow2_capacity(cap, self.spec.bs or self.spec.config.bs))
+        out = PlanBatch.from_plans(new, capacity=cap)
+        if out.spec == self.spec:
+            out.tuned = dict(self.tuned)   # kernels + decision still valid
+        return out
+
+    def insert(self, xs) -> Tuple["PlanBatch", List[Optional[np.ndarray]]]:
+        """Lockstep insert; returns ``(batch, idx)`` with each member's
+        landed physical row indices (see ``InteractionPlan.insert``).
+        Members skipped with a ``None`` entry get ``None`` back — their
+        host still remembers an *earlier* step's landing slots, which
+        must not be mistaken for this one's."""
+        ins = self._per_member(xs, self.batch, "insert")
+        out = self.update(insert=xs)
+        return out, [out.hosts[i].last_inserted_idx
+                     if ins[i] is not None else None
+                     for i in range(self.batch)]
+
+    def delete(self, idxs) -> "PlanBatch":
+        """Lockstep tombstone of per-member physical row indices."""
+        return self.update(delete=idxs)
+
+    def compact(self) -> "PlanBatch":
+        """Force every member through the compaction tier (fresh build on
+        each member's survivors), then re-stack."""
+        return self.update(policy="compact")
+
+    @property
+    def refresh_stats(self) -> List[RefreshStats]:
+        return [h.refresh for h in self.hosts]
+
+
+def build_plan_batch(xs, *, k: int = 16, ordering: str = "dual_tree",
+                     bs: int = 32, sb: int = 8, backend: str = "auto",
+                     d: int = 3, bits: int = 10, leaf_size: int = 64,
+                     symmetrize: bool = False, seed: int = 0,
+                     values: "Callable | None" = None,
+                     sigma: Optional[float] = None,
+                     with_bsr: bool = True,
+                     capacity: Optional[int] = None,
+                     config: Optional[PlanConfig] = None,
+                     **cfg_overrides) -> PlanBatch:
+    """Run the pipeline once per member and stack the results (§2.4 × B).
+
+    ``xs`` is a (B, n, D) array or a sequence of (n_i, D) point sets (sizes
+    may differ — members are padded to a shared pow2-quantized capacity,
+    the spare slots living as streaming holes interleaved through each
+    member's leaves). Every member shares one ``PlanConfig``; ``values``
+    must be ``None`` or a callable (a static per-member value array cannot
+    ride the shared spec — dress members individually and use
+    ``PlanBatch.from_plans`` for that). ``backend="auto"`` tunes ONE
+    backend for the whole batch on first use, probing the batched kernel
+    itself (memoized structurally, so spec-identical batches never
+    re-probe).
+    """
+    if values is not None and not callable(values):
+        raise ValueError(
+            "build_plan_batch values= must be None or a callable; a "
+            "static value array is member-specific — build members with "
+            "build_plan and stack them via PlanBatch.from_plans")
+    if config is None:
+        config = PlanConfig(k=k, ordering=ordering, bs=bs, sb=sb,
+                            backend=backend, d=d, bits=bits,
+                            leaf_size=leaf_size, symmetrize=symmetrize,
+                            seed=seed, **cfg_overrides)
+    elif cfg_overrides:
+        config = dataclasses.replace(config, **cfg_overrides)
+    members = [np.asarray(x, np.float32) for x in xs]
+    if not members:
+        raise ValueError("build_plan_batch needs at least one point set")
+    ns = [m.shape[0] for m in members]
+    if capacity is None:
+        cap = ns[0] if len(set(ns)) == 1 else _pow2_capacity(max(ns),
+                                                             config.bs)
+    else:
+        if capacity < max(ns):
+            raise ValueError(f"capacity={capacity} < largest member "
+                             f"n={max(ns)}")
+        cap = capacity
+    plans = [build_plan(x, config=config, values=values, sigma=sigma,
+                        with_bsr=with_bsr,
+                        capacity=cap if cap > x.shape[0] else None)
+             for x in members]
+    return PlanBatch.from_plans(plans, capacity=cap)

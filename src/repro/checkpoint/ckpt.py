@@ -88,6 +88,102 @@ def _flatten_with_paths(tree):
     return flat, treedef
 
 
+def _plan_payload(plan, step: int):
+    """Host-gather one ``InteractionPlan`` into ``(arrays, manifest)`` —
+    the single-plan on-disk format (shared by batch members)."""
+    import dataclasses
+
+    host = plan.host
+    arrays = {"pi": np.asarray(host.pi), "inv": np.asarray(host.inv)}
+    if plan.bsr is not None:
+        arrays["bsr_col_idx"] = np.asarray(plan.bsr.col_idx)
+        arrays["bsr_nbr_mask"] = np.asarray(plan.bsr.nbr_mask)
+        arrays["bsr_vals"] = np.asarray(plan.bsr.vals)
+    if host.coo is not None:
+        arrays["coo_rows"], arrays["coo_cols"], arrays["coo_vals"] = (
+            np.asarray(a) for a in host.coo)
+    for key in ("embedding", "y_last", "embed_mean", "embed_axes",
+                "sources", "x", "alive", "codes", "code_lo", "code_hi"):
+        val = getattr(host, key)
+        if val is not None:
+            arrays[key] = np.asarray(val)
+    if host.tree is not None:
+        arrays["tree_perm"] = np.asarray(host.tree.perm)
+        for i, lvl in enumerate(host.tree.levels):
+            arrays[f"tree_level_{i}"] = np.asarray(lvl)
+    manifest = {
+        "format": 1,
+        "step": step,
+        "n": plan.n,
+        # streaming capacity layout: capacity == n (physical slots);
+        # n_alive is the logical live count the restored mask re-derives
+        "capacity": plan.n,
+        "n_alive": plan.n_alive,
+        "peak_alive": host.peak_alive,
+        "config": dataclasses.asdict(plan.config),
+        "sigma": host.sigma,
+        "gamma": host.gamma,
+        "pattern_from_knn": host.pattern_from_knn,
+        # a callable cannot round-trip: freeze the pattern on restore
+        "values_mode": ("static" if host.values_mode == "fn"
+                        else host.values_mode),
+        "refresh": dataclasses.asdict(host.refresh),
+        "bsr": (None if plan.bsr is None else {
+            "bs": plan.bsr.bs, "sb": plan.bsr.sb, "n": plan.bsr.n,
+            "n_rb": plan.bsr.n_rb, "n_cb": plan.bsr.n_cb,
+            "fill": plan.bsr.fill, "max_nbr": plan.bsr.max_nbr}),
+        "tree": (None if host.tree is None else {
+            "d": host.tree.d, "bits": host.tree.bits,
+            "n_levels": host.tree.n_levels}),
+        "shard": None,
+    }
+    return arrays, manifest
+
+
+def _plan_from_payload(m: dict, arrays: dict):
+    """Reconstruct a single ``InteractionPlan`` from a validated
+    ``(manifest, arrays)`` payload."""
+    from repro import api
+    from repro.core.blocksparse import BSR
+    from repro.core.hierarchy import Tree
+
+    config = api.PlanConfig(**m["config"])
+    n = m["n"]
+    bsr = None
+    if m["bsr"] is not None:
+        b = m["bsr"]
+        bsr = BSR(bs=b["bs"], sb=b["sb"], n=b["n"], n_rb=b["n_rb"],
+                  n_cb=b["n_cb"], fill=b["fill"], max_nbr=b["max_nbr"],
+                  col_idx=jnp.asarray(arrays["bsr_col_idx"]),
+                  nbr_mask=jnp.asarray(arrays["bsr_nbr_mask"]),
+                  vals=jnp.asarray(arrays["bsr_vals"]))
+    tree = None
+    if m["tree"] is not None:
+        t = m["tree"]
+        tree = Tree(perm=arrays["tree_perm"],
+                    levels=[arrays[f"tree_level_{i}"]
+                            for i in range(t["n_levels"])],
+                    d=t["d"], bits=t["bits"])
+    coo = (tuple(arrays[k] for k in ("coo_rows", "coo_cols", "coo_vals"))
+           if "coo_rows" in arrays else None)
+    host = api._PlanHost(
+        pi=arrays["pi"], inv=arrays["inv"], coo=coo, tree=tree,
+        embedding=arrays.get("embedding"), sigma=m["sigma"],
+        gamma=m["gamma"], embed_mean=arrays.get("embed_mean"),
+        embed_axes=arrays.get("embed_axes"),
+        y_last=arrays.get("y_last"), sources=arrays.get("sources"),
+        pattern_from_knn=m["pattern_from_knn"],
+        values_mode=m["values_mode"],
+        x=arrays.get("x"), alive=arrays.get("alive"),
+        codes=arrays.get("codes"), code_lo=arrays.get("code_lo"),
+        code_hi=arrays.get("code_hi"),
+        peak_alive=m.get("peak_alive"),
+        refresh=api.RefreshStats(**m["refresh"]))
+    return api.InteractionPlan(
+        config, n, bsr, jnp.asarray(arrays["pi"], jnp.int32),
+        jnp.asarray(arrays["inv"], jnp.int32), host)
+
+
 class Checkpointer:
     def __init__(self, directory: str | Path, keep: int = 3):
         self.dir = Path(directory)
@@ -213,68 +309,67 @@ class Checkpointer:
         pure transform of it, and the restoring mesh may have a different
         device count), plus a manifest note of the sharding axis so
         ``restore_plan(mesh=...)`` re-shards on load.
+
+        Batch-aware: a ``repro.api.PlanBatch`` is accepted directly — the
+        batch manifest records the shared spec/capacity and each member
+        lands in ``member_<i>/`` in the exact single-plan format, so
+        ``restore_plan`` re-stacks them (and the stacking re-derives the
+        shared spec, elastic to code that changed padding policy).
         """
         import dataclasses
 
         self.wait()
+        if hasattr(plan, "hosts") and hasattr(plan, "member"):
+            # a PlanBatch: member payloads + one batch manifest
+            pb = plan
+            payloads = [_plan_payload(pb.member(i), step)
+                        for i in range(pb.batch)]
+            manifest = {
+                "format": 1, "step": step, "batch": pb.batch,
+                "capacity": pb.capacity,
+                "config": dataclasses.asdict(pb.spec.config),
+                "tuned": {str(k): v for k, v in pb.tuned.items()},
+            }
+
+            def fill_batch(tmp: Path) -> None:
+                for i, (arrays, m) in enumerate(payloads):
+                    sub = tmp / f"member_{i}"
+                    sub.mkdir()
+                    np.savez(sub / "arrays.npz", **arrays)
+                    (sub / "manifest.json").write_text(json.dumps(m))
+                (tmp / "manifest.json").write_text(json.dumps(manifest))
+
+            self._write_plan_dir(step, name, fill_batch, blocking)
+            return
+
         shard_meta = None
         if hasattr(plan, "spec") and hasattr(plan, "unshard"):
             sp = plan
             shard_meta = {"axis": sp.spec.axis, "n_dev": sp.spec.n_dev,
                           "mode": sp.spec.mode}
             plan = sp.plan
-        host = plan.host
-        arrays = {"pi": np.asarray(host.pi), "inv": np.asarray(host.inv)}
-        if plan.bsr is not None:
-            arrays["bsr_col_idx"] = np.asarray(plan.bsr.col_idx)
-            arrays["bsr_nbr_mask"] = np.asarray(plan.bsr.nbr_mask)
-            arrays["bsr_vals"] = np.asarray(plan.bsr.vals)
-        if host.coo is not None:
-            arrays["coo_rows"], arrays["coo_cols"], arrays["coo_vals"] = (
-                np.asarray(a) for a in host.coo)
-        for key in ("embedding", "y_last", "embed_mean", "embed_axes",
-                    "sources", "x", "alive", "codes", "code_lo",
-                    "code_hi"):
-            val = getattr(host, key)
-            if val is not None:
-                arrays[key] = np.asarray(val)
-        if host.tree is not None:
-            arrays["tree_perm"] = np.asarray(host.tree.perm)
-            for i, lvl in enumerate(host.tree.levels):
-                arrays[f"tree_level_{i}"] = np.asarray(lvl)
-        manifest = {
-            "format": 1,
-            "step": step,
-            "n": plan.n,
-            # streaming capacity layout: capacity == n (physical slots);
-            # n_alive is the logical live count the restored mask re-derives
-            "capacity": plan.n,
-            "n_alive": plan.n_alive,
-            "config": dataclasses.asdict(plan.config),
-            "sigma": host.sigma,
-            "gamma": host.gamma,
-            "pattern_from_knn": host.pattern_from_knn,
-            # a callable cannot round-trip: freeze the pattern on restore
-            "values_mode": ("static" if host.values_mode == "fn"
-                            else host.values_mode),
-            "refresh": dataclasses.asdict(host.refresh),
-            "bsr": (None if plan.bsr is None else {
-                "bs": plan.bsr.bs, "sb": plan.bsr.sb, "n": plan.bsr.n,
-                "n_rb": plan.bsr.n_rb, "n_cb": plan.bsr.n_cb,
-                "fill": plan.bsr.fill, "max_nbr": plan.bsr.max_nbr}),
-            "tree": (None if host.tree is None else {
-                "d": host.tree.d, "bits": host.tree.bits,
-                "n_levels": host.tree.n_levels}),
-            "shard": shard_meta,
-        }
+        arrays, manifest = _plan_payload(plan, step)
+        manifest["shard"] = shard_meta
+
+        def fill(tmp: Path) -> None:
+            np.savez(tmp / "arrays.npz", **arrays)
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+
+        self._write_plan_dir(step, name, fill, blocking)
+
+    def _write_plan_dir(self, step: int, name: str, fill,
+                        blocking: bool) -> None:
+        """The atomic plan-write dance, shared by the single-plan and
+        batch paths: populate a ``.tmp`` dir via ``fill(tmp)``, rename it
+        into place, garbage-collect — in the background unless blocking.
+        (One copy on purpose: durability fixes must not fork.)"""
 
         def work():
             tmp = self.dir / f".tmp_plan_{step}_{name}"
             if tmp.exists():
                 shutil.rmtree(tmp)
             tmp.mkdir(parents=True)
-            np.savez(tmp / "arrays.npz", **arrays)
-            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            fill(tmp)
             final = self.dir / f"step_{step}" / f"plan_{name}"
             final.parent.mkdir(parents=True, exist_ok=True)
             if final.exists():
@@ -310,8 +405,6 @@ class Checkpointer:
         sharding axis (or ``"data"``).
         """
         from repro import api
-        from repro.core.blocksparse import BSR
-        from repro.core.hierarchy import Tree
 
         if step is None:
             ps = self.plan_steps(name)
@@ -340,6 +433,29 @@ class Checkpointer:
                 f"corrupt plan manifest {d / 'manifest.json'}: {e} "
                 "(checkpoint writes are atomic — this directory was "
                 "modified outside the Checkpointer)") from e
+        if m.get("batch"):
+            # a persisted PlanBatch: restore members, re-stack
+            if refresh_with is not None or mesh is not None:
+                raise ValueError(
+                    f"plan {name!r} at step {step} is a PlanBatch; "
+                    "refresh_with/mesh apply to single plans — restore "
+                    "the batch plain and refresh/shard members "
+                    "individually if needed")
+            members = []
+            for i in range(m["batch"]):
+                sub = d / f"member_{i}"
+                try:
+                    mm = json.loads((sub / "manifest.json").read_text())
+                    arrays = dict(np.load(sub / "arrays.npz"))
+                except Exception as e:
+                    raise ValueError(
+                        f"plan batch {name!r} at step {step}: member {i} "
+                        f"is corrupt or missing under {sub}: {e}") from e
+                _validate_plan_arrays(mm, arrays, sub)
+                members.append(_plan_from_payload(mm, arrays))
+            pb = api.PlanBatch.from_plans(members, capacity=m["capacity"])
+            pb.tuned = {int(k): v for k, v in (m.get("tuned") or {}).items()}
+            return pb, step
         if not (d / "arrays.npz").exists():
             raise FileNotFoundError(
                 f"plan {name!r} at step {step} has a manifest but no "
@@ -351,40 +467,7 @@ class Checkpointer:
                 f"corrupt plan arrays {d / 'arrays.npz'}: {e}") from e
         _validate_plan_arrays(m, arrays, d)
 
-        config = api.PlanConfig(**m["config"])
-        n = m["n"]
-        bsr = None
-        if m["bsr"] is not None:
-            b = m["bsr"]
-            bsr = BSR(bs=b["bs"], sb=b["sb"], n=b["n"], n_rb=b["n_rb"],
-                      n_cb=b["n_cb"], fill=b["fill"], max_nbr=b["max_nbr"],
-                      col_idx=jnp.asarray(arrays["bsr_col_idx"]),
-                      nbr_mask=jnp.asarray(arrays["bsr_nbr_mask"]),
-                      vals=jnp.asarray(arrays["bsr_vals"]))
-        tree = None
-        if m["tree"] is not None:
-            t = m["tree"]
-            tree = Tree(perm=arrays["tree_perm"],
-                        levels=[arrays[f"tree_level_{i}"]
-                                for i in range(t["n_levels"])],
-                        d=t["d"], bits=t["bits"])
-        coo = (tuple(arrays[k] for k in ("coo_rows", "coo_cols", "coo_vals"))
-               if "coo_rows" in arrays else None)
-        host = api._PlanHost(
-            pi=arrays["pi"], inv=arrays["inv"], coo=coo, tree=tree,
-            embedding=arrays.get("embedding"), sigma=m["sigma"],
-            gamma=m["gamma"], embed_mean=arrays.get("embed_mean"),
-            embed_axes=arrays.get("embed_axes"),
-            y_last=arrays.get("y_last"), sources=arrays.get("sources"),
-            pattern_from_knn=m["pattern_from_knn"],
-            values_mode=m["values_mode"],
-            x=arrays.get("x"), alive=arrays.get("alive"),
-            codes=arrays.get("codes"), code_lo=arrays.get("code_lo"),
-            code_hi=arrays.get("code_hi"),
-            refresh=api.RefreshStats(**m["refresh"]))
-        plan = api.InteractionPlan(
-            config, n, bsr, jnp.asarray(arrays["pi"], jnp.int32),
-            jnp.asarray(arrays["inv"], jnp.int32), host)
+        plan = _plan_from_payload(m, arrays)
         if refresh_with is not None:
             plan = api.refresh_plan(plan, refresh_with, policy=policy)
         if mesh is not None:

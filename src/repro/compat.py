@@ -30,6 +30,25 @@ def shard_map(f, **kwargs):
     return _shard_map(f, **kwargs)
 
 
+try:
+    from jax.interpreters.batching import BatchTracer as _BatchTracer
+except ImportError:  # pragma: no cover - depends on installed JAX
+    _BatchTracer = None
+
+
+def is_batch_tracer(x) -> bool:
+    """True when ``x`` is a ``jax.vmap`` batching tracer.
+
+    Used by the plan API to turn the opaque shape/hash errors a vmapped
+    ``InteractionPlan`` produces into a descriptive ``TypeError`` pointing
+    at ``PlanBatch``. The tracer class has lived in
+    ``jax.interpreters.batching`` for every supported release, but it is
+    internal — the import is fenced (at module load, off the hot path) so
+    an upstream move degrades to "no early detection", not ImportError.
+    """
+    return _BatchTracer is not None and isinstance(x, _BatchTracer)
+
+
 def axis_size(axis_name):
     """``jax.lax.axis_size`` (newer JAX) with the classic constant-folding
     ``psum(1, axis)`` fallback (static under shard_map/pmap on 0.4.x)."""

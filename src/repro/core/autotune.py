@@ -34,6 +34,18 @@ from repro.core.registry import backend_names, get_backend
 # SpMV backend autotuning (resolves plan backend="auto")
 # ---------------------------------------------------------------------------
 
+# structural memo of auto winners: probing costs a compile + timed runs per
+# registered backend, and a *batch* of spec-identical plans (or a stream of
+# refreshed lineages with stable shapes) would otherwise re-pay it per plan.
+# Keys are (shape_key, charge ndim, backend set, device_count) — everything
+# that determines which kernels compile; values are winner names.
+_TUNE_MEMO: Dict[tuple, str] = {}
+
+
+def clear_tune_memo() -> None:
+    """Drop memoized auto-backend decisions (tests / fresh measurements)."""
+    _TUNE_MEMO.clear()
+
 
 def probe_backends(plan, x: Optional[jax.Array] = None,
                    backends: Optional[Iterable[str]] = None,
@@ -91,11 +103,28 @@ def tune_backend(plan, x: Optional[jax.Array] = None,
     launch overhead — so the transfer model, not the stopwatch, decides
     between per-device paths; the stopwatch still ranks the single-device
     backends against each other.
+
+    Single-device decisions are memoized on the plan's structural key
+    (``PlanSpec.shape_key`` + charge ndim + backend set): plans that
+    compile to the same kernels get the same winner without re-probing —
+    what lets a batch of spec-identical plans autotune once. Multi-device
+    decisions are NOT memoized: the dist-vs-replicate call depends on the
+    plan's actual block structure (the halo transfer model), which two
+    same-shaped plans can disagree on.
     """
+    ndev = device_count if device_count is not None else jax.device_count()
+    names = tuple(backends) if backends is not None else backend_names()
+    key = None
+    if ndev < 2 and plan.bsr is not None \
+            and not isinstance(plan.bsr.vals, jax.core.Tracer):
+        key = (plan.spec.shape_key, x.ndim if x is not None else 1, names,
+               ndev)
+        hit = _TUNE_MEMO.get(key)
+        if hit is not None:
+            return hit, {}
     times = probe_backends(plan, x, backends)
     if not times:
         return "bsr", times
-    ndev = device_count if device_count is not None else jax.device_count()
     if ndev >= 2 and "dist" in times and plan.bsr is not None \
             and not isinstance(plan.bsr.col_idx, jax.core.Tracer):
         from repro.core.shardplan import analyze_shards
@@ -103,7 +132,66 @@ def tune_backend(plan, x: Optional[jax.Array] = None,
         spec, _ = analyze_shards(plan.bsr, ndev)
         if spec.transfer_blocks < spec.allgather_blocks:
             return "dist", times
-    return min(times, key=times.get), times
+    winner = min(times, key=times.get)
+    if key is not None:
+        _TUNE_MEMO[key] = winner
+    return winner, times
+
+
+def tune_batch_backend(batch, x: Optional[jax.Array] = None,
+                       backends: Optional[Iterable[str]] = None,
+                       warmup: int = 1, iters: int = 3,
+                       atol: float = 1e-3) -> Tuple[str, Dict[str, float]]:
+    """One shared backend decision for a whole ``api.PlanBatch``.
+
+    Probes the *batched* kernel itself (``api._batch_apply_kernel``) over
+    the vmappable backends — the single-plan stopwatch ranking does not
+    transfer (vmap changes the einsum shapes and dispatch count), so the
+    batch is measured as the batch. Backends that fail to vmap or disagree
+    with the batched ``bsr`` path are skipped. The decision is memoized on
+    ``(batch shape_key, B, charge ndim, backend set)``: spec-identical
+    batches — every construction in a serving loop — tune once.
+    """
+    from repro import api
+
+    names = (tuple(backends) if backends is not None
+             else tuple(n for n in api._BATCHED_BACKENDS
+                        if n in backend_names()))
+    ndim = (x.ndim - 1) if x is not None else 1
+    key = ("batch", batch.spec.shape_key, batch.batch, ndim, names)
+    hit = _TUNE_MEMO.get(key)
+    if hit is not None:
+        return hit, {}
+    if x is None:
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (batch.batch, batch.capacity)), jnp.float32)
+    try:
+        ref = np.asarray(jax.block_until_ready(api._batch_apply_kernel(
+            batch.spec, batch.data, x, "bsr", "apply")))
+    except Exception:
+        ref = None
+    times: Dict[str, float] = {}
+    for name in names:
+        try:
+            y = np.asarray(jax.block_until_ready(api._batch_apply_kernel(
+                batch.spec, batch.data, x, name, "apply")))
+            if ref is not None and np.abs(y - ref).max() > atol:
+                continue
+            for _ in range(warmup):
+                jax.block_until_ready(api._batch_apply_kernel(
+                    batch.spec, batch.data, x, name, "apply"))
+            ts = []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(api._batch_apply_kernel(
+                    batch.spec, batch.data, x, name, "apply"))
+                ts.append(time.perf_counter() - t0)
+            times[name] = float(np.median(ts))
+        except Exception:
+            continue
+    winner = min(times, key=times.get) if times else "bsr"
+    _TUNE_MEMO[key] = winner
+    return winner, times
 
 
 def coverage_curve(q: jax.Array, k: jax.Array, cfg: ClusterKVConfig

@@ -27,11 +27,59 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.embedding import pca_project_det as _pca_project
 from repro.core.hierarchy import morton_codes
 
 NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# per-head orderings as a PlanBatch (the plan API as the ordering asset)
+# ---------------------------------------------------------------------------
+#
+# ``cluster_perm`` below re-derives a throwaway Morton sort on every call —
+# fine inside a traced training step, but the serving path (prefill + many
+# decode steps over one cache) wants the ordering to be an *asset*: built
+# once per (batch, kv-head), reused across calls, refreshable when the cache
+# churns, and checkpointable with the model. That asset is exactly an
+# ``api.PlanBatch``: one plan per head, stacked on a shared spec.
+
+
+def kv_plan_batch(k: jax.Array, *, d: int = 3, bits: int = 10,
+                  leaf_size: int = 64, knn: int = 8,
+                  with_bsr: bool = False):
+    """One ``InteractionPlan`` per (batch, kv-head) over the keys, stacked
+    as an ``api.PlanBatch`` — the per-head ordering `select_blocks`
+    consumes (see :func:`plan_batch_perm`).
+
+    Host-side (concrete keys: prefill/serving, not inside a traced step).
+    ``with_bsr=True`` additionally dresses each head's kNN pattern into
+    storage, so the same batch serves batched near-neighbor matvecs over
+    the key sets; the default builds ordering-only members (cheap).
+    """
+    from repro import api
+
+    kn = np.asarray(k, np.float32)
+    s, dh = kn.shape[-2:]
+    flat = kn.reshape((-1, s, dh))
+    return api.build_plan_batch(flat, k=min(knn, s - 1), d=min(d, dh),
+                                bits=bits, leaf_size=leaf_size,
+                                with_bsr=with_bsr, backend="bsr")
+
+
+def plan_batch_perm(pb, lead: Tuple[int, ...]) -> jax.Array:
+    """Stacked cluster ordering of a :func:`kv_plan_batch` result, shaped
+    ``lead + (S,)`` (e.g. ``(B, Hkv, S)``) — a drop-in for the permutation
+    :func:`cluster_perm` derives privately per call."""
+    pi = pb.data.pi
+    want = int(np.prod(lead)) if lead else 1
+    if pi.shape[0] != want:
+        raise ValueError(
+            f"PlanBatch has {pi.shape[0]} members, lead shape {lead} "
+            f"needs {want} (one plan per (batch, kv-head))")
+    return pi.reshape(tuple(lead) + (pi.shape[-1],)).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.blocksparse import BSR
-from repro.core.registry import register_backend
+from repro.core.registry import register_backend, register_batched_backend
 
 
 # ---------------------------------------------------------------------------
@@ -97,6 +97,114 @@ def spmv_bsr_ml(bsr_vals: jax.Array, col_idx: jax.Array, x: jax.Array,
     _, ys = jax.lax.scan(step, None, (v, c))
     y = ys.reshape(-1, bs, ys.shape[-1]).reshape(-1, ys.shape[-1])[:n]
     return y[:, 0] if squeeze else y
+
+
+# -- batched paths (PlanBatch: stacked plans, one kernel) -------------------
+
+
+def _flat_gather_segments(xs: jax.Array, col_idx: jax.Array,
+                          bs: int) -> jax.Array:
+    """Charge segments for every (lane, row-block, tile) of a batch.
+
+    ``xs`` (B, n, f), ``col_idx`` (B, n_rb, nbr) -> (B, n_rb, nbr, bs, f).
+    The naive formulation — ``vmap`` of the single-plan ``xb[col_idx]`` —
+    leaves XLA a *batched* gather, which the CPU backend lowers to scalar
+    loops (~10x slower than the compute it feeds). Flattening the batch
+    into one segment table and offsetting the indices per lane turns it
+    back into the plain row gather the single-plan path enjoys.
+    """
+    B = xs.shape[0]
+    n_cb = (xs.shape[1] + bs - 1) // bs
+    pad = n_cb * bs - xs.shape[1]
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+    flat = xs.reshape(B * n_cb, bs, -1)
+    idx = (col_idx + (jnp.arange(B) * n_cb)[:, None, None]).reshape(-1)
+    seg = flat[idx]
+    return seg.reshape(col_idx.shape + seg.shape[1:])
+
+
+def _tiles_times_segments(vals: jax.Array, seg: jax.Array) -> jax.Array:
+    """(..., nbr, bs, bs) tiles x (..., nbr, bs, f) segments ->
+    (..., bs, f), summed over the tile slots.
+
+    NOT an einsum: XLA lowers ``...ij,...jf`` to a dot_general whose
+    preferred operand layout *transposes the whole tile tensor on every
+    call* (constants get it folded once — arguments pay it each time; at
+    batch sizes that copy is 10x the useful compute). The elementwise
+    broadcast-multiply + reduce (f == 1) and the layout-preserving
+    ``batch_matmul`` (f > 1) keep the tiles in their stored layout.
+    """
+    lead = vals.shape[:-3]
+    nbr, bs = vals.shape[-3], vals.shape[-1]
+    f = seg.shape[-1]
+    if f == 1:
+        y = (vals * seg[..., None, :, 0]).sum(axis=(-3, -1))
+        return y[..., None]
+    out = jax.lax.batch_matmul(vals.reshape(-1, bs, bs),
+                               seg.reshape(-1, bs, f))
+    return out.reshape(lead + (nbr, bs, f)).sum(axis=-3)
+
+
+@jax.jit
+def spmv_bsr_batched(vals: jax.Array, col_idx: jax.Array,
+                     xs: jax.Array) -> jax.Array:
+    """Flat block path over a stacked batch: ``vals`` (B, n_rb, nbr, bs,
+    bs), ``xs`` (B, n) or (B, n, f); one gather + one tile contraction
+    for every plan in the batch."""
+    B, n_rb, nbr, bs, _ = vals.shape
+    squeeze = xs.ndim == 2
+    if squeeze:
+        xs = xs[..., None]
+    n = xs.shape[1]
+    seg = _flat_gather_segments(xs, col_idx, bs)
+    y = _tiles_times_segments(vals, seg)
+    y = y.reshape(B, n_rb * bs, -1)[:, :n]
+    return y[..., 0] if squeeze else y
+
+
+@functools.partial(jax.jit, static_argnames=("sb",))
+def spmv_bsr_ml_batched(vals: jax.Array, col_idx: jax.Array,
+                        xs: jax.Array, sb: int = 8) -> jax.Array:
+    """Multi-level batched path: scan over row-superblock stripes (every
+    lane's stripe s together), flat-gathering each stripe's segments —
+    the working set per step is one stripe *across the batch*."""
+    B, n_rb, nbr, bs, _ = vals.shape
+    squeeze = xs.ndim == 2
+    if squeeze:
+        xs = xs[..., None]
+    n = xs.shape[1]
+    pad_rb = (-n_rb) % sb
+    if pad_rb:
+        vals = jnp.pad(vals, ((0, 0), (0, pad_rb), (0, 0), (0, 0), (0, 0)))
+        col_idx = jnp.pad(col_idx, ((0, 0), (0, pad_rb), (0, 0)))
+    n_cb = (n + bs - 1) // bs
+    pad = n_cb * bs - n
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+    flat = xs.reshape(B * n_cb, bs, -1)
+    off = (jnp.arange(B) * n_cb)[:, None, None]
+    v = jnp.swapaxes(vals.reshape(B, -1, sb, nbr, bs, bs), 0, 1)
+    c = jnp.swapaxes((col_idx + off).reshape(B, -1, sb, nbr), 0, 1)
+
+    def step(_, vc):
+        vt, ct = vc                          # (B,sb,nbr,bs,bs) (B,sb,nbr)
+        seg = flat[ct.reshape(-1)].reshape(ct.shape + flat.shape[1:])
+        return None, _tiles_times_segments(vt, seg)
+
+    _, ys = jax.lax.scan(step, None, (v, c))        # (n_sb, B, sb, bs, f)
+    y = jnp.swapaxes(ys, 0, 1).reshape(B, -1, ys.shape[-1])[:, :n]
+    return y[..., 0] if squeeze else y
+
+
+@register_batched_backend("bsr")
+def _bsr_batched(spec, data, xs: jax.Array) -> jax.Array:
+    return spmv_bsr_batched(data.vals, data.col_idx, xs)
+
+
+@register_batched_backend("bsr_ml")
+def _bsr_ml_batched(spec, data, xs: jax.Array) -> jax.Array:
+    return spmv_bsr_ml_batched(data.vals, data.col_idx, xs, spec.sb)
 
 
 # -- registry backends (plan, x) -> y, cluster index space ------------------

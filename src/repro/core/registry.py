@@ -26,6 +26,7 @@ from __future__ import annotations
 from typing import Callable, Dict, Tuple
 
 _BACKENDS: Dict[str, Callable] = {}
+_BATCHED: Dict[str, Callable] = {}
 _DEFAULTS_LOADED = False
 
 # modules that register the built-in backends at import time
@@ -33,14 +34,59 @@ _DEFAULT_PROVIDERS = ("repro.core.interact", "repro.kernels.ops",
                       "repro.core.dist")
 
 
-def register_backend(name: str, fn: Callable | None = None):
-    """Register ``fn`` as SpMV backend ``name`` (usable as a decorator)."""
+def register_backend(name: str, fn: Callable | None = None, *,
+                     overwrite: bool = False):
+    """Register ``fn`` as SpMV backend ``name`` (usable as a decorator).
+
+    Re-registering an existing name raises unless ``overwrite=True`` —
+    a silent overwrite turns two libraries picking the same name into a
+    wrong-answer bug instead of an import-time error. Re-registering the
+    *same* callable is a no-op (module re-imports are harmless).
+    """
 
     def _register(f: Callable) -> Callable:
+        prev = _BACKENDS.get(name)
+        if prev is not None and prev is not f and not overwrite:
+            raise ValueError(
+                f"SpMV backend {name!r} is already registered "
+                f"({prev.__module__}.{prev.__qualname__}); pass "
+                "overwrite=True to replace it deliberately")
         _BACKENDS[name] = f
         return f
 
     return _register if fn is None else _register(fn)
+
+
+def register_batched_backend(name: str, fn: Callable | None = None, *,
+                             overwrite: bool = False):
+    """Register the *batched* implementation of backend ``name``.
+
+    A batched backend is ``fn(spec: PlanSpec, data: PlanData, xs) -> ys``
+    computing the cluster-order interaction for a whole stacked batch
+    (leading axis) in one kernel. ``PlanBatch`` dispatches to it when
+    present; backends without one fall back to a generic ``vmap`` of
+    their single-plan path — correct, but XLA (CPU especially) lowers
+    vmapped gathers poorly, so hot backends should register a real
+    batched kernel (see ``core.interact.spmv_bsr_batched``).
+    """
+
+    def _register(f: Callable) -> Callable:
+        prev = _BATCHED.get(name)
+        if prev is not None and prev is not f and not overwrite:
+            raise ValueError(
+                f"batched SpMV backend {name!r} is already registered; "
+                "pass overwrite=True to replace it deliberately")
+        _BATCHED[name] = f
+        return f
+
+    return _register if fn is None else _register(fn)
+
+
+def get_batched_backend(name: str) -> Callable | None:
+    """The batched implementation of ``name``, or ``None`` when the
+    backend only has a single-plan path (callers vmap it generically)."""
+    _ensure_defaults()
+    return _BATCHED.get(name)
 
 
 def _ensure_defaults() -> None:
@@ -62,8 +108,14 @@ def get_backend(name: str) -> Callable:
     try:
         return _BACKENDS[name]
     except KeyError:
+        import difflib
+
+        close = difflib.get_close_matches(name, backend_names(), n=1,
+                                          cutoff=0.5)
+        hint = f" — did you mean {close[0]!r}?" if close else ""
         raise ValueError(
-            f"unknown SpMV backend {name!r}; registered: {backend_names()}"
+            f"unknown SpMV backend {name!r}{hint}; "
+            f"registered: {backend_names()}"
         ) from None
 
 

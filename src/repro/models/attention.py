@@ -151,7 +151,7 @@ def decode_attention(q, k, v, kpos, qpos, *, window=0):
 
 
 def clusterkv_attention(q, k, v, qpos, kpos, cfg: ClusterKVConfig, *,
-                        causal=True):
+                        causal=True, plan_batch=None):
     """Block-sparse attention over cluster-sorted keys (train/prefill).
 
     The paper reorders BOTH matrix dimensions (pi_t and pi_s). Keys are
@@ -161,6 +161,12 @@ def clusterkv_attention(q, k, v, qpos, kpos, cfg: ClusterKVConfig, *,
     back to original order. For causal LM attention queries stay in time
     order (the local-window boost supplies recency; sorting queries would
     scramble the causal frontier).
+
+    ``plan_batch`` (an ``api.PlanBatch`` from ``ckv.kv_plan_batch(k)``)
+    supplies the per-head key ordering as a persistent plan asset instead
+    of the private per-call Morton sort — the serving path builds it once
+    at prefill, refreshes/checkpoints it with the cache, and every
+    subsequent call skips the embed+sort work.
     """
     b, hq, s, dh = q.shape
     hkv = k.shape[1]
@@ -173,7 +179,10 @@ def clusterkv_attention(q, k, v, qpos, kpos, cfg: ClusterKVConfig, *,
         kposb = jnp.broadcast_to(kpos, (b, hkv, kpos.shape[0]))
     else:
         kposb = kpos
-    perm = ckv.cluster_perm(k, d=cfg.embed_dim)
+    if plan_batch is not None:
+        perm = ckv.plan_batch_perm(plan_batch, (b, hkv))
+    else:
+        perm = ckv.cluster_perm(k, d=cfg.embed_dim)
     k_s, v_s, pos_s = ckv.permute_kv(k, v, kposb, perm)
     cent = ckv.block_centroids(k_s, bk)
     kpmin = pos_s.reshape(b, hkv, nkb, bk).min(-1)

@@ -1,0 +1,524 @@
+"""PlanBatch: spec/data split, vmap-able batched plans (ISSUE 5 tentpole).
+
+Covers the split itself (PlanSpec hashable + PlanData pytree +
+from_spec_data view bit-exactness), batched matvec equivalence against
+single plans (uniform and ragged member sizes), the one-compilation
+contract (trace-count via a counting backend, both the vmap and the scan
+kernel), the shared autotune decision with structural memoization, lockstep
+streaming through the PR 4 tiers with per-plan escalation, checkpoint
+round-trips, and the descriptive TypeError a vmapped single plan raises.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import autotune, registry
+from repro.data.pipeline import feature_mixture
+
+B, N, D, K = 4, 256, 32, 8
+
+
+def _points(n=N, b=B, seed0=0):
+    return [feature_mixture(n, D, n_clusters=8, seed=seed0 + s)
+            for s in range(b)]
+
+
+@pytest.fixture(scope="module")
+def batch():
+    return api.build_plan_batch(_points(), k=K, bs=16, sb=4, backend="bsr")
+
+
+@pytest.fixture(scope="module")
+def charges():
+    rng = np.random.default_rng(0)
+    return [rng.standard_normal(N).astype(np.float32) for _ in range(B)]
+
+
+# -- spec/data split --------------------------------------------------------
+
+
+def test_spec_is_hashable_and_shared():
+    x = _points(b=1)[0]
+    rng = np.random.default_rng(0)
+    p0 = api.build_plan(x, k=K, bs=16, sb=4, backend="bsr")
+    p1 = api.build_plan(x, k=K, bs=16, sb=4, backend="bsr",
+                        values=lambda r, c, d2: rng.random(len(r)))
+    s0, s1 = p0.spec, p1.spec          # same structure, different data
+    assert hash(s0) == hash(s1) and s0 == s1
+    assert s0.shape_key == (N, 16, 4, N // 16, N // 16, s0.max_nbr)
+    # a different layout is a different spec
+    p2 = api.build_plan(x, k=K, bs=32, sb=4, backend="bsr")
+    assert p2.spec != s0
+    # batch members are padded onto ONE spec even from different clouds
+    pb = api.build_plan_batch(_points(b=2), k=K, bs=16, sb=4,
+                              backend="bsr")
+    assert pb.member(0).spec == pb.member(1).spec == pb.spec
+
+
+def test_data_is_a_pytree_of_arrays():
+    p = api.build_plan(_points(b=1)[0], k=K, bs=16, sb=4, backend="bsr")
+    leaves, treedef = jax.tree_util.tree_flatten(p.data)
+    assert len(leaves) == 5            # pi, inv, col_idx, nbr_mask, vals
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(back, api.PlanData)
+    np.testing.assert_array_equal(np.asarray(back.pi), np.asarray(p.pi))
+
+
+def test_from_spec_data_view_is_bit_exact():
+    p = api.build_plan(_points(b=1)[0], k=K, bs=16, sb=4, backend="bsr")
+    view = api.InteractionPlan.from_spec_data(p.spec, p.data,
+                                              fill=p.bsr.fill)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(N), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(view.apply(x)),
+                                  np.asarray(p.apply(x)))
+    assert view.spec == p.spec
+
+
+# -- batched interaction ----------------------------------------------------
+
+
+def test_batched_matvec_matches_single_plans(batch, charges):
+    xs = batch.pad_charges(charges)
+    y = np.asarray(batch.matvec(xs))
+    for i, x in enumerate(_points()):
+        p = api.build_plan(x, k=K, bs=16, sb=4, backend="bsr")
+        yi = np.asarray(p.matvec(jnp.asarray(charges[i])))
+        np.testing.assert_allclose(y[i, :N], yi, rtol=1e-4, atol=1e-4)
+
+
+def test_batched_apply_matches_members(batch, charges):
+    """The batched kernel (transpose-free tile contraction) agrees with
+    each member's single-plan path to float associativity."""
+    xs = batch.pad_charges(charges)
+    ya = np.asarray(batch.apply(xs))
+    for i in range(B):
+        m = batch.member(i)
+        np.testing.assert_allclose(ya[i], np.asarray(m.apply(xs[i])),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_member_view_is_a_working_single_plan(batch, charges):
+    m = batch.member(1)
+    assert isinstance(m, api.InteractionPlan)
+    assert m.spec == batch.spec
+    y = m.matvec(jnp.asarray(np.pad(charges[1],
+                                    (0, batch.capacity - N))))
+    assert y.shape == (batch.capacity,)
+
+
+def test_ragged_members_pad_to_pow2_capacity():
+    sizes = [100, 200, 300]
+    xs = [feature_mixture(n, D, n_clusters=4, seed=s)
+          for s, n in enumerate(sizes)]
+    pb = api.build_plan_batch(xs, k=K, bs=16, sb=4, backend="bsr")
+    assert pb.capacity == 512                      # pow2-quantized max n
+    assert (pb.n_alive == np.array(sizes)).all()
+    rng = np.random.default_rng(2)
+    ch = [rng.standard_normal(n).astype(np.float32) for n in sizes]
+    y = np.asarray(pb.matvec(pb.pad_charges(ch)))
+    for i, n in enumerate(sizes):
+        p = api.build_plan(xs[i], k=K, bs=16, sb=4, backend="bsr")
+        np.testing.assert_allclose(
+            y[i, :n], np.asarray(p.matvec(jnp.asarray(ch[i]))),
+            rtol=1e-4, atol=1e-4)
+        assert not np.asarray(y[i, n:]).any()      # dead capacity is zero
+
+
+def test_matvec_multifeature_charges(batch):
+    rng = np.random.default_rng(3)
+    xs = jnp.asarray(rng.standard_normal((B, batch.capacity, 3)),
+                     jnp.float32)
+    y = np.asarray(batch.matvec(xs))
+    for i in range(B):
+        np.testing.assert_allclose(
+            y[i], np.asarray(batch.member(i).matvec(xs[i])),
+            rtol=1e-5, atol=1e-5)
+
+
+def test_charge_shape_errors(batch):
+    with pytest.raises(ValueError, match="batched charges"):
+        batch.matvec(jnp.zeros((B + 1, batch.capacity)))
+    with pytest.raises(ValueError, match="batched charges"):
+        batch.matvec(jnp.zeros((B, batch.capacity - 1)))
+    with pytest.raises(ValueError, match="charge arrays"):
+        batch.pad_charges([np.zeros(N)] * (B + 1))
+
+
+def test_unbatchable_backends_rejected(batch):
+    for name in ("csr", "dist"):
+        with pytest.raises(ValueError, match="cannot run batched"):
+            batch.matvec(jnp.zeros((B, batch.capacity)), backend=name)
+
+
+# -- one compilation for the whole batch ------------------------------------
+
+
+def test_single_trace_for_whole_batch(batch, charges):
+    """The acceptance contract: vmapping/scanning over PlanBatch.matvec
+    compiles exactly once however many plans ride the batch."""
+    xs = batch.pad_charges(charges)
+    calls = []
+
+    @api.register_backend("trace_counter")
+    def _counting(p, x, **kw):
+        calls.append(1)                 # runs at trace time only
+        return api.get_backend("bsr")(p, x)
+
+    try:
+        batch.matvec(xs, backend="trace_counter")
+        assert len(calls) == 1, f"vmap kernel traced {len(calls)}x for " \
+                                f"a batch of {batch.batch}"
+        batch.matvec(xs, backend="trace_counter")
+        assert len(calls) == 1          # second call: compiled cache hit
+        batch.matvec(xs, backend="trace_counter", serial=True)
+        assert len(calls) == 2          # lax.scan body traced once too
+        batch.matvec(xs, backend="trace_counter", serial=True)
+        assert len(calls) == 2
+    finally:
+        registry._BACKENDS.pop("trace_counter", None)
+
+
+def test_vmap_and_scan_kernels_agree(batch, charges):
+    xs = batch.pad_charges(charges)
+    np.testing.assert_allclose(np.asarray(batch.matvec(xs)),
+                               np.asarray(batch.matvec(xs, serial=True)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -- single-plan vmap: descriptive error ------------------------------------
+
+
+def test_single_plan_under_vmap_raises_typeerror():
+    """Regression: a vmapped InteractionPlan used to die in an opaque
+    tracer/shape error; now it names the supported path."""
+    p = api.build_plan(_points(b=1)[0], k=K, bs=16, sb=4, backend="bsr")
+    fake = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (2,) + a.shape), p)
+    x = jnp.zeros(N, jnp.float32)
+    with pytest.raises(TypeError, match="PlanBatch"):
+        jax.vmap(lambda pp: pp.matvec(x))(fake)
+    with pytest.raises(TypeError, match="build_plan_batch"):
+        jax.vmap(lambda pp: pp.apply(x))(fake)
+
+
+def test_vmap_over_charges_still_works():
+    """Only mapping the *plan* is unsupported; charge-batched vmap of a
+    closed-over plan keeps working."""
+    p = api.build_plan(_points(b=1)[0], k=K, bs=16, sb=4, backend="bsr")
+    xs = jnp.asarray(np.random.default_rng(4).standard_normal((3, N)),
+                     jnp.float32)
+    y = np.asarray(jax.vmap(p.matvec)(xs))
+    np.testing.assert_allclose(y[0], np.asarray(p.matvec(xs[0])),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -- shared autotune --------------------------------------------------------
+
+
+def test_auto_backend_shared_and_memoized(monkeypatch):
+    autotune.clear_tune_memo()
+    probes = []
+    real = autotune.probe_backends
+    monkeypatch.setattr(autotune, "probe_backends",
+                        lambda *a, **k: probes.append(1) or real(*a, **k))
+    xs = _points(b=3, seed0=20)
+    pb = api.build_plan_batch(xs, k=K, bs=16, sb=4, backend="auto")
+    x = jnp.asarray(np.random.default_rng(5).standard_normal(
+        (3, pb.capacity)), jnp.float32)
+    name = pb.resolve_backend(x=x)
+    assert name in ("bsr", "bsr_ml", "pallas")
+    assert pb.tuned[1] == name           # one shared decision
+    # a spec-identical batch answers from the memo without re-probing
+    n_memo = len(autotune._TUNE_MEMO)
+    pb2 = api.build_plan_batch(xs, k=K, bs=16, sb=4, backend="auto")
+    assert pb2.resolve_backend(x=x) == name
+    assert len(autotune._TUNE_MEMO) == n_memo
+    y = np.asarray(pb.matvec(x))
+    np.testing.assert_allclose(
+        y[0, :N], np.asarray(pb.member(0).matvec(x[0])[:N]),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_single_plan_tune_memoized(monkeypatch):
+    if jax.device_count() >= 2:
+        pytest.skip("single-device memo path (multi-device decisions "
+                    "depend on block structure, not shapes)")
+    autotune.clear_tune_memo()
+    x = _points(b=1, seed0=40)[0]
+    rng = np.random.default_rng(40)
+    p1 = api.build_plan(x, k=K, bs=16, sb=4, backend="auto")
+    p2 = api.build_plan(x, k=K, bs=16, sb=4, backend="auto",
+                        values=lambda r, c, d2: rng.random(len(r)))
+    assert p1.spec.shape_key == p2.spec.shape_key
+    name1 = p1.resolve_backend()
+    probes = []
+    monkeypatch.setattr(autotune, "probe_backends",
+                        lambda *a, **k: probes.append(1) or {})
+    assert p2.resolve_backend() == name1     # memo hit, no probe
+    assert not probes
+
+
+# -- lockstep streaming -----------------------------------------------------
+
+
+def _stream_batch():
+    xs = _points(seed0=60)
+    return api.build_plan_batch(xs, k=K, bs=16, sb=4, backend="bsr",
+                                ell_slack=4, capacity=N + 64), xs
+
+
+def test_lockstep_update_matches_single_plan_updates():
+    pb, xs = _stream_batch()
+    rng = np.random.default_rng(7)
+    kills = [rng.choice(N, 8, replace=False) for _ in range(B)]
+    arrivals = [feature_mixture(8, D, n_clusters=8, seed=100 + i)
+                for i in range(B)]
+    pb2 = pb.update(insert=arrivals, delete=kills)
+    assert (pb2.n_alive == N).all()
+    x = jnp.asarray(rng.standard_normal(pb2.capacity), jnp.float32)
+    for i in range(B):
+        single = api.update_plan(pb.member(i), insert=arrivals[i],
+                                 delete=kills[i])
+        xp = x[:single.n]
+        np.testing.assert_allclose(
+            np.asarray(pb2.member(i).matvec(x)[:single.n]),
+            np.asarray(single.matvec(xp)), rtol=1e-4, atol=1e-4)
+
+
+def test_update_keeps_spec_and_tuned_when_no_member_escalates():
+    pb, _ = _stream_batch()
+    pb.tuned[1] = "bsr"
+    rng = np.random.default_rng(8)
+    kills = [rng.choice(N, 4, replace=False) for _ in range(B)]
+    pb2 = pb.delete(kills)
+    assert pb2.spec == pb.spec           # compiled kernels survive
+    assert pb2.tuned == pb.tuned
+    assert all(st.tombstones == 1 for st in pb2.refresh_stats)
+
+
+def test_update_escalation_is_per_plan():
+    """One member outgrows the shared capacity; only the batch-level spec
+    re-unifies — every member still matches its single-plan twin."""
+    pb, _ = _stream_batch()
+    rng = np.random.default_rng(9)
+    big = feature_mixture(96, D, n_clusters=8, seed=300)   # > free slots
+    arrivals = [big if i == 0 else None for i in range(B)]
+    pb2 = pb.update(insert=arrivals)
+    assert pb2.capacity > pb.capacity            # member 0 forced a grow
+    assert pb2.n_alive[0] == N + 96 and (pb2.n_alive[1:] == N).all()
+    assert pb2.refresh_stats[0].grows == 1
+    assert pb2.refresh_stats[1].grows == 0       # others untouched tiers
+    x = jnp.asarray(rng.standard_normal(pb2.capacity), jnp.float32)
+    y = np.asarray(pb2.matvec(jnp.broadcast_to(x, (B, pb2.capacity))))
+    for i in range(B):
+        np.testing.assert_allclose(
+            y[i], np.asarray(pb2.member(i).matvec(x)),
+            rtol=1e-4, atol=1e-4)
+
+
+def test_padding_holes_are_not_compaction_debris():
+    """Regression: pow2 padding can leave a ragged member mostly holes
+    (dead_frac far above max_dead_frac). The compaction trigger measures
+    points lost since the live peak, so a small delete must stream
+    through the tombstone tier — not full-rebuild (and get re-padded,
+    and rebuild again) on every step."""
+    sizes = [100, 200, 300]
+    xs = [feature_mixture(n, D, n_clusters=4, seed=s)
+          for s, n in enumerate(sizes)]
+    pb = api.build_plan_batch(xs, k=K, bs=16, sb=4, backend="bsr",
+                              ell_slack=4)
+    assert pb.capacity == 512          # member 0 is ~80% holes
+    rng = np.random.default_rng(13)
+    kills = [rng.choice(n, 5, replace=False) for n in sizes]
+    pb2 = pb.delete(kills)
+    for i, st in enumerate(pb2.refresh_stats):
+        assert st.compactions == 0, (i, st)
+        assert st.tombstones == 1
+    assert (pb2.n_alive == np.array(sizes) - 5).all()
+    pb3 = pb2.delete([rng.choice(np.nonzero(pb2.member(i).alive)[0], 5,
+                                 replace=False) for i in range(3)])
+    assert all(st.compactions == 0 for st in pb3.refresh_stats)
+    # real debris still triggers: lose >25% of member 2's peak vs its
+    # 512-slot capacity -> (300 - 160)/512 > 0.25
+    big_kill = rng.choice(np.nonzero(pb3.member(2).alive)[0], 140,
+                          replace=False)
+    pb4 = pb3.update(delete=[None, None, big_kill])
+    assert pb4.refresh_stats[2].compactions == 1
+
+
+def test_insert_skipped_members_get_none_indices():
+    pb, _ = _stream_batch()
+    arrivals0 = [feature_mixture(4, D, n_clusters=8, seed=600 + i)
+                 for i in range(B)]
+    pb1, ids1 = pb.insert(arrivals0)
+    assert all(i is not None for i in ids1)
+    pb2, ids2 = pb1.insert([arrivals0[0]] + [None] * (B - 1))
+    assert ids2[0] is not None and ids2[0].shape == (4,)
+    assert all(i is None for i in ids2[1:])   # not step-1 leftovers
+
+
+def test_insert_returns_per_member_indices():
+    pb, _ = _stream_batch()
+    arrivals = [feature_mixture(5, D, n_clusters=8, seed=400 + i)
+                for i in range(B)]
+    pb2, ids = pb.insert(arrivals)
+    assert len(ids) == B
+    for i in range(B):
+        assert ids[i].shape == (5,)
+        assert np.asarray(pb2.member(i).alive)[ids[i]].all()
+
+
+def test_batch_compact_is_fresh_build_per_member():
+    """Each member goes through the bit-exact compact tier; the batch then
+    re-pads to the shared capacity (hole spread = a rebucket), so the
+    re-stacked members match a fresh build on the survivors to float
+    associativity, with compaction telemetry recorded."""
+    pb, _ = _stream_batch()
+    rng = np.random.default_rng(11)
+    kills = [rng.choice(N, 16, replace=False) for _ in range(B)]
+    pb2 = pb.delete(kills).compact()
+    assert all(st.compactions == 1 for st in pb2.refresh_stats)
+    assert (pb2.n_alive == N - 16).all()
+    for i in range(B):
+        m = pb2.member(i)
+        survivors = m.host.x[np.asarray(m.alive)]
+        fresh = api.build_plan(survivors, config=m.config)
+        x = jnp.asarray(rng.standard_normal(pb2.capacity), jnp.float32)
+        live = np.asarray(m.alive)
+        got = np.asarray(m.matvec(x))[live]
+        want = np.asarray(fresh.matvec(x[live]))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# -- construction validation ------------------------------------------------
+
+
+def test_from_plans_rejects_mixed_configs():
+    xs = _points(b=2, seed0=80)
+    p1 = api.build_plan(xs[0], k=K, bs=16, sb=4, backend="bsr")
+    p2 = api.build_plan(xs[1], k=K + 2, bs=16, sb=4, backend="bsr")
+    with pytest.raises(ValueError, match="share one PlanConfig"):
+        api.PlanBatch.from_plans([p1, p2])
+
+
+def test_build_plan_batch_rejects_static_values():
+    with pytest.raises(ValueError, match="values"):
+        api.build_plan_batch(_points(b=2), k=K, values=np.ones(3))
+
+
+def test_profile_only_batch_has_no_matvec():
+    pb = api.build_plan_batch(_points(b=2, seed0=90), k=K, bs=16, sb=4,
+                              with_bsr=False)
+    assert pb.spec.max_nbr is None
+    with pytest.raises(ValueError, match="profile-only"):
+        pb.matvec(jnp.zeros((2, pb.capacity)))
+
+
+# -- checkpoint -------------------------------------------------------------
+
+
+def test_batch_checkpoint_round_trip(tmp_path, batch, charges):
+    from repro.checkpoint.ckpt import Checkpointer
+
+    xs = batch.pad_charges(charges)
+    y0 = np.asarray(batch.matvec(xs))
+    ck = Checkpointer(tmp_path)
+    ck.save_plan(3, batch, name="heads", blocking=True)
+    pb2, step = ck.restore_plan(name="heads")
+    assert step == 3 and pb2.batch == batch.batch
+    assert pb2.spec == batch.spec
+    np.testing.assert_array_equal(np.asarray(pb2.matvec(xs)), y0)
+    with pytest.raises(ValueError, match="PlanBatch"):
+        ck.restore_plan(name="heads", refresh_with=np.zeros((N, D)))
+
+
+def test_batch_checkpoint_streams_after_restore(tmp_path):
+    from repro.checkpoint.ckpt import Checkpointer
+
+    pb, _ = _stream_batch()
+    ck = Checkpointer(tmp_path)
+    ck.save_plan(1, pb, name="stream", blocking=True)
+    pb2, _ = ck.restore_plan(name="stream")
+    arrivals = [feature_mixture(4, D, n_clusters=8, seed=500 + i)
+                for i in range(B)]
+    pb3, ids = pb2.insert(arrivals)
+    assert (pb3.n_alive == N + 4).all()
+    assert all(i.shape == (4,) for i in ids)
+
+
+# -- registry satellites ----------------------------------------------------
+
+
+def test_register_backend_duplicate_raises_unless_overwrite():
+    @api.register_backend("dup_test")
+    def _one(p, x, **kw):
+        return x
+
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            @api.register_backend("dup_test")
+            def _two(p, x, **kw):
+                return 2 * x
+
+        @api.register_backend("dup_test", overwrite=True)
+        def _three(p, x, **kw):
+            return 3 * x
+
+        assert registry._BACKENDS["dup_test"] is _three
+        # re-registering the same callable is a no-op (module re-import)
+        api.register_backend("dup_test", _three)
+    finally:
+        registry._BACKENDS.pop("dup_test", None)
+
+
+def test_get_backend_did_you_mean():
+    with pytest.raises(ValueError, match="did you mean 'bsr'"):
+        api.get_backend("bssr")
+    with pytest.raises(ValueError, match="registered:"):
+        api.get_backend("no_such_thing_at_all")
+
+
+# -- clusterkv wiring -------------------------------------------------------
+
+
+def test_kv_plan_batch_orders_attention():
+    from repro.configs.base import ClusterKVConfig
+    from repro.core import clusterkv as ckv
+    from repro.models import attention as attn
+
+    key = jax.random.PRNGKey(0)
+    b, hq, hkv, s, dh = 1, 4, 2, 128, 16
+    k = jax.random.normal(key, (b, hkv, s, dh))
+    q = jnp.repeat(k, hq // hkv, axis=1)
+    v = jax.random.normal(jax.random.fold_in(key, 1), (b, hkv, s, dh))
+    pb = ckv.kv_plan_batch(k, d=2)
+    assert pb.batch == b * hkv and pb.capacity == s
+    perm = ckv.plan_batch_perm(pb, (b, hkv))
+    assert perm.shape == (b, hkv, s)
+    # each lane is a true permutation of the keys
+    assert (np.sort(np.asarray(perm[0, 0])) == np.arange(s)).all()
+    pos = jnp.arange(s, dtype=jnp.int32)
+    cfg = ClusterKVConfig(enabled=True, block_q=32, block_k=32,
+                          blocks_per_query=s // 32, embed_dim=2)
+    out = attn.clusterkv_attention(q, k, v, pos, pos, cfg, plan_batch=pb)
+    # full selection through the plan-batch ordering is exact
+    g = hq // hkv
+    kk, vv = jnp.repeat(k, g, 1), jnp.repeat(v, g, 1)
+    lg = jnp.einsum("bhsd,bhtd->bhst", q, kk) / np.sqrt(dh)
+    lg = jnp.where(jnp.tril(jnp.ones((s, s), bool)), lg, -1e30)
+    ref = jnp.einsum("bhst,bhtd->bhsd", jax.nn.softmax(lg, -1), vv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_plan_batch_perm_wrong_lead():
+    from repro.core import clusterkv as ckv
+
+    pb = api.build_plan_batch(_points(b=2, seed0=95), k=K, bs=16, sb=4,
+                              with_bsr=False)
+    with pytest.raises(ValueError, match="members"):
+        ckv.plan_batch_perm(pb, (3,))
