@@ -184,6 +184,52 @@ def _plan_from_payload(m: dict, arrays: dict):
         jnp.asarray(arrays["inv"], jnp.int32), host)
 
 
+def _batch_payload(pb, step: int):
+    """Host-gather one ``PlanBatch`` into ``(member_payloads, manifest)``
+    — the on-disk batch format (also each layer of a session store)."""
+    import dataclasses
+
+    payloads = [_plan_payload(pb.member(i), step) for i in range(pb.batch)]
+    manifest = {
+        "format": 1, "step": step, "batch": pb.batch,
+        "capacity": pb.capacity,
+        "config": dataclasses.asdict(pb.spec.config),
+        "tuned": {str(k): v for k, v in pb.tuned.items()},
+    }
+    return payloads, manifest
+
+
+def _write_batch_dir(d: Path, payloads, manifest: dict) -> None:
+    for i, (arrays, m) in enumerate(payloads):
+        sub = d / f"member_{i}"
+        sub.mkdir()
+        np.savez(sub / "arrays.npz", **arrays)
+        (sub / "manifest.json").write_text(json.dumps(m))
+    (d / "manifest.json").write_text(json.dumps(manifest))
+
+
+def _read_batch_dir(d: Path, m: dict):
+    """Restore a ``PlanBatch`` from a dir written by ``_write_batch_dir``
+    (members re-stacked, so the shared spec is re-derived)."""
+    from repro import api
+
+    members = []
+    for i in range(m["batch"]):
+        sub = d / f"member_{i}"
+        try:
+            mm = json.loads((sub / "manifest.json").read_text())
+            arrays = dict(np.load(sub / "arrays.npz"))
+        except Exception as e:
+            raise ValueError(
+                f"plan batch member {i} is corrupt or missing under "
+                f"{sub}: {e}") from e
+        _validate_plan_arrays(mm, arrays, sub)
+        members.append(_plan_from_payload(mm, arrays))
+    pb = api.PlanBatch.from_plans(members, capacity=m["capacity"])
+    pb.tuned = {int(k): v for k, v in (m.get("tuned") or {}).items()}
+    return pb
+
+
 class Checkpointer:
     def __init__(self, directory: str | Path, keep: int = 3):
         self.dir = Path(directory)
@@ -315,29 +361,53 @@ class Checkpointer:
         lands in ``member_<i>/`` in the exact single-plan format, so
         ``restore_plan`` re-stacks them (and the stacking re-derives the
         shared spec, elastic to code that changed padding policy).
-        """
-        import dataclasses
 
+        Service-aware: a ``repro.serve.SessionStore`` is accepted directly
+        — each session lands as ``session_<rid>/`` holding its per-layer
+        plan batches (``layer_<l>/`` in the exact batch format), its
+        ``aux.npz`` device/request payload, and a session manifest; the
+        top manifest records rids + service counters. ``restore_plan``
+        rebuilds the store so ``ClusterKVEngine.resume`` continues
+        bit-exactly (drain -> snapshot -> resume).
+        """
         self.wait()
-        if hasattr(plan, "hosts") and hasattr(plan, "member"):
-            # a PlanBatch: member payloads + one batch manifest
-            pb = plan
-            payloads = [_plan_payload(pb.member(i), step)
-                        for i in range(pb.batch)]
+        if hasattr(plan, "sessions") and hasattr(plan, "counters"):
+            # a serve.SessionStore: sessions + their per-layer plan batches
+            store = plan
+            entries = []
+            for rid in sorted(store.sessions):
+                sess = store.sessions[rid]
+                layers = [_batch_payload(pb, step) for pb in sess.plans]
+                aux = {k: np.asarray(v) for k, v in sess.aux.items()}
+                sman = {"rid": sess.rid, "slot": sess.slot,
+                        "blen": sess.blen, "n_layers": len(sess.plans)}
+                entries.append((rid, layers, aux, sman))
             manifest = {
-                "format": 1, "step": step, "batch": pb.batch,
-                "capacity": pb.capacity,
-                "config": dataclasses.asdict(pb.spec.config),
-                "tuned": {str(k): v for k, v in pb.tuned.items()},
+                "format": 1, "step": step, "session_store": True,
+                "rids": sorted(store.sessions),
+                "counters": dict(store.counters),
             }
 
-            def fill_batch(tmp: Path) -> None:
-                for i, (arrays, m) in enumerate(payloads):
-                    sub = tmp / f"member_{i}"
-                    sub.mkdir()
-                    np.savez(sub / "arrays.npz", **arrays)
-                    (sub / "manifest.json").write_text(json.dumps(m))
+            def fill_store(tmp: Path) -> None:
+                for rid, layers, aux, sman in entries:
+                    sd = tmp / f"session_{rid}"
+                    sd.mkdir()
+                    for l, (payloads, bman) in enumerate(layers):
+                        ld = sd / f"layer_{l}"
+                        ld.mkdir()
+                        _write_batch_dir(ld, payloads, bman)
+                    np.savez(sd / "aux.npz", **aux)
+                    (sd / "manifest.json").write_text(json.dumps(sman))
                 (tmp / "manifest.json").write_text(json.dumps(manifest))
+
+            self._write_plan_dir(step, name, fill_store, blocking)
+            return
+        if hasattr(plan, "hosts") and hasattr(plan, "member"):
+            # a PlanBatch: member payloads + one batch manifest
+            payloads, manifest = _batch_payload(plan, step)
+
+            def fill_batch(tmp: Path) -> None:
+                _write_batch_dir(tmp, payloads, manifest)
 
             self._write_plan_dir(step, name, fill_batch, blocking)
             return
@@ -433,6 +503,36 @@ class Checkpointer:
                 f"corrupt plan manifest {d / 'manifest.json'}: {e} "
                 "(checkpoint writes are atomic — this directory was "
                 "modified outside the Checkpointer)") from e
+        if m.get("session_store"):
+            # a persisted serve.SessionStore: sessions + per-layer batches
+            if refresh_with is not None or mesh is not None:
+                raise ValueError(
+                    f"plan {name!r} at step {step} is a SessionStore; "
+                    "refresh_with/mesh apply to single plans")
+            from repro.serve.session import Session, SessionStore
+
+            store = SessionStore()
+            for rid in m["rids"]:
+                sd = d / f"session_{rid}"
+                try:
+                    sman = json.loads((sd / "manifest.json").read_text())
+                    aux = dict(np.load(sd / "aux.npz"))
+                except Exception as e:
+                    raise ValueError(
+                        f"session store {name!r} at step {step}: session "
+                        f"{rid} is corrupt or missing under {sd}: {e}"
+                    ) from e
+                plans = []
+                for l in range(sman["n_layers"]):
+                    ld = sd / f"layer_{l}"
+                    bm = json.loads((ld / "manifest.json").read_text())
+                    plans.append(_read_batch_dir(ld, bm))
+                # register, not admit: restoring is not an admission
+                store.register(Session(rid=sman["rid"], slot=sman["slot"],
+                                       blen=sman["blen"], plans=plans,
+                                       aux=aux))
+            store.counters = dict(m["counters"])
+            return store, step
         if m.get("batch"):
             # a persisted PlanBatch: restore members, re-stack
             if refresh_with is not None or mesh is not None:
@@ -441,21 +541,7 @@ class Checkpointer:
                     "refresh_with/mesh apply to single plans — restore "
                     "the batch plain and refresh/shard members "
                     "individually if needed")
-            members = []
-            for i in range(m["batch"]):
-                sub = d / f"member_{i}"
-                try:
-                    mm = json.loads((sub / "manifest.json").read_text())
-                    arrays = dict(np.load(sub / "arrays.npz"))
-                except Exception as e:
-                    raise ValueError(
-                        f"plan batch {name!r} at step {step}: member {i} "
-                        f"is corrupt or missing under {sub}: {e}") from e
-                _validate_plan_arrays(mm, arrays, sub)
-                members.append(_plan_from_payload(mm, arrays))
-            pb = api.PlanBatch.from_plans(members, capacity=m["capacity"])
-            pb.tuned = {int(k): v for k, v in (m.get("tuned") or {}).items()}
-            return pb, step
+            return _read_batch_dir(d, m), step
         if not (d / "arrays.npz").exists():
             raise FileNotFoundError(
                 f"plan {name!r} at step {step} has a manifest but no "

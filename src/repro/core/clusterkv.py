@@ -49,7 +49,7 @@ NEG_INF = -1e30
 
 def kv_plan_batch(k: jax.Array, *, d: int = 3, bits: int = 10,
                   leaf_size: int = 64, knn: int = 8,
-                  with_bsr: bool = False):
+                  with_bsr: bool = False, capacity: int = None):
     """One ``InteractionPlan`` per (batch, kv-head) over the keys, stacked
     as an ``api.PlanBatch`` — the per-head ordering `select_blocks`
     consumes (see :func:`plan_batch_perm`).
@@ -58,6 +58,12 @@ def kv_plan_batch(k: jax.Array, *, d: int = 3, bits: int = 10,
     ``with_bsr=True`` additionally dresses each head's kNN pattern into
     storage, so the same batch serves batched near-neighbor matvecs over
     the key sets; the default builds ordering-only members (cheap).
+
+    ``capacity`` over-allocates every member to the given (pow2-unified)
+    slot count with Morton-spread holes, so generated tokens stream in
+    through ``api.update_plan``'s insert tier instead of re-sorting — the
+    decode service builds every session at ``capacity=max_seq`` and all
+    sessions share one ``PlanSpec`` (and one compiled decode kernel).
     """
     from repro import api
 
@@ -66,7 +72,8 @@ def kv_plan_batch(k: jax.Array, *, d: int = 3, bits: int = 10,
     flat = kn.reshape((-1, s, dh))
     return api.build_plan_batch(flat, k=min(knn, s - 1), d=min(d, dh),
                                 bits=bits, leaf_size=leaf_size,
-                                with_bsr=with_bsr, backend="bsr")
+                                with_bsr=with_bsr, backend="bsr",
+                                capacity=capacity)
 
 
 def plan_batch_perm(pb, lead: Tuple[int, ...]) -> jax.Array:

@@ -3,10 +3,20 @@ steps — optionally with the paper's cluster-sparse KV selection.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
       --prompt-len 256 --gen 32 --batch 4 --backend clusterkv
+
+``--service`` routes through the ClusterKV decode service instead of the
+one-shot prefill+decode loop: a continuous-batching engine with plan-cached
+sessions (``--mode plan``) or the per-call Morton-sort baseline
+(``--mode percall``), emitting the service's JSON telemetry:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+      --backend clusterkv --service --slots 4 --batch 8 --gen 32 \
+      --report report.json
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -18,6 +28,31 @@ from repro.models import model_api
 from repro.train import trainer
 
 
+def run_service(cfg, params, args) -> dict:
+    """Decode ``args.batch`` synthetic prompts through the ClusterKV
+    decode service; returns (and optionally writes) the service report."""
+    from repro.serve import ClusterKVEngine
+    from repro.train.serve_loop import Request
+
+    engine = ClusterKVEngine(cfg, params, slots=args.slots,
+                             max_seq=args.max_seq,
+                             prefill_bucket=args.prefill_bucket,
+                             mode=args.mode)
+    rng = np.random.default_rng(args.seed)
+    for i in range(args.batch):
+        plen = int(rng.integers(args.prompt_len // 2, args.prompt_len + 1))
+        engine.submit(Request(
+            rid=i, tokens=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+            max_new=args.gen))
+    engine.run()
+    report = engine.report()
+    print(json.dumps(report, indent=2))
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=2)
+    return report
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -27,12 +62,24 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--backend", default="flash")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--service", action="store_true",
+                    help="route through the ClusterKV decode service")
+    ap.add_argument("--mode", default="plan", choices=("plan", "percall"))
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=512)
+    ap.add_argument("--prefill-bucket", type=int, default=64)
+    ap.add_argument("--report", default=None,
+                    help="write the service JSON report here")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     mod = model_api.module_for(cfg)
     key = jax.random.PRNGKey(args.seed)
     params, _ = model_api.init(cfg, key)
+
+    if args.service:
+        run_service(cfg, params, args)
+        return
 
     total = args.prompt_len + args.gen
     batch = model_api.make_small_batch(cfg, key, args.batch, args.prompt_len,
@@ -43,19 +90,9 @@ def main():
 
     t0 = time.time()
     cache, logits = prefill_fn(params, batch)
-    # pad cache seq to total length
-    def grow(x):
-        if x.ndim >= 4 and x.shape[-2] == args.prompt_len and cfg.family != "ssm":
-            pads = [(0, 0)] * x.ndim
-            pads[-2] = (0, args.gen)
-            return jnp.pad(x, pads)
-        return x
-    if cfg.family in ("dense", "vlm", "moe"):
-        cache = {k: (grow(v) if k in ("k", "v", "c", "kr") else v)
-                 for k, v in cache.items()}
-    elif cfg.family in ("hybrid", "encdec"):
-        cache = {k: (grow(v) if k in ("k", "v") else v)
-                 for k, v in cache.items()}
+    # pad cache seq to total length along each entry's discovered seq axis
+    # (the config's own cache spec, not shape guessing)
+    cache = model_api.grow_cache(cfg, cache, total)
     t1 = time.time()
 
     toks = jnp.argmax(logits, -1)[:, None]

@@ -162,11 +162,16 @@ def clusterkv_attention(q, k, v, qpos, kpos, cfg: ClusterKVConfig, *,
     order (the local-window boost supplies recency; sorting queries would
     scramble the causal frontier).
 
-    ``plan_batch`` (an ``api.PlanBatch`` from ``ckv.kv_plan_batch(k)``)
+    ``plan_batch`` (an ``api.PlanBatch`` from ``ckv.kv_plan_batch(k)``,
+    or the stacked (B, Hkv, Skv) ordering array extracted from one)
     supplies the per-head key ordering as a persistent plan asset instead
     of the private per-call Morton sort — the serving path builds it once
     at prefill, refreshes/checkpoints it with the cache, and every
-    subsequent call skips the embed+sort work.
+    subsequent call skips the embed+sort work. The array form is traced
+    data, so the decode service passes each session's orderings into ONE
+    compiled prefill shared by every spec-identical session. Key entries
+    with ``kpos == INT32_MAX`` are treated as holes (capacity slots not
+    yet streamed into) and never attended.
     """
     b, hq, s, dh = q.shape
     hkv = k.shape[1]
@@ -179,14 +184,20 @@ def clusterkv_attention(q, k, v, qpos, kpos, cfg: ClusterKVConfig, *,
         kposb = jnp.broadcast_to(kpos, (b, hkv, kpos.shape[0]))
     else:
         kposb = kpos
-    if plan_batch is not None:
+    if plan_batch is None:
+        perm = ckv.cluster_perm(k, d=cfg.embed_dim)
+    elif hasattr(plan_batch, "data"):
         perm = ckv.plan_batch_perm(plan_batch, (b, hkv))
     else:
-        perm = ckv.cluster_perm(k, d=cfg.embed_dim)
+        perm = jnp.asarray(plan_batch).astype(jnp.int32)
     k_s, v_s, pos_s = ckv.permute_kv(k, v, kposb, perm)
     cent = ckv.block_centroids(k_s, bk)
-    kpmin = pos_s.reshape(b, hkv, nkb, bk).min(-1)
-    kpmax = pos_s.reshape(b, hkv, nkb, bk).max(-1)
+    posb = pos_s.reshape(b, hkv, nkb, bk)
+    kpmin = posb.min(-1)
+    # hole slots carry the INT32_MAX sentinel: they must not inflate the
+    # tile's max position (that would make every holey tile look "recent"
+    # and soak up the local-window boost)
+    kpmax = jnp.where(posb == jnp.iinfo(jnp.int32).max, -1, posb).max(-1)
 
     if not causal:
         # pi_t: query cluster sort per kv-head group (positions irrelevant)
@@ -244,6 +255,94 @@ def clusterkv_decode(q, k, v, kpos, qpos, cfg: ClusterKVConfig):
     idx = ckv.decode_select(q.astype(jnp.float32), cent.astype(jnp.float32),
                             n_sel)
     return ckv.decode_attend(q, k, v, kpos, qpos, idx, bk)
+
+
+def clusterkv_plan_decode(q, ks, vs, ps, cent, qpos, cfg: ClusterKVConfig, *,
+                          k_self=None, v_self=None):
+    """Single-token decode over PLAN-ordered caches (the decode service).
+
+    q (B,Hq,dh); ks/vs (B,Hkv,S,dh) keys/values already in plan (cluster)
+    order; ps (B,Hkv,S) int32 original time position of each plan slot,
+    with ``INT32_MAX`` marking capacity holes not yet streamed into;
+    cent (B,Hkv,S/bk,dh) per-tile centroids maintained incrementally by
+    the service; qpos (B,) per-slot decode positions.
+
+    ``k_self``/``v_self`` (B,Hkv,dh) optionally carry the CURRENT token's
+    key/value as an always-visible extra column: the service lands each
+    generated token into the plan one tick later (insert-tier streaming is
+    host-side), so self-attention must not depend on the landing.
+
+    No embed/sort/full-centroid work happens here — that is the point:
+    everything order-derived is serving state, this is pure gather+attend.
+    """
+    b, hq, dh = q.shape
+    hkv, s = ks.shape[1], ks.shape[2]
+    g = hq // hkv
+    dv = vs.shape[-1]
+    bk = min(cfg.block_k, s)
+    nkb = s // bk
+    n_sel = min(cfg.decode_clusters, nkb)
+    big = jnp.iinfo(jnp.int32).max
+
+    pt = ps.reshape(b, hkv, nkb, bk)
+    qp = qpos.astype(jnp.int32)                       # (B,)
+    live = pt <= qp[:, None, None, None]              # causal AND not-a-hole
+    tile_has = live.any(-1)                           # (B,Hkv,nkb)
+    qg = q.reshape(b, hkv, g, dh).mean(axis=2).astype(jnp.float32)
+    scores = jnp.einsum("bhd,bhkd->bhk", qg, cent.astype(jnp.float32))
+    scores = jnp.where(tile_has, scores, NEG_INF)
+    recent = jnp.where(live, pt, -1).max(-1)
+    near = recent >= (qp[:, None, None] - cfg.local_window_blocks * bk)
+    scores = jnp.where(near & tile_has, scores + 1e4, scores)
+    _, idx = jax.lax.top_k(scores, n_sel)             # (B,Hkv,n_sel)
+
+    kb = ks.reshape(b, hkv, nkb, bk, dh)
+    vb = vs.reshape(b, hkv, nkb, bk, dv)
+    if k_self is None:
+        k_self = jnp.zeros((b, hkv, dh), ks.dtype)
+        v_self = jnp.zeros((b, hkv, dv), vs.dtype)
+        self_pos = jnp.full((b, hkv), big, jnp.int32)   # masked out
+    else:
+        self_pos = jnp.broadcast_to(qp[:, None], (b, hkv))
+
+    def per_h(qh, kt, vt, pt_, it, ksf, vsf, spos, qp_):
+        # qh (g,dh)  kt (nkb,bk,dh)  vt (nkb,bk,dv)  pt_ (nkb,bk)  it (c,)
+        ksel = jnp.concatenate([kt[it].reshape(-1, dh), ksf[None, :]], 0)
+        vsel = jnp.concatenate([vt[it].reshape(-1, dv), vsf[None, :]], 0)
+        psel = jnp.concatenate([pt_[it].reshape(-1), spos[None]], 0)
+        logit = (qh.astype(jnp.float32) @ ksel.astype(jnp.float32).T
+                 / jnp.sqrt(jnp.asarray(dh, jnp.float32)))
+        logit = jnp.where(psel[None, :] <= qp_, logit, NEG_INF)
+        w = jax.nn.softmax(logit, axis=-1)
+        return (w @ vsel.astype(jnp.float32)).astype(q.dtype)
+
+    out = jax.vmap(jax.vmap(per_h, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, None)),
+                   in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0))(
+        q.reshape(b, hkv, g, dh), kb, vb, pt, idx,
+        k_self, v_self, self_pos, qp)
+    return out.reshape(b, hq, dv)
+
+
+def clusterkv_percall_decode(q, k, v, kpos, qpos, cfg: ClusterKVConfig):
+    """Per-call clusterkv decode for per-slot position vectors (qpos (B,)).
+
+    Re-derives the Morton ordering and ALL tile centroids of the whole
+    cache on every generated token — the baseline cost the plan-cached
+    service amortizes away. Kept as the continuous-batching analogue of
+    :func:`clusterkv_decode` (whose scalar-qpos contract serves the
+    single-sequence cache path)."""
+    b, hq, dh = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    bk = min(cfg.block_k, s)
+    if kpos.ndim == 1:
+        kpos = jnp.broadcast_to(kpos, (b, hkv, s))
+    if s % bk:
+        return decode_attention(q, k, v, kpos[:, 0],
+                                qpos[:, None, None, None])
+    perm = ckv.cluster_perm(k, d=cfg.embed_dim)       # per call — the cost
+    ks, vs, ps = ckv.permute_kv(k, v, kpos, perm)
+    cent = ckv.block_centroids(ks.astype(jnp.float32), bk)
+    return clusterkv_plan_decode(q, ks, vs, ps, cent, qpos, cfg)
 
 
 def clusterkv_decode_sharded(q, k, v, kpos, qpos, cfg: ClusterKVConfig,

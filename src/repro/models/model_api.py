@@ -103,6 +103,47 @@ def input_specs(cfg: ModelConfig, shape_name: str
     return specs, parts
 
 
+def cache_seq_axes(cfg: ModelConfig, batch: int = 1, seq: int = 8
+                   ) -> Dict[str, int]:
+    """Which axis of each cache entry is the sequence axis, read off the
+    family's own cache spec: ``init_cache`` is eval-shaped at two lengths
+    and the axis that differs per entry is the seq axis. Entries that do
+    not scale with seq (scalar ``pos``, ssm/conv states) are absent."""
+    mod = module_for(cfg)
+    small = jax.eval_shape(lambda: mod.init_cache(cfg, batch, seq))
+    large = jax.eval_shape(lambda: mod.init_cache(cfg, batch, 2 * seq))
+    axes: Dict[str, int] = {}
+    for key, sa in small.items():
+        sb = large[key]
+        if not hasattr(sa, "shape") or sa.shape == sb.shape:
+            continue
+        diff = [i for i, (x, y) in enumerate(zip(sa.shape, sb.shape))
+                if x != y]
+        if len(diff) != 1:
+            raise ValueError(
+                f"cache entry {key!r} scales with seq on axes {diff}")
+        axes[key] = diff[0]
+    return axes
+
+
+def grow_cache(cfg: ModelConfig, cache: Dict[str, Any], new_seq: int,
+               axes: Dict[str, int] = None) -> Dict[str, Any]:
+    """Zero-pad a (prefilled) cache out to ``new_seq`` along each entry's
+    discovered sequence axis. Replaces the ad-hoc ``shape[-2] == prompt_len``
+    guessing launchers used to do, which silently skipped any entry whose
+    layout didn't match."""
+    axes = cache_seq_axes(cfg) if axes is None else axes
+    out = dict(cache)
+    for key, ax in axes.items():
+        x = cache[key]
+        if x.shape[ax] >= new_seq:
+            continue
+        pads = [(0, 0)] * x.ndim
+        pads[ax] = (0, new_seq - x.shape[ax])
+        out[key] = jnp.pad(x, pads)
+    return out
+
+
 def cache_shapes(cfg: ModelConfig, shape_name: str):
     """ShapeDtypeStructs + logical specs of the decode cache for a cell."""
     seq, batch, kind = SHAPES[shape_name]

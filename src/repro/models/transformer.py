@@ -316,8 +316,13 @@ def decode_step(p, cfg: ModelConfig, cache, tokens, shd: ShardCtx,
             vc = jax.lax.dynamic_update_slice(
                 vc, v.astype(vc.dtype), (0, 0, qpos, 0))
         q1 = q[:, :, 0]                        # (B,Hq,dh)
-        if backend == "clusterkv" and cfg.clusterkv.enabled and not per_slot:
-            if sharded_long and shd.mesh is not None:
+        if backend == "clusterkv" and cfg.clusterkv.enabled:
+            if per_slot:
+                # continuous batching: per-call ordering over every slot's
+                # cache region (the baseline the plan service amortizes)
+                o = attn.clusterkv_percall_decode(q1, kc, vc, kpos, qpos,
+                                                  cfg.clusterkv)
+            elif sharded_long and shd.mesh is not None:
                 o = attn.clusterkv_decode_sharded(
                     q1, kc, vc, kpos, qpos, cfg.clusterkv, shd.mesh)
             else:
@@ -341,3 +346,135 @@ def decode_step(p, cfg: ModelConfig, cache, tokens, shd: ShardCtx,
               ).astype(jnp.float32)
     new_cache = {"k": ks, "v": vs, "pos": cache["pos"] + 1}
     return logits, new_cache
+
+
+def plan_prefill(p, cfg: ModelConfig, batch, perms, shd: ShardCtx
+                 ) -> jax.Array:
+    """Prefill THROUGH per-layer key plans: ``perms`` (L, B, Hkv, S) are
+    the sessions' live cluster orderings, driving the ``plan_batch`` path
+    of :func:`~repro.models.attention.clusterkv_attention` — so the first
+    generated token already comes from the clusterkv kernel the service
+    decodes with. Returns last-position logits only (the service keeps its
+    cache plan-ordered; the time-ordered cache of :func:`prefill` never
+    exists here)."""
+    if cfg.mla is not None or cfg.embedding_inputs:
+        raise NotImplementedError(
+            "plan prefill serves token decoder-only models")
+    h = embed_tokens(p, cfg, batch, shd)
+    b, s, _ = h.shape
+    pos = jnp.arange(s, dtype=jnp.int32)
+
+    def body(x, xs):
+        lp, perm = xs
+        hn = pm.apply_rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = _project_qkv(lp["attn"], hn, cfg, pos, shd)
+        o = attn.clusterkv_attention(q, k, v, pos, pos, cfg.clusterkv,
+                                     causal=True, plan_batch=perm)
+        a = pm.apply_linear(lp["attn"]["wo"],
+                            o.transpose(0, 2, 1, 3).reshape(b, s, -1))
+        x = x + a
+        hn = pm.apply_rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            f, _ = moe_mod.moe_ffn(lp["ffn"], hn, cfg, shd)
+        else:
+            f = _apply_mlp(lp["ffn"], hn)
+        return x + f, None
+
+    h, _ = jax.lax.scan(body, h, (p["layers"], perms))
+    h = pm.apply_rmsnorm(p["ln_f"], h, cfg.norm_eps)
+    return (h[:, -1] @ lm_head_weight(p, cfg).astype(cfg.dtype)
+            ).astype(jnp.float32)
+
+
+def plan_decode_step(p, cfg: ModelConfig, pstate, pend, tokens, slot_pos,
+                     shd: ShardCtx) -> Tuple[jax.Array, Dict, jax.Array,
+                                             jax.Array]:
+    """One decode tick over PLAN-ORDERED caches (the ClusterKV service).
+
+    Instead of the time-ordered cache of :func:`decode_step`, the serving
+    state keeps each layer's keys/values in their session plan's cluster
+    order plus the bookkeeping the sparse decode needs:
+
+      pstate = {"ks","vs": (L,B,Hkv,S,dh) plan-ordered caches,
+                "ps": (L,B,Hkv,S) int32 time position per plan slot
+                      (INT32_MAX marks capacity holes),
+                "cent": (L,B,Hkv,S/bk,dh) f32 per-tile centroids}
+      pend   = {"k","v": (L,B,Hkv,dh) LAST tick's key/value,
+                "slot": (L,B,Hkv) int32 plan slot the host-side inserter
+                        claimed for it (sentinel S = nothing pending),
+                "pos": (B,) int32 its time position}
+
+    The host streams each generated token into the session plans through
+    ``api.update_plan``'s insert tier *between* ticks; this step only has
+    to land the pending k/v rows at their claimed slots (a scatter),
+    refresh the one centroid tile each landing touched, and attend with
+    the current token's own k/v carried as an extra column (so
+    self-attention never waits on the landing). tokens (B,1);
+    slot_pos (B,). Returns (logits, new_pstate, k_new, v_new) where
+    k_new/v_new (L,B,Hkv,dh) are THIS tick's rows for the host to claim
+    slots for.
+    """
+    if cfg.mla is not None or cfg.embedding_inputs:
+        raise NotImplementedError(
+            "plan decode serves token decoder-only models")
+    ckv_cfg = cfg.clusterkv
+    h = p["embed"]["table"][tokens].astype(cfg.dtype)
+    b = h.shape[0]
+    hkv = cfg.n_kv_heads
+    s_cap = pstate["ks"].shape[3]
+    bk = min(ckv_cfg.block_k, s_cap)
+    qpos = slot_pos.astype(jnp.int32)
+    rope_pos = qpos[:, None, None]
+    nl = pstate["ks"].shape[0]
+    li = jnp.arange(nl)[:, None, None]
+    bi = jnp.arange(b)[None, :, None]
+    hi = jnp.arange(hkv)[None, None, :]
+    ppos = jnp.broadcast_to(pend["pos"].astype(jnp.int32)[None, :, None],
+                            (nl, b, hkv))
+
+    # land last tick's pending token at its claimed plan slot, one fused
+    # scatter across all layers BEFORE the layer scan so the big caches
+    # never ride through it as stacked outputs; the sentinel slot == S is
+    # out of bounds -> dropped (nothing pending)
+    pslot = pend["slot"]
+    ks = pstate["ks"].at[li, bi, hi, pslot].set(
+        pend["k"].astype(pstate["ks"].dtype), mode="drop")
+    vs = pstate["vs"].at[li, bi, hi, pslot].set(
+        pend["v"].astype(pstate["vs"].dtype), mode="drop")
+    ps = pstate["ps"].at[li, bi, hi, pslot].set(ppos, mode="drop")
+    # refresh the ONE centroid tile each landing touched (recomputing an
+    # untouched tile's mean is a no-op, so the clipped sentinel is safe);
+    # gather the tile FIRST, then widen — never astype the whole cache
+    tile = jnp.clip(pslot, 0, s_cap - 1) // bk                # (L,B,Hkv)
+    seg_idx = tile[..., None] * bk + jnp.arange(bk)           # (L,B,Hkv,bk)
+    seg = jnp.take_along_axis(ks, seg_idx[..., None], axis=3)
+    cent = pstate["cent"].at[li, bi, hi, tile].set(
+        seg.astype(jnp.float32).mean(3))
+
+    # unrolled layer loop: a lax.scan would materialize per-layer slices
+    # of the (L,B,Hkv,S,dh) caches as carried/stacked buffers every tick;
+    # unrolled, XLA fuses the static layer slice into the tile gathers and
+    # the landing scatter can alias the donated cache buffers in place
+    nks, nvs = [], []
+    for l in range(nl):
+        lp = jax.tree_util.tree_map(lambda a: a[l], p["layers"])
+        hn = pm.apply_rmsnorm(lp["ln1"], h, cfg.norm_eps)
+        q, k, v = _project_qkv(lp["attn"], hn, cfg, rope_pos, shd)
+        q1, k1, v1 = q[:, :, 0], k[:, :, 0], v[:, :, 0]
+        o = attn.clusterkv_plan_decode(q1, ks[l], vs[l], ps[l], cent[l],
+                                       qpos, ckv_cfg, k_self=k1, v_self=v1)
+        a = pm.apply_linear(lp["attn"]["wo"], o.reshape(b, 1, -1))
+        h = h + a
+        hn = pm.apply_rmsnorm(lp["ln2"], h, cfg.norm_eps)
+        if cfg.moe is not None:
+            f, _ = moe_mod.moe_ffn(lp["ffn"], hn, cfg, shd)
+        else:
+            f = _apply_mlp(lp["ffn"], hn)
+        h = h + f
+        nks.append(k1)
+        nvs.append(v1)
+    nk, nv = jnp.stack(nks), jnp.stack(nvs)
+    h = pm.apply_rmsnorm(p["ln_f"], h, cfg.norm_eps)
+    logits = (h[:, 0] @ lm_head_weight(p, cfg).astype(cfg.dtype)
+              ).astype(jnp.float32)
+    return logits, {"ks": ks, "vs": vs, "ps": ps, "cent": cent}, nk, nv

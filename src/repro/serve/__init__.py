@@ -1,0 +1,11 @@
+"""ClusterKV decode service: plans as first-class serving state.
+
+  session    Session / SessionStore — per-session key plans keyed by spec
+  streaming  LockstepInserter — batched insert-tier streaming of generated
+             tokens into every (layer, head) plan without re-sorting
+  engine     ClusterKVEngine — continuous batching over plan-ordered caches
+"""
+from repro.serve.session import Session, SessionStore
+from repro.serve.engine import ClusterKVEngine
+
+__all__ = ["Session", "SessionStore", "ClusterKVEngine"]

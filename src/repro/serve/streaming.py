@@ -1,0 +1,291 @@
+"""Host-side insert streaming for the decode service.
+
+Every generated token must enter its session's per-head key plans (the
+PR 4 insert tier) WITHOUT re-running the Morton sort — and without paying
+one ``api.update_plan`` round trip per (layer, head) per tick, which would
+cost dozens of tiny device dispatches per generated token. The inserter
+keeps device mirrors of the per-member embedding frames and point sets, so
+a whole tick of insertions costs:
+
+  one jitted batched call     embed + live-candidate kNN for every
+                              (layer, slot, head) member at once
+  a few numpy ops per member  the Morton-leaf slot claim — the exact
+                              ``update_plan`` placement arithmetic
+  one jitted scatter          fold the landed rows into the mirrors
+
+Host plan state (``alive``/``codes``/coordinates/refresh telemetry) is
+mutated in place on the member ``_PlanHost`` objects. That is sound
+because the append tier never reorders: the PlanBatch's stacked device
+``data.pi/inv`` stay valid, and only ``data.alive`` goes stale (decode
+liveness is carried by the engine's ``ps`` state instead, and every
+trim/rebucket rebuilds the stack).
+
+kNN edges are BUFFERED per engine slot and folded into the host COO by
+:meth:`LockstepInserter.flush` — which the engine calls before anything
+that reads the COO (trim, rebucket, checkpoint).
+
+Documented deviations from ``update_plan``'s insert tier (the claim
+arithmetic itself is replicated exactly — see ``test_serve.py``):
+  - each arrival's kNN is taken against the pre-insert live set (one
+    point per member per tick, so the batch-mate interactions
+    ``update_plan`` resolves never arise, but the arrival also never
+    picks a same-tick sibling);
+  - reverse adoption (``api._adopt_arrivals``) is skipped — decode never
+    reads the COO, and the next compaction re-exactifies the pattern;
+  - edge folding is deferred to :meth:`flush`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hierarchy
+
+
+# -- batched Morton codes with per-member boxes ------------------------------
+#
+# ``hierarchy.morton_codes_box`` quantizes against ONE box; members each
+# have their own frozen box, and calling it member-by-member would be
+# L*B*H tiny jit dispatches per tick. The quantization is elementwise, so
+# a numpy replica with broadcast boxes is bitwise-identical per row.
+
+
+def _np_part1by1(v: np.ndarray) -> np.ndarray:
+    v = v & np.uint32(0xFFFF)
+    v = (v | (v << 8)) & np.uint32(0x00FF00FF)
+    v = (v | (v << 4)) & np.uint32(0x0F0F0F0F)
+    v = (v | (v << 2)) & np.uint32(0x33333333)
+    v = (v | (v << 1)) & np.uint32(0x55555555)
+    return v
+
+
+def _np_part1by2(v: np.ndarray) -> np.ndarray:
+    v = v & np.uint32(0x3FF)
+    v = (v | (v << 16)) & np.uint32(0x030000FF)
+    v = (v | (v << 8)) & np.uint32(0x0300F00F)
+    v = (v | (v << 4)) & np.uint32(0x030C30C3)
+    v = (v | (v << 2)) & np.uint32(0x09249249)
+    return v
+
+
+def morton_codes_boxes(y: np.ndarray, lo: np.ndarray, hi: np.ndarray,
+                       bits: int) -> np.ndarray:
+    """Row-wise :func:`hierarchy.morton_codes_box`: ``y``/``lo``/``hi`` all
+    (..., d), each row quantized against its own box. Returns uint64."""
+    y = np.asarray(y, np.float32)
+    d = y.shape[-1]
+    b = hierarchy.eff_bits(d, bits)
+    span = np.maximum(hi - lo, np.float32(1e-30)).astype(np.float32)
+    q = np.clip((y - lo) / span * (2 ** b - 1), 0, 2 ** b - 1
+                ).astype(np.uint32)
+    if d == 1:
+        code = q[..., 0]
+    elif d == 2:
+        code = _np_part1by1(q[..., 0]) | (_np_part1by1(q[..., 1]) << 1)
+    elif d == 3:
+        code = (_np_part1by2(q[..., 0])
+                | (_np_part1by2(q[..., 1]) << 1)
+                | (_np_part1by2(q[..., 2]) << 2))
+    else:
+        raise ValueError(f"morton codes support d<=3, got d={d}")
+    return code.astype(np.uint64)
+
+
+def claim_slot(host, code: np.uint64) -> int:
+    """Claim the free plan slot nearest a single arrival's Morton leaf —
+    ``update_plan``'s ``insertion_positions`` + ``claim_free_slots``
+    arithmetic specialized to one insert (no list churn). Returns the
+    claimed PHYSICAL row."""
+    in_order = host.codes[host.pi]
+    free_pos = np.nonzero(~host.alive[host.pi])[0]
+    if free_pos.size == 0:
+        raise ValueError("no free plan slots; session outgrew its capacity")
+    env = np.maximum.accumulate(in_order)
+    t = int(np.searchsorted(env, code))
+    j = int(np.searchsorted(free_pos, t))      # == bisect_left(free, t)
+    if j == len(free_pos):
+        j -= 1
+    elif j > 0 and t - free_pos[j - 1] <= free_pos[j] - t:
+        j -= 1
+    return int(host.pi[free_pos[j]])
+
+
+@functools.partial(jax.jit, static_argnames=("knn",))
+def _embed_knn(k_new, mean, axes, x, alive, knn: int):
+    """Batched §2.4 step-1 embed + exact kNN against the live mirror.
+
+    k_new (L,B,H,dh); mean (L,B,H,dh); axes (L,B,H,dh,d);
+    x (L,B,H,C,dh); alive (L,B,H,C). Returns (y, idx, d2)."""
+    y = jnp.einsum("lbhd,lbhde->lbhe", k_new - mean, axes)
+    d2 = jnp.sum((x - k_new[..., None, :]) ** 2, axis=-1)
+    d2 = jnp.where(alive, d2, jnp.inf)
+    neg, idx = jax.lax.top_k(-d2, knn)
+    return y, idx, -neg
+
+
+@jax.jit
+def _land(x, alive, k_new, phys):
+    """Scatter landed rows into the mirrors. phys (L,B,H) int32 with the
+    capacity sentinel (== C, out of bounds) marking inactive lanes."""
+    l, b, h = phys.shape
+    li = jnp.arange(l)[:, None, None]
+    bi = jnp.arange(b)[None, :, None]
+    hi = jnp.arange(h)[None, None, :]
+    x = x.at[li, bi, hi, phys].set(k_new, mode="drop")
+    alive = alive.at[li, bi, hi, phys].set(True, mode="drop")
+    return x, alive
+
+
+class LockstepInserter:
+    """Streams one generated key per (layer, head) member per tick into
+    every attached session's plans, in lockstep across engine slots."""
+
+    def __init__(self, n_layers: int, slots: int, n_heads: int,
+                 capacity: int, head_dim: int, embed_d: int, knn: int):
+        self.L, self.B, self.H = n_layers, slots, n_heads
+        self.C, self.dh, self.d = capacity, head_dim, embed_d
+        self.knn = knn
+        self._mean = jnp.zeros((self.L, self.B, self.H, head_dim))
+        self._axes = jnp.zeros((self.L, self.B, self.H, head_dim, embed_d))
+        self._x = jnp.zeros((self.L, self.B, self.H, capacity, head_dim))
+        self._alive = jnp.zeros((self.L, self.B, self.H, capacity), bool)
+        # per-member frozen quantization boxes (host-side, tiny)
+        self._lo = np.zeros((self.L, self.B, self.H, embed_d), np.float32)
+        self._hi = np.ones((self.L, self.B, self.H, embed_d), np.float32)
+        self._plans: List[Optional[list]] = [None] * slots
+        # (slot, layer, head) -> list of (phys, nbr_idx, nbr_d2)
+        self._buf: Dict[Tuple[int, int, int], list] = {}
+        self._bits: Optional[int] = None
+
+    # -- session lifecycle --------------------------------------------------
+
+    def attach(self, slot: int, plans: list) -> None:
+        """Bind a session's per-layer plan batches to an engine slot and
+        stage their frames/points into the device mirrors. Re-attach after
+        any operation that replaced the member hosts (trim, rebucket,
+        restore)."""
+        from repro import api
+
+        cfg = plans[0].spec.config
+        self._bits = cfg.bits
+        mean = np.zeros((self.L, self.H, self.dh), np.float32)
+        axes = np.zeros((self.L, self.H, self.dh, self.d), np.float32)
+        xs = np.zeros((self.L, self.H, self.C, self.dh), np.float32)
+        alv = np.zeros((self.L, self.H, self.C), bool)
+        for l, pb in enumerate(plans):
+            for h, host in enumerate(pb.hosts):
+                if host.codes is None:
+                    # first streamed insert of this lineage: freeze the
+                    # quantization box + seed hole codes, exactly as
+                    # update_plan would lazily
+                    codes, lo, hi = api._stream_codes(host, cfg)
+                    host.codes, host.code_lo, host.code_hi = codes, lo, hi
+                mean[l, h] = host.embed_mean
+                axes[l, h] = host.embed_axes
+                xs[l, h] = host.x
+                alv[l, h] = host.alive
+                self._lo[l, slot, h] = host.code_lo
+                self._hi[l, slot, h] = host.code_hi
+        self._mean = self._mean.at[:, slot].set(jnp.asarray(mean))
+        self._axes = self._axes.at[:, slot].set(jnp.asarray(axes))
+        self._x = self._x.at[:, slot].set(jnp.asarray(xs))
+        self._alive = self._alive.at[:, slot].set(jnp.asarray(alv))
+        self._plans[slot] = plans
+
+    def detach(self, slot: int) -> None:
+        self._plans[slot] = None
+        self._alive = self._alive.at[:, slot].set(False)
+        for key in [k for k in self._buf if k[0] == slot]:
+            del self._buf[key]
+
+    # -- the per-tick insert ------------------------------------------------
+
+    def insert(self, active: List[int], k_new) -> np.ndarray:
+        """Stream one key per (layer, head) member of every active slot.
+
+        ``k_new`` (L, B, H, dh) device array (inactive lanes ignored).
+        Claims a plan slot per member via the exact update_plan placement,
+        mutates the member hosts in place, buffers the arrivals' kNN
+        edges, and refreshes the device mirrors. Returns the claimed
+        PHYSICAL rows (L, B, H) int64, -1 on inactive lanes."""
+        y, nidx, nd2 = _embed_knn(k_new, self._mean, self._axes,
+                                  self._x, self._alive, self.knn)
+        y_np = np.asarray(y, np.float32)
+        k_np = np.asarray(k_new, np.float32)
+        nidx_np, nd2_np = np.asarray(nidx), np.asarray(nd2, np.float32)
+        codes = morton_codes_boxes(y_np, self._lo, self._hi, self._bits)
+
+        phys = np.full((self.L, self.B, self.H), -1, np.int64)
+        for s in active:
+            plans = self._plans[s]
+            if plans is None:
+                raise ValueError(f"slot {s} has no attached session")
+            for l, pb in enumerate(plans):
+                for h, host in enumerate(pb.hosts):
+                    p = claim_slot(host, codes[l, s, h])
+                    prev = int(host.alive.sum())
+                    host.alive[p] = True
+                    host.x[p] = k_np[l, s, h]
+                    host.embedding[p] = y_np[l, s, h]
+                    if host.y_last is not None:
+                        host.y_last[p] = y_np[l, s, h]
+                    host.codes[p] = codes[l, s, h]
+                    host.peak_alive = max(host.peak_alive or 0, prev + 1)
+                    host.last_inserted_idx = np.asarray([p], np.int64)
+                    host.gamma = None
+                    host.compact_map = None
+                    host.shard_cache = {}
+                    host.refresh = dataclasses.replace(
+                        host.refresh,
+                        appends=host.refresh.appends + 1,
+                        inserted_total=host.refresh.inserted_total + 1,
+                        last_action="append")
+                    self._buf.setdefault((s, l, h), []).append(
+                        (p, nidx_np[l, s, h], nd2_np[l, s, h]))
+                    phys[l, s, h] = p
+
+        sentinel = np.where(phys < 0, self.C, phys).astype(np.int32)
+        self._x, self._alive = _land(self._x, self._alive, k_new,
+                                     jnp.asarray(sentinel))
+        return phys
+
+    # -- COO folding --------------------------------------------------------
+
+    def flush(self, slot: int) -> int:
+        """Fold the slot's buffered kNN edges into each member's host COO
+        (cluster space, current ordering). Call before anything that reads
+        or rewrites the COO: trim, rebucket, checkpoint. Returns the number
+        of edges folded."""
+        from repro import api
+
+        plans = self._plans[slot]
+        folded = 0
+        for (s, l, h) in [k for k in self._buf if k[0] == slot]:
+            buf = self._buf.pop((s, l, h))
+            if not buf or plans is None:
+                continue
+            host = plans[l].hosts[h]
+            rows = np.repeat([e[0] for e in buf], self.knn)
+            cols = np.concatenate([e[1] for e in buf])
+            d2 = np.concatenate([e[2] for e in buf])
+            keep = host.alive[cols]          # neighbors trimmed since claim
+            rows, cols, d2 = rows[keep], cols[keep], d2[keep]
+            if rows.size == 0:
+                continue
+            vals = api._edge_values(host, rows, cols, d2)
+            r2, c2, v2 = host.coo
+            host.coo = (np.concatenate([r2, host.inv[rows]]),
+                        np.concatenate([c2, host.inv[cols]]),
+                        np.concatenate([v2, vals]))
+            host.coo_dev = None
+            folded += int(rows.size)
+        return folded
+
+    def flush_all(self) -> int:
+        return sum(self.flush(s) for s in range(self.B)
+                   if self._plans[s] is not None)

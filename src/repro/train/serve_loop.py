@@ -68,6 +68,9 @@ class Engine:
         self.queue: Deque[Request] = deque()
         self._decode = jax.jit(self._decode_step)
         self._prefills: Dict[int, Callable] = {}
+        # which axis of each cache entry is the sequence axis, read off the
+        # family's own cache spec (slot install copies along it)
+        self._seq_axes = model_api.cache_seq_axes(cfg)
         self.ticks = 0
 
     # -- jitted pieces ------------------------------------------------------
@@ -96,6 +99,25 @@ class Engine:
         req.t_submit = time.time()
         self.queue.append(req)
 
+    def _install(self, s: int, req: Request, cache_1, blen: int):
+        """Install an admitted request's prefilled state into slot ``s``.
+
+        The base engine copies every seq-scaling cache entry (per
+        ``model_api.cache_seq_axes`` — not a hardcoded key list) into the
+        slot's cache region. Subclasses may stage entirely different
+        serving state and return replacement first-token logits (else
+        None to keep the prefill's)."""
+        for key, ax in self._seq_axes.items():
+            seg = cache_1[key][:, 0]             # e.g. (L, H, blen, dh)
+            start = [0] * self.cache[key].ndim
+            start[1] = s                         # slot on the batch axis
+            self.cache[key] = jax.lax.dynamic_update_slice(
+                self.cache[key], seg[:, None], tuple(start))
+        return None
+
+    def _release(self, s: int, req: Request) -> None:
+        """Hook: slot ``s`` just retired ``req`` (subclass teardown)."""
+
     def _admit(self) -> None:
         for s in range(self.slots):
             if self.slot_req[s] is not None or not self.queue:
@@ -107,11 +129,9 @@ class Engine:
             padded[-plen:] = req.tokens          # left-pad into the bucket
             pf = self._prefill_fn(blen)
             cache_1, logits = pf(self.params, jnp.asarray(padded[None]))
-            # copy the slot's prefilled KV into the engine cache region
-            for key in ("k", "v"):
-                seg = cache_1[key][:, 0]         # (L, H, blen, dh)
-                self.cache[key] = jax.lax.dynamic_update_slice(
-                    self.cache[key], seg[:, None], (0, s, 0, 0, 0))
+            override = self._install(s, req, cache_1, blen)
+            if override is not None:
+                logits = override
             self.slot_pos[s] = blen
             tok = int(jnp.argmax(logits[0]))
             req.output.append(tok)
@@ -130,6 +150,7 @@ class Engine:
                 req.t_done = time.time()
                 self.slot_req[s] = None
                 self.slot_pos[s] = 0
+                self._release(s, req)
 
     def step(self) -> int:
         """One engine tick: admit, decode all active slots, retire."""

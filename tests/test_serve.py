@@ -1,0 +1,325 @@
+"""ClusterKV decode service: plan-cached continuous batching.
+
+Covers the serve subsystem (SessionStore, LockstepInserter,
+ClusterKVEngine) plus the base-Engine edge cases the service's admission
+churn leans on: EOS on the last active slot, queue > slots, prefill
+buckets at the max_seq boundary, retire-then-backfill in one tick.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.configs.base import ClusterKVConfig
+from repro.models import model_api
+from repro.train.serve_loop import Engine, Request
+from repro.serve import ClusterKVEngine, Session, SessionStore
+
+MAX_SEQ = 128   # block_k 32 -> 4 tiles; decode_clusters 8 covers all of
+                # them, so the sparse plan decode is EXACT
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # float32: the exactness tests compare greedy argmax tokens between the
+    # scan-compiled dense decode and the unrolled plan decode, and with
+    # random-init weights bf16 reassociation noise is enough to flip
+    # near-tied logits; the routing being tested is dtype-independent
+    cfg = reduced_config("qwen2-0.5b").with_(
+        dtype="float32",
+        clusterkv=ClusterKVConfig(enabled=True, block_q=32, block_k=32,
+                                  blocks_per_query=8, decode_clusters=8))
+    params, _ = model_api.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _requests(cfg, lengths, max_new=6, eos=None, rid0=0):
+    rng = np.random.default_rng(7)
+    return [Request(rid=rid0 + i,
+                    tokens=rng.integers(1, cfg.vocab, n).astype(np.int32),
+                    max_new=max_new, eos_id=eos)
+            for i, n in enumerate(lengths)]
+
+
+def _service(cfg, params, slots=2, **kw):
+    kw.setdefault("mode", "plan")
+    return ClusterKVEngine(cfg, params, slots=slots, max_seq=MAX_SEQ,
+                           prefill_bucket=32, **kw)
+
+
+# ---------------------------------------------------------------------------
+# base Engine edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_engine_eos_on_last_active_slot(setup):
+    """EOS retiring the LAST active slot must free it and end the run
+    cleanly (no spin on an engine with zero active slots)."""
+    cfg, params = setup
+    eng = Engine(cfg, params, slots=2, max_seq=MAX_SEQ, prefill_bucket=32)
+    reqs = _requests(cfg, [20, 30], max_new=32)
+    for r in reqs:
+        eng.submit(r)
+    eng.step()                          # both admitted + first decode
+    reqs[0].eos_id = reqs[0].output[-1]
+    eng._retire()
+    assert eng.slot_req[0] is None and eng.slot_req[1] is not None
+    reqs[1].eos_id = reqs[1].output[-1]  # EOS on the only active slot
+    eng._retire()
+    assert eng.slot_req == [None, None]
+    ticks0 = eng.ticks
+    eng.run()                           # nothing left: exit, no spinning
+    assert eng.ticks == ticks0
+    assert all(r.t_done > 0 for r in reqs)
+
+
+def test_engine_queue_outnumbers_slots_fifo(setup):
+    """More queued requests than free slots: everything is served, and
+    admission order is FIFO (first two finish before the last starts)."""
+    cfg, params = setup
+    eng = Engine(cfg, params, slots=2, max_seq=MAX_SEQ, prefill_bucket=32)
+    reqs = _requests(cfg, [20, 25, 30, 18, 22], max_new=4)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    for r in reqs:
+        assert len(r.output) == 4, r.rid
+    assert max(reqs[0].t_done, reqs[1].t_done) <= reqs[4].t_first
+
+
+def test_engine_prefill_bucket_at_max_seq_boundary(setup):
+    """A prompt whose bucket rounds up to max_seq leaves no decode room:
+    the engine must retire it promptly instead of looping or crashing."""
+    cfg, params = setup
+    eng = Engine(cfg, params, slots=1, max_seq=64, prefill_bucket=32)
+    req = _requests(cfg, [50], max_new=8)[0]   # bucket -> 64 == max_seq
+    eng.submit(req)
+    eng.run(max_ticks=20)
+    assert req.t_done > 0
+    assert len(req.output) < 8       # cut off by the max_seq guard
+    assert eng.slot_req == [None]
+
+
+def test_engine_retire_then_backfill_same_tick(setup):
+    """With one slot and max_new=2, each request needs exactly one decode
+    tick; the freed slot must be re-filled on the very next tick."""
+    cfg, params = setup
+    eng = Engine(cfg, params, slots=1, max_seq=MAX_SEQ, prefill_bucket=32)
+    reqs = _requests(cfg, [20, 24], max_new=2)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert [len(r.output) for r in reqs] == [2, 2]
+    assert eng.ticks == 2            # no idle tick between the two
+
+
+# ---------------------------------------------------------------------------
+# the decode service
+# ---------------------------------------------------------------------------
+
+
+def test_service_matches_dense_engine(setup):
+    """Plan-cached service decode == dense-attention engine, token for
+    token, across slot churn and mixed prompt lengths."""
+    cfg, params = setup
+    lengths = [20, 35, 17, 40]
+    ref = _requests(cfg, lengths)
+    dense = Engine(cfg, params, slots=2, max_seq=MAX_SEQ, prefill_bucket=32,
+                   backend="flash")
+    for r in ref:
+        dense.submit(r)
+    dense.run()
+
+    got = _requests(cfg, lengths)
+    svc = _service(cfg, params)
+    for r in got:
+        svc.submit(r)
+    svc.run()
+    for a, b in zip(ref, got):
+        assert a.output == b.output, (a.rid, a.output, b.output)
+
+
+def test_service_plan_prefill_matches_dense(setup):
+    """plan_prefill routes the prompt through clusterkv_attention's
+    plan_batch path; first tokens must still match dense decode."""
+    cfg, params = setup
+    ref = _requests(cfg, [20, 30])
+    dense = Engine(cfg, params, slots=2, max_seq=MAX_SEQ, prefill_bucket=32)
+    for r in ref:
+        dense.submit(r)
+    dense.run()
+
+    got = _requests(cfg, [20, 30])
+    svc = _service(cfg, params, plan_prefill=True)
+    for r in got:
+        svc.submit(r)
+    svc.run()
+    for a, b in zip(ref, got):
+        assert a.output == b.output, (a.rid, a.output, b.output)
+
+
+def test_service_one_spec_one_decode_trace(setup):
+    """THE service gate: admissions across different prefill buckets all
+    re-unify to one PlanSpec and re-enter ONE compiled decode kernel."""
+    cfg, params = setup
+    svc = _service(cfg, params)
+    reqs = _requests(cfg, [20, 40, 60, 25, 50, 33])  # buckets 32 and 64
+    for r in reqs:
+        svc.submit(r)
+    svc.run()
+    rep = svc.report()
+    assert rep["counters"]["admits"] == 6
+    assert rep["specs_seen"] == 1, "admission retriggered spec derivation"
+    assert rep["decode_traces"] == 1, "admission retriggered compilation"
+    assert rep["prefill_traces"] == 2          # two buckets, per design
+
+
+def test_service_insert_tier_telemetry(setup):
+    """Every generated token streams through the append tier of every
+    (layer, head) member plan — refresh telemetry must account for all
+    of them, and the kNN edges must be folded on retire."""
+    cfg, params = setup
+    svc = _service(cfg, params)
+    reqs = _requests(cfg, [20, 30], max_new=5)
+    for r in reqs:
+        svc.submit(r)
+    svc.run()
+    rep = svc.report()
+    members = cfg.n_layers * cfg.n_kv_heads
+    # per request: max_new tokens, the first from prefill -> max_new-1
+    # decode ticks, each inserting into every member plan
+    inserts = sum(len(r.output) - 1 for r in reqs)
+    assert rep["counters"]["inserts"] == inserts
+    assert rep["insert_tiers"]["appends"] == inserts * members
+    assert rep["counters"]["flushed_edges"] == inserts * members * svc.knn
+
+
+def test_inserter_claims_update_plan_slots(setup):
+    """The lockstep inserter's Morton-leaf slot claim must land each key
+    exactly where ``api.update_plan``'s insert tier would."""
+    from repro.core import clusterkv as ckv
+    from repro.serve.streaming import LockstepInserter
+
+    cfg, _ = setup
+    hkv, s, cap, dh = cfg.n_kv_heads, 32, 64, cfg.head_dim
+    rng = np.random.default_rng(3)
+    keys = rng.normal(size=(hkv, s, dh)).astype(np.float32)
+    new = rng.normal(size=(hkv, dh)).astype(np.float32)
+
+    # reference: the real insert tier (fresh batch -> fresh hosts)
+    pb_ref = ckv.kv_plan_batch(jnp.asarray(keys), knn=8, capacity=cap)
+    _, idx_ref = pb_ref.insert([new[h][None] for h in range(hkv)])
+
+    pb = ckv.kv_plan_batch(jnp.asarray(keys), knn=8, capacity=cap)
+    ins = LockstepInserter(n_layers=1, slots=1, n_heads=hkv, capacity=cap,
+                          head_dim=dh, embed_d=min(3, dh), knn=8)
+    ins.attach(0, [pb])
+    phys = ins.insert([0], jnp.asarray(new[None, None]))   # (1,1,H)
+    for h in range(hkv):
+        assert phys[0, 0, h] == idx_ref[h][0], h
+        host = pb.hosts[h]
+        assert bool(host.alive[phys[0, 0, h]])
+        assert host.refresh.appends == 1
+    assert ins.flush(0) > 0                   # edges folded into the COO
+
+
+def test_service_trim_tombstones(setup):
+    """Trimming live positions takes the tombstone tier (no retrace) and
+    decode continues."""
+    cfg, params = setup
+    svc = _service(cfg, params, slots=1)
+    req = _requests(cfg, [20], max_new=10)[0]
+    svc.submit(req)
+    for _ in range(4):
+        svc.step()
+    sess = svc.store.get(req.rid)
+    gen_pos = sorted(sess.phys_hist)[0]       # an already-landed token
+    svc.trim(req.rid, [3, gen_pos])           # one prefill + one generated
+    assert svc.store.counters["deletes"] == 2
+    for pb in sess.plans:
+        for host in pb.hosts:
+            assert host.refresh.tombstones == 1
+            assert host.refresh.deleted_total == 2
+    svc.run()
+    assert len(req.output) == 10
+    assert svc.report()["decode_traces"] == 1
+
+
+def test_service_rebucket_keeps_decode_exact(setup):
+    """Rebucketing mid-decode only reorders the plan rows; with a
+    full-coverage cluster budget the remaining tokens are unchanged."""
+    cfg, params = setup
+    ref = _requests(cfg, [24], max_new=10)[0]
+    e0 = _service(cfg, params, slots=1)
+    e0.submit(ref)
+    e0.run()
+
+    req = _requests(cfg, [24], max_new=10)[0]
+    e1 = _service(cfg, params, slots=1)
+    e1.submit(req)
+    for _ in range(4):
+        e1.step()
+    e1.rebucket(req.rid)
+    assert e1.store.counters["rebuckets"] == 1
+    e1.run()
+    assert req.output == ref.output
+    assert e1.report()["decode_traces"] == 1
+
+
+def test_service_snapshot_resume_bit_exact(setup, tmp_path):
+    """Drain -> save_plan(SessionStore) -> restore -> resume continues
+    decode bit-exactly in a FRESH engine."""
+    from repro.checkpoint.ckpt import Checkpointer
+
+    cfg, params = setup
+    lengths = [20, 30]
+    ref = _requests(cfg, lengths, max_new=10)
+    e0 = _service(cfg, params)
+    for r in ref:
+        e0.submit(r)
+    e0.run()
+
+    e1 = _service(cfg, params)
+    reqs = _requests(cfg, lengths, max_new=10)
+    for r in reqs:
+        e1.submit(r)
+    for _ in range(4):
+        e1.step()
+    ck = Checkpointer(tmp_path)
+    e1.snapshot(ck, step=4)
+
+    store, step = ck.restore_plan(name="sessions")
+    assert step == 4
+    assert sorted(store.sessions) == [0, 1]
+    assert store.counters == e1.store.counters
+    e2 = _service(cfg, params)
+    e2.resume(store)
+    restored = {r.rid: r for r in e2.slot_req if r is not None}
+    e2.run()
+    for a in ref:
+        assert restored[a.rid].output == a.output, a.rid
+
+
+def test_session_store_bookkeeping():
+    """Spec-keyed membership + counters, without any engine."""
+    store = SessionStore()
+
+    class _Plan:        # stand-in with a hashable spec
+        spec = ("cfg", 64)
+
+    s1 = Session(rid=1, slot=0, blen=32, plans=[_Plan()])
+    s2 = Session(rid=2, slot=1, blen=64, plans=[_Plan()])
+    assert store.admit(s1) is True            # first spec sighting
+    assert store.admit(s2) is False           # shared spec
+    assert store.specs_live == 1 and store.specs_seen == 1
+    store.retire(1)
+    assert store.specs_live == 1              # rid 2 still holds the spec
+    store.retire(2, evict=True)
+    assert store.specs_live == 0 and store.specs_seen == 1
+    rep = store.report()
+    assert rep["counters"]["retires"] == 1
+    assert rep["counters"]["evictions"] == 1
+    assert rep["active_sessions"] == 0
