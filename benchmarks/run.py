@@ -14,6 +14,8 @@ diff them — the bench trajectory convention is ``BENCH_plan.json``.
   bench_stream     beyond-paper  (insert/delete churn vs rebuild-per-step)
   bench_batch      beyond-paper  (PlanBatch vmapped matvec vs plan loop)
   bench_serve      beyond-paper  (decode service vs per-call Morton sort)
+  bench_kernels    beyond-paper  (analytic cost model vs probe ranking,
+                                  batched Pallas bit-parity)
 
 Gated suites assert their acceptance in-suite; a failed gate is recorded
 per suite (the remaining suites still run, the JSON artifact carries the
@@ -80,10 +82,10 @@ def main() -> None:
         merge(args.merge[0], args.merge[1:])
         return
 
-    from benchmarks import (attention_bench, bench_batch, bench_refresh,
-                            bench_serve, bench_shard, bench_stream,
-                            fig1_orderings, fig3_throughput, micro_blas,
-                            table1_gamma)
+    from benchmarks import (attention_bench, bench_batch, bench_kernels,
+                            bench_refresh, bench_serve, bench_shard,
+                            bench_stream, fig1_orderings, fig3_throughput,
+                            micro_blas, table1_gamma)
     suites = {
         "fig1_orderings": fig1_orderings.run,
         "table1_gamma": table1_gamma.run,
@@ -95,6 +97,7 @@ def main() -> None:
         "bench_stream": bench_stream.run,
         "bench_batch": bench_batch.run,
         "bench_serve": bench_serve.run,
+        "bench_kernels": bench_kernels.run,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     unknown = [c for c in chosen if c not in suites]

@@ -12,6 +12,7 @@ ordering concentrates the fixed pattern into dense patches (γ rises),
 exactly the paper's locality story measured live.
 
   PYTHONPATH=src python examples/tsne.py [--n 1024] [--iters 300]
+       [--force-backend pallas]   # fused Mosaic tsne_force kernel
 """
 import argparse
 import sys
@@ -82,6 +83,11 @@ def main():
     ap.add_argument("--iters", type=int, default=300)
     ap.add_argument("--k", type=int, default=24)
     ap.add_argument("--refresh-every", type=int, default=50)
+    ap.add_argument("--force-backend", default=None,
+                    choices=[None, "pallas"],
+                    help="attractive-force kernel: default XLA blockwise "
+                         "path, or the fused Mosaic tsne_force kernel "
+                         "(interpret mode on CPU)")
     args = ap.parse_args()
 
     n, k = args.n, args.k
@@ -112,7 +118,7 @@ def main():
     vel = jnp.zeros_like(y)
     t0 = time.time()
     for it in range(args.iters):
-        f_attr = plan.tsne_attractive(y)
+        f_attr = plan.tsne_attractive(y, backend=args.force_backend)
         f_rep, _ = repulsive(y)
         exagg = 4.0 if it < 100 else 1.0
         grad = 4.0 * (exagg * f_attr - f_rep)

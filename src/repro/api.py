@@ -643,10 +643,17 @@ class InteractionPlan:
 
     # -- iterative value-update hooks (paper §3) ---------------------------
 
-    def tsne_attractive(self, y: jax.Array) -> jax.Array:
+    def tsne_attractive(self, y: jax.Array,
+                        backend: Optional[str] = None) -> jax.Array:
         """t-SNE attractive force (§3.1) on embedding ``y`` (cluster order);
-        the stored tiles are the (fixed-profile) affinities ``p``."""
+        the stored tiles are the (fixed-profile) affinities ``p``.
+        ``backend="pallas"`` routes through the fused Mosaic kernel
+        (``kernels.ops.tsne_force``); default stays the XLA blockwise path.
+        """
         b = self._require_bsr()
+        if backend == "pallas":
+            from repro.kernels import ops as _kops
+            return _kops.tsne_force(b.vals, b.col_idx, y, self.n)
         return interact.tsne_attractive(b.vals, b.col_idx, b.nbr_mask,
                                         y, self.n)
 

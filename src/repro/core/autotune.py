@@ -1,9 +1,18 @@
 """Autotuning: SpMV backend selection for plans + attention budget tuning.
 
-``tune_backend`` probes the SpMV backend registry on a plan's real shapes
-and picks the fastest path — this is what ``backend="auto"`` resolves to in
-``repro.api``. The attention-budget half below reuses the paper's γ-score
-idea to size the cluster-sparse attention budget.
+``tune_backend`` resolves ``backend="auto"`` for ``repro.api`` plans. Since
+the analytic cost model landed (``core.costmodel``) the stopwatch no longer
+decides: backends are ranked by the model's calibrated predicted seconds on
+the plan's structural shape, and probes run only as *calibration* — one
+measurement per backend (globally memoized in ``_CALIB`` as the
+measured/modeled ratio), after which every decision is pure arithmetic on
+the hardware config. Changing the hardware config (``costmodel
+.set_hardware`` / ``REPRO_HW_CONFIG``) plus ``clear_tune_memo()`` therefore
+changes decisions without re-probing anything. Memoized decisions store the
+full machine-readable ranking report (``schema repro.cost/v1``).
+
+The attention-budget half below reuses the paper's γ-score idea to size
+the cluster-sparse attention budget.
 
 Patch-density-guided autotuning of the cluster-sparse attention budget.
 
@@ -27,35 +36,62 @@ import numpy as np
 
 from repro.configs.base import ClusterKVConfig
 from repro.core import clusterkv as ckv
-from repro.core.registry import backend_names, get_backend
+from repro.core import costmodel
+from repro.core.registry import backend_names, get_backend, \
+    get_batched_backend
 
 
 # ---------------------------------------------------------------------------
 # SpMV backend autotuning (resolves plan backend="auto")
 # ---------------------------------------------------------------------------
 
-# structural memo of auto winners: probing costs a compile + timed runs per
-# registered backend, and a *batch* of spec-identical plans (or a stream of
-# refreshed lineages with stable shapes) would otherwise re-pay it per plan.
-# Keys are (shape_key, charge ndim, backend set, device_count) — everything
-# that determines which kernels compile; values are winner names.
-_TUNE_MEMO: Dict[tuple, str] = {}
+# structural memo of auto decisions, keyed by (shape_key, true nnz,
+# charge ndim, backend set, device_count) — everything that determines
+# which kernels compile plus the csr path's actual edge count; values
+# are the full machine-readable ranking reports
+# (costmodel.rank_backends envelopes) so a memo hit replays both the
+# winner and the model's predicted seconds.
+_TUNE_MEMO: Dict[tuple, dict] = {}
+
+# calibration constants: backend name (or "batch:<name>") -> measured /
+# modeled seconds ratio from ONE probe. inf marks a backend that failed or
+# was skipped (interpret-mode pallas, broken probe) — excluded from
+# rankings. This is the only place the stopwatch touches the decision.
+_CALIB: Dict[str, float] = {}
 
 
 def clear_tune_memo() -> None:
-    """Drop memoized auto-backend decisions (tests / fresh measurements)."""
+    """Drop memoized auto-backend decisions (tests / fresh measurements).
+    Calibration constants survive — re-decisions stay probe-free."""
     _TUNE_MEMO.clear()
+
+
+def clear_calibration() -> None:
+    """Drop probe calibration constants (forces fresh measurement)."""
+    _CALIB.clear()
+
+
+def _skip_interpret(fn) -> bool:
+    """True when ``fn`` is a Pallas backend currently running interpret
+    mode — a full compile + timed Python-loop runs per probe, and it can
+    never win on this hardware."""
+    gate = getattr(fn, "interpret_only", None)
+    return bool(callable(gate) and gate())
 
 
 def probe_backends(plan, x: Optional[jax.Array] = None,
                    backends: Optional[Iterable[str]] = None,
                    warmup: int = 1, iters: int = 3,
-                   atol: float = 1e-3) -> Dict[str, float]:
+                   atol: float = 1e-3,
+                   include_interpret: bool = False) -> Dict[str, float]:
     """Median wall time (s) per registered backend on the plan's shapes.
 
     Backends that raise (missing COO, mesh indivisibility, ...) or disagree
     with the flat block path by more than ``atol`` max-abs are skipped —
-    a fast-but-wrong backend must never win the autotune.
+    a fast-but-wrong backend must never win the autotune. Interpret-mode
+    Pallas backends are skipped by default (they pay a compile + timed
+    interpreter runs and can never win on CPU); pass
+    ``include_interpret=True`` to time them anyway (tests).
     """
     if x is None:
         x = jnp.asarray(
@@ -68,6 +104,8 @@ def probe_backends(plan, x: Optional[jax.Array] = None,
     times: Dict[str, float] = {}
     for name in names:
         fn = get_backend(name)
+        if not include_interpret and _skip_interpret(fn):
+            continue
         try:
             y = np.asarray(jax.block_until_ready(fn(plan, x)))
             if ref is not None and np.abs(y - ref).max() > atol:
@@ -85,56 +123,107 @@ def probe_backends(plan, x: Optional[jax.Array] = None,
     return times
 
 
+def _calibrate(names: Iterable[str], feat, plan, x, *,
+               interpret: bool) -> None:
+    """Probe every backend in ``names`` that has no calibration constant
+    yet and store measured/modeled ratios in ``_CALIB``. A backend whose
+    probe fails, disagrees, or is interpret-mode Pallas calibrates to inf
+    (excluded from rankings until ``clear_calibration``)."""
+    missing = [n for n in names if n not in _CALIB]
+    if not missing:
+        return
+    probed = probe_backends(plan, x, missing)
+    for name in missing:
+        meas = probed.get(name)
+        if meas is None:
+            _CALIB[name] = float("inf")
+            continue
+        model_s = costmodel.backend_cost(feat, name,
+                                         interpret=interpret)["seconds"]
+        _CALIB[name] = meas / model_s if model_s > 0 else float("inf")
+
+
 def tune_backend(plan, x: Optional[jax.Array] = None,
                  backends: Optional[Iterable[str]] = None,
                  device_count: Optional[int] = None
                  ) -> Tuple[str, Dict[str, float]]:
-    """Pick the fastest registered SpMV backend for ``plan``.
+    """Resolve ``backend="auto"`` for ``plan`` from the analytic model.
 
-    Returns ``(name, per-backend times)``; falls back to ``"bsr"`` when
-    nothing could be probed.
+    Returns ``(name, calibrated predicted seconds per backend)``; the
+    winner is the argmin of the returned dict. Falls back to ``"bsr"``
+    when nothing is rankable (tracer plans, every probe failed).
 
-    Device-count-aware: on a >=2-device mesh the sharded ``dist`` path
-    wins whenever it (a) probed correct and (b) its halo analysis moves
-    strictly less charge than replication. Wall-clock probes on a
-    single-host mesh (forced virtual devices, shared memory) mismeasure
-    collective cost — they bill inter-device copies at shared-memory
-    speed for the replicated paths while charging the halo path its full
-    launch overhead — so the transfer model, not the stopwatch, decides
-    between per-device paths; the stopwatch still ranks the single-device
-    backends against each other.
+    Probes are demoted to calibration: the first time a backend is seen
+    it is timed once and the measured/modeled ratio memoized globally
+    (``_CALIB``); every subsequent decision — any shape, any hardware
+    config — is model arithmetic. ``clear_tune_memo()`` plus a changed
+    hardware config therefore re-decides without re-probing.
+
+    Device-count-aware: on a >=2-device mesh the ``dist`` path wins
+    whenever it (a) calibrated healthy and (b) the exchange model prices
+    its halo strictly under replication on the configured interconnect.
+    Wall-clock probes on a single-host mesh (forced virtual devices,
+    shared memory) mismeasure collective cost, so the model — not the
+    stopwatch — decides between per-device paths; ``"dist"`` appears in
+    the returned dict only when it is the decision.
 
     Single-device decisions are memoized on the plan's structural key
-    (``PlanSpec.shape_key`` + charge ndim + backend set): plans that
-    compile to the same kernels get the same winner without re-probing —
-    what lets a batch of spec-identical plans autotune once. Multi-device
-    decisions are NOT memoized: the dist-vs-replicate call depends on the
-    plan's actual block structure (the halo transfer model), which two
-    same-shaped plans can disagree on.
+    (``PlanSpec.shape_key`` + true nnz + charge ndim + backend set); memo
+    values are
+    the full ranking reports. Multi-device decisions are NOT memoized:
+    the dist-vs-replicate call depends on the plan's actual block
+    structure (the halo analysis), which two same-shaped plans can
+    disagree on.
     """
     ndev = device_count if device_count is not None else jax.device_count()
     names = tuple(backends) if backends is not None else backend_names()
+    ndim = x.ndim if x is not None else 1
+    concrete = plan.bsr is not None \
+        and not isinstance(plan.bsr.vals, jax.core.Tracer)
+    if not concrete:
+        return "bsr", {}
+    # true edge count (the csr path's work); plans built from_bsr have no
+    # COO and fall back to the dense-equivalent estimate
+    coo = getattr(plan.host, "coo", None)
+    nnz = int(len(coo[0])) if coo is not None else None
     key = None
-    if ndev < 2 and plan.bsr is not None \
-            and not isinstance(plan.bsr.vals, jax.core.Tracer):
-        key = (plan.spec.shape_key, x.ndim if x is not None else 1, names,
-               ndev)
+    if ndev < 2:
+        key = (plan.spec.shape_key, nnz, ndim, names, ndev)
         hit = _TUNE_MEMO.get(key)
         if hit is not None:
-            return hit, {}
-    times = probe_backends(plan, x, backends)
-    if not times:
-        return "bsr", times
-    if ndev >= 2 and "dist" in times and plan.bsr is not None \
+            return hit["winner"], dict(hit["predicted_s"])
+    f = x.shape[-1] if (x is not None and x.ndim == 2) else 1
+    feat = costmodel.plan_features(plan.spec.shape_key, f=f, nnz=nnz)
+    interp = _skip_interpret(get_backend("pallas")) \
+        if "pallas" in names else False
+    local = tuple(n for n in names if n != "dist")
+    _calibrate(local, feat, plan, x, interpret=interp)
+    if ndev >= 2 and "dist" in names and "dist" not in _CALIB:
+        # dist needs a real mesh to calibrate; a failed probe marks it
+        # non-viable here (e.g. indivisible shard counts)
+        _calibrate(("dist",), feat, plan, x, interpret=False)
+    report = costmodel.rank_backends(
+        feat, local, calibration=_CALIB, interpret=interp, n_dev=ndev)
+    winner = report["winner"] or "bsr"
+    times = dict(report["predicted_s"])
+    if ndev >= 2 and "dist" in names \
+            and _CALIB.get("dist", float("inf")) != float("inf") \
             and not isinstance(plan.bsr.col_idx, jax.core.Tracer):
         from repro.core.shardplan import analyze_shards
 
         spec, _ = analyze_shards(plan.bsr, ndev)
-        if spec.transfer_blocks < spec.allgather_blocks:
-            return "dist", times
-    winner = min(times, key=times.get)
+        halo_s = costmodel.exchange_cost(spec.transfer_blocks, plan.bsr.bs)
+        ag_s = costmodel.exchange_cost(spec.allgather_blocks, plan.bsr.bs)
+        if halo_s is not None and ag_s is not None and halo_s < ag_s:
+            dist_s = costmodel.backend_cost(
+                feat, "dist", n_dev=ndev,
+                exchange_blocks=spec.transfer_blocks)["seconds"]
+            times["dist"] = _CALIB["dist"] * dist_s
+            report = dict(report, winner="dist", predicted_s=times)
+            winner = "dist"
     if key is not None:
-        _TUNE_MEMO[key] = winner
+        report = dict(report, winner=winner)
+        _TUNE_MEMO[key] = report
     return winner, times
 
 
@@ -144,13 +233,15 @@ def tune_batch_backend(batch, x: Optional[jax.Array] = None,
                        atol: float = 1e-3) -> Tuple[str, Dict[str, float]]:
     """One shared backend decision for a whole ``api.PlanBatch``.
 
-    Probes the *batched* kernel itself (``api._batch_apply_kernel``) over
-    the vmappable backends — the single-plan stopwatch ranking does not
-    transfer (vmap changes the einsum shapes and dispatch count), so the
-    batch is measured as the batch. Backends that fail to vmap or disagree
-    with the batched ``bsr`` path are skipped. The decision is memoized on
-    ``(batch shape_key, B, charge ndim, backend set)``: spec-identical
-    batches — every construction in a serving loop — tune once.
+    Same analytic-first shape as ``tune_backend``, but calibration runs
+    the *batched* kernel itself (``api._batch_apply_kernel``) — the
+    single-plan calibration does not transfer (batching changes the
+    gather shapes and dispatch count), so batch backends calibrate under
+    ``"batch:<name>"`` keys. Backends that fail to batch or disagree with
+    the batched ``bsr`` path calibrate to inf. The decision is memoized
+    on ``(batch shape_key, B, charge ndim, backend set)`` with the full
+    ranking report: spec-identical batches — every construction in a
+    serving loop — tune once.
     """
     from repro import api
 
@@ -161,37 +252,60 @@ def tune_batch_backend(batch, x: Optional[jax.Array] = None,
     key = ("batch", batch.spec.shape_key, batch.batch, ndim, names)
     hit = _TUNE_MEMO.get(key)
     if hit is not None:
-        return hit, {}
-    if x is None:
-        x = jnp.asarray(np.random.default_rng(0).standard_normal(
-            (batch.batch, batch.capacity)), jnp.float32)
-    try:
-        ref = np.asarray(jax.block_until_ready(api._batch_apply_kernel(
-            batch.spec, batch.data, x, "bsr", "apply")))
-    except Exception:
-        ref = None
-    times: Dict[str, float] = {}
-    for name in names:
+        return hit["winner"], dict(hit["predicted_s"])
+    f = x.shape[-1] if (x is not None and x.ndim == 3) else 1
+    feat = costmodel.plan_features(batch.spec.shape_key, f=f,
+                                   batch=batch.batch)
+    interp = False
+    pfn = get_batched_backend("pallas") if "pallas" in names else None
+    if pfn is not None:
+        interp = _skip_interpret(pfn)
+    missing = [n for n in names if ("batch:" + n) not in _CALIB]
+    if missing:
+        if x is None:
+            x = jnp.asarray(np.random.default_rng(0).standard_normal(
+                (batch.batch, batch.capacity)), jnp.float32)
         try:
-            y = np.asarray(jax.block_until_ready(api._batch_apply_kernel(
-                batch.spec, batch.data, x, name, "apply")))
-            if ref is not None and np.abs(y - ref).max() > atol:
-                continue
-            for _ in range(warmup):
-                jax.block_until_ready(api._batch_apply_kernel(
-                    batch.spec, batch.data, x, name, "apply"))
-            ts = []
-            for _ in range(iters):
-                t0 = time.perf_counter()
-                jax.block_until_ready(api._batch_apply_kernel(
-                    batch.spec, batch.data, x, name, "apply"))
-                ts.append(time.perf_counter() - t0)
-            times[name] = float(np.median(ts))
+            ref = np.asarray(jax.block_until_ready(api._batch_apply_kernel(
+                batch.spec, batch.data, x, "bsr", "apply")))
         except Exception:
-            continue
-    winner = min(times, key=times.get) if times else "bsr"
-    _TUNE_MEMO[key] = winner
-    return winner, times
+            ref = None
+        for name in missing:
+            ckey = "batch:" + name
+            bfn = get_batched_backend(name)
+            if bfn is not None and _skip_interpret(bfn):
+                _CALIB[ckey] = float("inf")
+                continue
+            try:
+                y = np.asarray(jax.block_until_ready(
+                    api._batch_apply_kernel(
+                        batch.spec, batch.data, x, name, "apply")))
+                if ref is not None and np.abs(y - ref).max() > atol:
+                    _CALIB[ckey] = float("inf")
+                    continue
+                for _ in range(warmup):
+                    jax.block_until_ready(api._batch_apply_kernel(
+                        batch.spec, batch.data, x, name, "apply"))
+                ts = []
+                for _ in range(iters):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(api._batch_apply_kernel(
+                        batch.spec, batch.data, x, name, "apply"))
+                    ts.append(time.perf_counter() - t0)
+                meas = float(np.median(ts))
+                model_s = costmodel.backend_cost(
+                    feat, name, interpret=interp)["seconds"]
+                _CALIB[ckey] = meas / model_s if model_s > 0 \
+                    else float("inf")
+            except Exception:
+                _CALIB[ckey] = float("inf")
+    cal = {n: _CALIB.get("batch:" + n, 1.0) for n in names}
+    report = costmodel.rank_backends(feat, names, calibration=cal,
+                                     interpret=interp)
+    winner = report["winner"] or "bsr"
+    report = dict(report, winner=winner)
+    _TUNE_MEMO[key] = report
+    return winner, dict(report["predicted_s"])
 
 
 def coverage_curve(q: jax.Array, k: jax.Array, cfg: ClusterKVConfig

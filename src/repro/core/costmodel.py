@@ -1,0 +1,322 @@
+"""Analytic per-backend cost model + knob-based hardware config.
+
+One model, three consumers:
+
+  * ``core.autotune`` ranks SpMV backends analytically (probes are demoted
+    to one-off calibration of the model's constants);
+  * ``core.shardplan`` prices halo-vs-ring-vs-allgather exchanges in
+    seconds on the configured interconnect instead of raw block counts;
+  * ``kernels.ops`` sizes the Pallas batch-grid tiles (row-superblock,
+    slot-chunk, feature tile) against the configured VMEM budget.
+
+The hardware is described by a handful of knobs (:class:`HardwareConfig`)
+loadable from JSON — point ``REPRO_HW_CONFIG`` at a knob file and every
+decision re-derives from the new hardware truth without re-probing.  All
+reports emitted here (and by ``launch/roofline.py`` / ``launch/dryrun.py``)
+share one machine-readable envelope: ``schema = "repro.cost/v1"`` plus
+``kind`` and the hardware knobs that produced the numbers.
+
+Cost shapes come from ``PlanSpec.shape_key`` — ``(capacity, bs, sb, n_rb,
+n_cb, max_nbr)`` — which is exactly the structural memo key the autotune
+already uses, so a prediction is valid for every plan that would compile
+the same kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, Iterable, Mapping, Optional, Tuple
+
+SCHEMA = "repro.cost/v1"
+
+# dense bottom tiles are float32 on every path (build_bsr casts)
+_ELEM = 4.0
+_IDX = 4.0
+
+
+@dataclass(frozen=True)
+class HardwareConfig:
+    """Knob-based description of the target chip (defaults: TPU v5e-like,
+    the same constants ``launch/analytic.py`` has always used).
+
+    ``launch_overhead`` is the fixed cost of one dispatched kernel / scan
+    step; ``gather_penalty`` multiplies HBM bytes moved by *irregular*
+    gathers (XLA lowers them far off the streaming-bandwidth roof,
+    catastrophically so on CPU); ``edge_cost`` is the per-edge
+    serialization of the csr path's scatter-adds (throughput-bound, not
+    byte-bound); ``interpret_penalty`` is the slowdown of
+    running a Pallas kernel under ``interpret=True`` (the CPU container) —
+    on a real MXU it is 1.0 and the fused kernel wins on its merits.
+    """
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12       # bf16/f32 MXU flops per chip
+    hbm_bw: float = 819e9            # HBM bytes/s per chip
+    link_bw: float = 50e9            # ICI bytes/s per link
+    vmem_bytes: int = 16 * 2 ** 20   # VMEM per core
+    mxu_tile: int = 128              # MXU systolic tile edge
+    launch_overhead: float = 2e-6    # s per dispatched kernel / scan step
+    gather_penalty: float = 4.0      # HBM multiplier on irregular gathers
+    edge_cost: float = 2e-10         # s per scattered COO edge (csr path)
+    interpret_penalty: float = 1e4   # Pallas interpret-mode slowdown
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "HardwareConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown hardware knobs {sorted(unknown)}; "
+                             f"known: {sorted(known)}")
+        return cls(**dict(d))
+
+    def to_json(self, path: str) -> None:
+        with open(path, "w") as fh:
+            json.dump(self.to_dict(), fh, indent=2)
+
+    @classmethod
+    def from_json(cls, path: str) -> "HardwareConfig":
+        with open(path) as fh:
+            return cls.from_dict(json.load(fh))
+
+
+_HARDWARE: Optional[HardwareConfig] = None
+
+
+def get_hardware() -> HardwareConfig:
+    """The active hardware config: ``set_hardware``'s, else the JSON file
+    named by ``REPRO_HW_CONFIG``, else the built-in TPU v5e knobs."""
+    global _HARDWARE
+    if _HARDWARE is None:
+        path = os.environ.get("REPRO_HW_CONFIG")
+        _HARDWARE = (HardwareConfig.from_json(path) if path
+                     else HardwareConfig())
+    return _HARDWARE
+
+
+def set_hardware(hw: "HardwareConfig | Mapping | str | None"
+                 ) -> HardwareConfig:
+    """Install a hardware config (object, knob dict, or JSON path).
+    ``None`` resets to the environment default. Returns the active config.
+    Decisions derived from the model (autotune winners, tile sizes) are
+    re-evaluated lazily — clear the autotune memo to force new decisions.
+    """
+    global _HARDWARE
+    if hw is None:
+        _HARDWARE = None
+        return get_hardware()
+    if isinstance(hw, str):
+        hw = HardwareConfig.from_json(hw)
+    elif isinstance(hw, Mapping):
+        hw = HardwareConfig.from_dict(hw)
+    _HARDWARE = hw
+    return hw
+
+
+def make_report(kind: str, payload: Mapping,
+                hw: Optional[HardwareConfig] = None) -> dict:
+    """Shared machine-readable envelope for every cost/roofline/dry-run
+    report: ``{"schema", "kind", "hardware", **payload}``."""
+    hw = hw or get_hardware()
+    out = {"schema": SCHEMA, "kind": kind, "hardware": hw.to_dict()}
+    out.update(payload)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-backend flops / bytes-accessed model
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CostFeatures:
+    """Structural features of one SpMV problem (per batch member).
+
+    ``nnz`` is the *true* COO edge count when known. The blocked paths
+    compute every ELL slot (``n_rb * max_nbr`` dense tiles, padding
+    included) but the per-edge ``csr`` path touches only the real edges
+    — on hub-heavy kNN graphs that is a 10-50x work gap the model must
+    see, or it never predicts csr winning. ``None`` falls back to the
+    dense-equivalent count (every ELL slot full)."""
+    capacity: int
+    bs: int
+    sb: int
+    n_rb: int
+    n_cb: int
+    max_nbr: int
+    f: int = 1                     # charge feature columns
+    batch: int = 1                 # stacked lanes (PlanBatch)
+    nnz: Optional[int] = None      # true COO edges (csr path work)
+
+
+def plan_features(shape_key: Tuple[int, ...], f: int = 1,
+                  batch: int = 1,
+                  nnz: Optional[int] = None) -> CostFeatures:
+    """``PlanSpec.shape_key`` -> :class:`CostFeatures`."""
+    capacity, bs, sb, n_rb, n_cb, max_nbr = shape_key
+    return CostFeatures(capacity=capacity, bs=bs, sb=sb, n_rb=n_rb,
+                        n_cb=n_cb, max_nbr=int(max_nbr or 0), f=f,
+                        batch=batch, nnz=nnz)
+
+
+def backend_cost(feat: CostFeatures, backend: str,
+                 hw: Optional[HardwareConfig] = None, *,
+                 interpret: bool = False, n_dev: int = 1,
+                 exchange_blocks: int = 0) -> dict:
+    """Closed-form flops / HBM bytes / seconds for one backend.
+
+    The roofline estimate is ``max(flops/peak, bytes/hbm_bw)`` plus the
+    per-launch overhead and (``dist`` only) the link time of the halo
+    exchange. Absolute seconds are calibrated by the autotune (one probe
+    per backend, memoized); *relative* order across shapes and hardware
+    configs is what the model owns.
+    """
+    hw = hw or get_hardware()
+    B = feat.batch
+    tiles = B * feat.n_rb * max(feat.max_nbr, 1)
+    flops = 2.0 * tiles * feat.bs * feat.bs * feat.f
+    tile_bytes = tiles * feat.bs * feat.bs * _ELEM
+    seg_bytes = tiles * feat.bs * feat.f * _ELEM
+    out_bytes = B * feat.n_rb * feat.bs * feat.f * _ELEM
+    idx_bytes = tiles * _IDX
+    link_bytes = 0.0
+    launches = 1.0
+    edge_s = 0.0
+    if backend == "csr":
+        # per-edge path over the TRUE nonzeros (the blocked paths pay for
+        # every ELL slot; csr skips the padding entirely): each edge moves
+        # an index pair and a value, and both the x-gather and the
+        # y-scatter-add are irregular (penalized)
+        nnz = B * (feat.nnz if feat.nnz is not None
+                   else feat.n_rb * max(feat.max_nbr, 1)
+                   * feat.bs * feat.bs)
+        flops = 2.0 * nnz * feat.f
+        hbm = nnz * (_ELEM + 2 * _IDX) \
+            + hw.gather_penalty * nnz * 2 * feat.f * _ELEM + out_bytes
+        # scatter-adds serialize per edge on top of the byte traffic
+        edge_s = nnz * hw.edge_cost
+    elif backend == "bsr":
+        # one flat kernel; the segment gather indexes the whole charge
+        # vector (penalized — XLA gathers run far off the streaming roof)
+        hbm = tile_bytes + hw.gather_penalty * seg_bytes + out_bytes \
+            + idx_bytes
+    elif backend == "bsr_ml":
+        # superblock stripes keep each step's gather window resident, so
+        # segments stream at full bandwidth — paid for by one dispatched
+        # scan step per stripe
+        hbm = tile_bytes + seg_bytes + out_bytes + idx_bytes
+        launches = float(max(-(-feat.n_rb // max(feat.sb, 1)), 1))
+    elif backend == "pallas":
+        # fused gather: column indices are scalar-prefetched and segments
+        # are cut from the VMEM-resident charge block, so nothing
+        # round-trips HBM between gather and dot
+        hbm = tile_bytes + seg_bytes + out_bytes + idx_bytes
+    elif backend == "dist":
+        hbm = (tile_bytes + hw.gather_penalty * seg_bytes + out_bytes) \
+            / max(n_dev, 1)
+        flops /= max(n_dev, 1)
+        link_bytes = float(exchange_blocks) * feat.bs * _ELEM
+    else:
+        # unknown backends get the generic flat-path estimate
+        hbm = tile_bytes + hw.gather_penalty * seg_bytes + out_bytes \
+            + idx_bytes
+    seconds = max(flops / hw.peak_flops, hbm / hw.hbm_bw) \
+        + launches * hw.launch_overhead + link_bytes / hw.link_bw + edge_s
+    if backend == "pallas" and interpret:
+        seconds *= hw.interpret_penalty
+    return {"backend": backend, "flops": flops, "hbm_bytes": hbm,
+            "link_bytes": link_bytes, "launches": launches,
+            "seconds": seconds}
+
+
+def rank_backends(feat: CostFeatures, names: Iterable[str], *,
+                  hw: Optional[HardwareConfig] = None,
+                  calibration: Optional[Mapping[str, float]] = None,
+                  interpret: bool = False, n_dev: int = 1) -> dict:
+    """Analytic ranking of ``names`` on ``feat`` — a machine-readable
+    report (shared envelope) carrying the per-backend cost breakdown, the
+    calibrated predicted seconds, and the ranking.
+
+    ``calibration`` maps backend name -> measured/modeled ratio (from one
+    probe, memoized by the autotune); missing backends rank with ratio
+    1.0, non-finite ratios (probe failed / skipped) are excluded.
+    """
+    hw = hw or get_hardware()
+    calibration = calibration or {}
+    costs: Dict[str, dict] = {}
+    predicted: Dict[str, float] = {}
+    for name in names:
+        ratio = float(calibration.get(name, 1.0))
+        if ratio != ratio or ratio == float("inf"):   # NaN or inf: excluded
+            continue
+        c = backend_cost(feat, name, hw, interpret=interpret, n_dev=n_dev)
+        costs[name] = c
+        predicted[name] = ratio * c["seconds"]
+    ranking = sorted(predicted, key=predicted.get)
+    return make_report("backend_rank", {
+        "features": dataclasses.asdict(feat),
+        "costs": costs,
+        "calibration": {k: calibration.get(k) for k in predicted},
+        "predicted_s": predicted,
+        "ranking": ranking,
+        "winner": ranking[0] if ranking else None,
+    }, hw)
+
+
+# ---------------------------------------------------------------------------
+# exchange pricing (core.shardplan halo-vs-ring-vs-allgather)
+# ---------------------------------------------------------------------------
+
+
+def exchange_cost(transfer_blocks: "int | None", bs: int,
+                  hw: Optional[HardwareConfig] = None) -> Optional[float]:
+    """Seconds to move ``transfer_blocks`` charge blocks of ``bs`` float32
+    charges over the configured interconnect (``None`` passes through —
+    infeasible exchange candidates stay infeasible)."""
+    if transfer_blocks is None:
+        return None
+    hw = hw or get_hardware()
+    return float(transfer_blocks) * bs * _ELEM / hw.link_bw
+
+
+# ---------------------------------------------------------------------------
+# Pallas tile sizing (kernels.ops batch-grid kernel)
+# ---------------------------------------------------------------------------
+
+
+def choose_tiles(shape_key: Tuple[int, ...], f: int = 1,
+                 hw: Optional[HardwareConfig] = None
+                 ) -> Tuple[int, int, int]:
+    """Batch-grid tile sizes ``(rbs, chunk, fc)`` under the VMEM knob.
+
+    ``rbs`` row blocks ride one grid step (amortizing grid overhead),
+    ``chunk`` ELL slots are contracted per step, and charges are tiled to
+    ``fc`` feature columns. ``chunk`` stays at the full ELL width: a
+    split slot reduction changes the floating-point summation order and
+    breaks the bit-parity gate against the XLA paths (the CPU-container
+    acceptance); memory pressure is instead relieved by shrinking ``fc``
+    then ``rbs``. Resident VMEM per step is the vals block
+    ``rbs*chunk*bs^2``, the charge block ``n_cb*bs*fc`` and the output
+    block ``rbs*bs*fc``.
+    """
+    capacity, bs, sb, n_rb, n_cb, max_nbr = shape_key
+    hw = hw or get_hardware()
+    budget = hw.vmem_bytes / 2          # leave headroom for double-buffering
+    chunk = max(int(max_nbr or 1), 1)
+    fc = max(int(f), 1)
+    while fc > 1 and n_cb * bs * fc * _ELEM > budget / 2:
+        fc = -(-fc // 2)
+
+    def fits(r: int) -> bool:
+        vals_b = r * chunk * bs * bs * _ELEM
+        y_b = r * bs * fc * _ELEM
+        x_b = n_cb * bs * fc * _ELEM
+        return vals_b + y_b + x_b <= budget
+
+    rbs = 1
+    while rbs * 2 <= min(max(n_rb, 1), 8) and fits(rbs * 2):
+        rbs *= 2
+    return rbs, chunk, fc

@@ -27,13 +27,34 @@ import numpy as np
 
 
 @jax.jit
-def gamma_exact(rows: jax.Array, cols: jax.Array, sigma: float) -> jax.Array:
-    """Literal Eq. 4 over all nnz^2 pairs. Use only for small matrices."""
-    if rows.shape[0] == 0:                   # empty pattern: no mass, not NaN
-        return jnp.float32(0.0)
+def _gamma_exact_dense(rows: jax.Array, cols: jax.Array,
+                       sigma: float) -> jax.Array:
     p = jnp.stack([rows, cols], axis=1).astype(jnp.float32)
     d2 = jnp.sum((p[:, None, :] - p[None, :, :]) ** 2, axis=-1)
     return jnp.sum(jnp.exp(-d2 / sigma**2)) / (sigma * rows.shape[0])
+
+
+def gamma_exact(rows: jax.Array, cols: jax.Array, sigma: float,
+                bn: int = 256,
+                tiled: "bool | None" = None) -> jax.Array:
+    """Exact Eq. 4 over all nnz^2 pairs.
+
+    Small patterns evaluate the literal dense (nnz, nnz) sum; large ones
+    route to the tiled Pallas kernel (``kernels.ops.gamma_exact``), whose
+    working set is O(bn^2) instead of O(nnz^2). ``tiled`` forces the
+    choice (None = auto at nnz > 2048; auto never picks the kernel for a
+    traced ``sigma``, which the kernel needs static).
+    """
+    nnz = rows.shape[0]
+    if nnz == 0:                             # empty pattern: no mass, not NaN
+        return jnp.float32(0.0)
+    sigma_static = not isinstance(sigma, jax.core.Tracer)
+    if tiled is None:
+        tiled = nnz > 2048 and sigma_static
+    if tiled:
+        from repro.kernels.ops import gamma_exact as _tiled_gamma
+        return _tiled_gamma(rows, cols, float(sigma), bn)
+    return _gamma_exact_dense(rows, cols, sigma)
 
 
 def _gauss_stencil(sigma: float, cell: float, radius_cells: int) -> jax.Array:

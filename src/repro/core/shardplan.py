@@ -49,6 +49,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core import costmodel
 from repro.core.blocksparse import BSR
 
 __all__ = ["ShardSpec", "ShardedPlan", "analyze_shards", "shard",
@@ -153,7 +154,7 @@ def analyze_shards(bsr: BSR, n_dev: int, axis: str = "data"
     halo_lo, halo_hi = max(halo_lo, 0), max(halo_hi, 0)
     hot = (np.unique(np.concatenate(far)) if far else no_hot
            ).astype(np.int64)
-    cost_halo = halo_lo + halo_hi + 2 * len(hot)
+    blocks_halo = halo_lo + halo_hi + 2 * len(hot)
 
     # candidate 2: uncapped whole-shard ring hops (wide dense bands)
     span_lo = span_hi = 0
@@ -165,9 +166,15 @@ def analyze_shards(bsr: BSR, n_dev: int, axis: str = "data"
         span_hi = max(span_hi, int(cols.max()) - (r1 - 1))
     hops_lo, hops_hi = -(-span_lo // rb_per), -(-span_hi // rb_per)
     ring_ok = hops_lo + hops_hi < n_dev - 1
-    cost_ring = (hops_lo + hops_hi) * rb_per if ring_ok else None
+    blocks_ring = (hops_lo + hops_hi) * rb_per if ring_ok else None
 
-    cost_ag = (n_dev - 1) * rb_per
+    blocks_ag = (n_dev - 1) * rb_per
+    # all three candidates are priced in seconds on the configured
+    # interconnect by the shared analytic cost model (a monotone map of
+    # the block counts, so decisions match the historical block compare)
+    cost_halo = costmodel.exchange_cost(blocks_halo, bsr.bs)
+    cost_ring = costmodel.exchange_cost(blocks_ring, bsr.bs)
+    cost_ag = costmodel.exchange_cost(blocks_ag, bsr.bs)
     best = min(c for c in (cost_halo, cost_ring, cost_ag) if c is not None)
     if best == cost_halo and cost_halo < cost_ag:
         return ShardSpec(axis=axis, n_dev=n_dev, rb_per=rb_per,

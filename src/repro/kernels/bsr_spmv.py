@@ -7,9 +7,30 @@ accumulates the (bs, f) response tile. Column indices arrive via
 PrefetchScalarGridSpec so the index_map — not the kernel body — performs the
 indirection (the TPU analog of the paper's indirect block addressing).
 
-Grid: (n_rb, nbr) — row blocks outer, ELL slots inner; the y tile is
-accumulated across the inner dimension and written once.
-Padding slots carry zero tiles, so no masking is needed in the body.
+Two kernels live here:
+
+* ``bsr_spmv`` — the original single-plan kernel. Grid (n_rb, nbr); the
+  index_map performs the segment indirection and the y tile accumulates
+  across the inner ELL dimension.
+* ``bsr_spmv_batched`` — the batch-grid kernel. Grid (batch member,
+  row-superblock, feature tile, ELL slot-chunk); each step keeps the whole
+  member's charge block resident in VMEM and performs the column-index
+  gather *inside the body* (``pl.ds`` off the resident block), fusing
+  gather with the tile contraction so segments and value tiles never
+  round-trip through HBM between gather and dot. Several row blocks ride
+  one grid step (row-superblocking) and multi-feature charges tile over
+  the f axis. B=1 degenerates to the single-plan case.
+
+Bit-parity contract (gates the CPU-container acceptance): the contraction
+per (row block, feature tile) mirrors the XLA ``bsr_ml`` batched backend —
+``jax.lax.batch_matmul`` over the FULL ELL width summed over slots (f>1),
+or the elementwise broadcast-sum form (f==1). Splitting the slot reduction
+would reassociate the float sum, so the slot-chunk is always the full ELL
+width; memory pressure is relieved via the feature tile instead.
+
+Padding slots carry zero tiles, so no masking is needed in the body; the
+same holds for rows padded up to the row-superblock and zero feature
+columns padded up to the feature tile.
 """
 from __future__ import annotations
 
@@ -58,3 +79,92 @@ def bsr_spmv(vals: jax.Array, col_idx: jax.Array, x: jax.Array,
         out_shape=jax.ShapeDtypeStruct((n_rb * bs, f), jnp.float32),
         interpret=interpret,
     )(col_idx, vals, x)
+
+
+def _batch_kernel(idx_ref, vals_ref, x_ref, y_ref, *, rbs, chunk, bs, f1):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    t = pl.program_id(3)
+
+    @pl.when(t == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    for r in range(rbs):
+        # fused gather: cut every slot's charge segment straight out of the
+        # VMEM-resident member charge block (scalar-prefetched indices)
+        segs = jnp.stack([
+            x_ref[0, pl.ds(idx_ref[b, i * rbs + r, t * chunk + c] * bs, bs), :]
+            for c in range(chunk)])                        # (chunk, bs, fc)
+        v = vals_ref[0, r]                                 # (chunk, bs, bs)
+        if f1:
+            # mirror spmv_bsr_ml_batched's elementwise f==1 path bit-for-bit
+            y = (v * segs[:, None, :, 0]).sum(axis=(-3, -1))[:, None]
+        else:
+            y = jax.lax.batch_matmul(v, segs).sum(axis=0)  # (bs, fc)
+        y_ref[0, pl.ds(r * bs, bs), :] += y
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("rbs", "chunk", "fc", "interpret"))
+def bsr_spmv_batched(vals: jax.Array, col_idx: jax.Array, xs: jax.Array,
+                     *, rbs: int = 1, chunk: int | None = None,
+                     fc: int | None = None,
+                     interpret: bool = False) -> jax.Array:
+    """Batch-grid ELL-BSR SpMV/SpMM over stacked same-spec members.
+
+    vals (B, n_rb, nbr, bs, bs); col_idx (B, n_rb, nbr) int32;
+    xs (B, n, f) or (B, n) with n a whole number of column blocks.
+    Returns (B, n_rb*bs, f) [or (B, n_rb*bs) for 1-D charges].
+
+    ``rbs`` row blocks share one grid step; charges tile to ``fc``
+    columns; ``chunk`` must stay the full ELL width for bit parity with
+    the XLA backends (see module docstring).
+    """
+    B, n_rb, nbr, bs, _ = vals.shape
+    squeeze = xs.ndim == 2
+    if squeeze:
+        xs = xs[..., None]
+    n = xs.shape[1]
+    f = xs.shape[-1]
+    f1 = f == 1
+    chunk = chunk or max(nbr, 1)
+    fc = fc or f
+
+    pad_rb = (-n_rb) % rbs
+    if pad_rb:   # zero tiles gathering column block 0 contribute nothing
+        vals = jnp.pad(vals, ((0, 0), (0, pad_rb), (0, 0), (0, 0), (0, 0)))
+        col_idx = jnp.pad(col_idx, ((0, 0), (0, pad_rb), (0, 0)))
+    n_rb_p = n_rb + pad_rb
+    pad_f = (-f) % fc
+    if pad_f:    # zero feature columns are bitwise inert per output column
+        xs = jnp.pad(xs, ((0, 0), (0, 0), (0, pad_f)))
+    f_p = f + pad_f
+
+    n_sb = n_rb_p // rbs
+    n_ch = nbr // chunk
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, n_sb, f_p // fc, n_ch),
+        in_specs=[
+            pl.BlockSpec((1, rbs, chunk, bs, bs),
+                         lambda b, i, fi, t, idx: (b, i, t, 0, 0)),
+            # whole member charge block resident; refetched only when the
+            # batch member or feature tile changes
+            pl.BlockSpec((1, n, fc), lambda b, i, fi, t, idx: (b, 0, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, rbs * bs, fc),
+                               lambda b, i, fi, t, idx: (b, i, fi)),
+    )
+    kern = functools.partial(_batch_kernel, rbs=rbs, chunk=chunk, bs=bs,
+                             f1=f1)
+    y = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, n_rb_p * bs, f_p), jnp.float32),
+        interpret=interpret,
+    )(col_idx, vals, xs)
+    y = y[:, :, :f]
+    if pad_rb:
+        y = y[:, :n_rb * bs]
+    return y[..., 0] if squeeze else y

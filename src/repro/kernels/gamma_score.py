@@ -5,6 +5,17 @@ over the nonzero coordinates. The O(nnz^2) sum is tiled: grid step (i, j)
 stages two (bn, 2) coordinate tiles into VMEM and accumulates the block's
 pairwise Gaussian sum into a scalar accumulator (TPU grids execute
 sequentially, so the (1, 1) output tile is a legal accumulator).
+
+Production features over the bare tiled sum:
+
+* ``weights`` — per-coordinate weights; each pair contributes
+  ``w_p * w_q * exp(...)``. Zero-weight entries let callers pad the
+  coordinate list to a tile multiple (or carry tombstoned streaming slots)
+  without the far-sentinel hack and without perturbing the sum at all.
+* ``symmetric=True`` — the Gaussian pair term is symmetric in (p, q), so
+  the strict upper triangle of the tile grid is skipped and off-diagonal
+  tiles are counted twice: ~2x fewer tiles staged for the same sum (the
+  diagonal tile block still evaluates its full bn^2 pairs).
 """
 from __future__ import annotations
 
@@ -15,7 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(p_ref, q_ref, o_ref, *, sigma):
+def _kernel(p_ref, q_ref, wp_ref, wq_ref, o_ref, *, sigma, symmetric):
     i = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -23,28 +34,48 @@ def _kernel(p_ref, q_ref, o_ref, *, sigma):
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    a = p_ref[...].astype(jnp.float32)           # (bn, 2)
-    b = q_ref[...].astype(jnp.float32)           # (bn, 2)
-    d2 = ((a[:, None, :] - b[None, :, :]) ** 2).sum(-1)
-    o_ref[0, 0] += jnp.sum(jnp.exp(-d2 / (sigma * sigma)))
+    def tile_sum():
+        a = p_ref[...].astype(jnp.float32)           # (bn, 2)
+        b = q_ref[...].astype(jnp.float32)           # (bn, 2)
+        w = wp_ref[:, 0][:, None] * wq_ref[:, 0][None, :]
+        d2 = ((a[:, None, :] - b[None, :, :]) ** 2).sum(-1)
+        return jnp.sum(w * jnp.exp(-d2 / (sigma * sigma)))
+
+    if symmetric:
+        @pl.when(j <= i)
+        def _accum():
+            factor = jnp.where(j < i, 2.0, 1.0).astype(jnp.float32)
+            o_ref[0, 0] += factor * tile_sum()
+    else:
+        o_ref[0, 0] += tile_sum()
 
 
-@functools.partial(jax.jit, static_argnames=("sigma", "bn", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("sigma", "bn", "symmetric", "interpret"))
 def gamma_pairs(coords: jax.Array, sigma: float, bn: int = 256,
-                *, interpret: bool = False) -> jax.Array:
-    """coords (nnz, 2) float32 (row, col) of nonzeros, padded to bn multiple
-    with +inf rows (their pair terms vanish). Returns the raw pairwise sum;
-    divide by sigma*nnz for the gamma score."""
+                *, weights: jax.Array | None = None,
+                symmetric: bool = False,
+                interpret: bool = False) -> jax.Array:
+    """coords (nnz, 2) float32 (row, col) of nonzeros, padded to a bn
+    multiple — either with far sentinel rows (their pair terms vanish; the
+    legacy convention) or with any rows carrying zero ``weights``. Returns
+    the raw (weighted) pairwise sum; divide by sigma*nnz (or the weight
+    mass) for the gamma score."""
     n = coords.shape[0]
     nb = n // bn
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32)
+    w2 = weights.astype(jnp.float32)[:, None]        # (n, 1) for tiling
     return pl.pallas_call(
-        functools.partial(_kernel, sigma=sigma),
+        functools.partial(_kernel, sigma=sigma, symmetric=symmetric),
         grid=(nb, nb),
         in_specs=[
             pl.BlockSpec((bn, 2), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, 2), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
         interpret=interpret,
-    )(coords, coords)[0, 0]
+    )(coords, coords, w2, w2)[0, 0]

@@ -3,30 +3,57 @@
 On CPU (this container) the kernels execute with interpret=True — the kernel
 body runs in Python for correctness validation; on TPU they compile to
 Mosaic. The wrappers handle batching (vmap over batch/head slices) and
-padding.
+padding; the batch-grid SpMV sizes its tiles from the analytic cost
+model's hardware config (``core.costmodel.choose_tiles``).
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.registry import register_backend
+from repro.core.costmodel import choose_tiles
+from repro.core.registry import register_backend, register_batched_backend
 from repro.kernels import block_attention as _ba
 from repro.kernels import bsr_spmv as _bsr
 from repro.kernels import gamma_score as _gs
 
+# traces of the batched pallas backend — one per compiled kernel, since the
+# backend body only runs while `_batch_apply_kernel` is being traced
+PALLAS_TRACE_COUNTS = {"batched": 0}
+
 
 def _interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
+        return True
     return jax.default_backend() == "cpu"
 
 
 @register_backend("pallas")
 def _pallas_backend(plan, x: jax.Array, **_kw) -> jax.Array:
-    """InteractionPlan SpMV via the Pallas MXU kernel."""
+    """InteractionPlan SpMV via the Pallas MXU kernel (batch-grid kernel
+    at B=1). Handles (n,) and (n, f) charges and capacity-padded plans —
+    dead-slot rows carry zero tiles and stay zero in the output."""
     b = plan.bsr
-    return bsr_spmv(b.vals, b.col_idx, x, plan.n)
+    y = bsr_spmv_batched(b.vals[None], b.col_idx[None], x[None],
+                         shape_key=plan.spec.shape_key)[0]
+    return y[:plan.n]
+
+
+_pallas_backend.interpret_only = _interpret
+
+
+@register_batched_backend("pallas")
+def _pallas_batched(spec, data, xs: jax.Array) -> jax.Array:
+    """PlanBatch SpMV: the whole batch in ONE batch-grid kernel."""
+    PALLAS_TRACE_COUNTS["batched"] += 1
+    return bsr_spmv_batched(data.vals, data.col_idx, xs,
+                            shape_key=spec.shape_key)
+
+
+_pallas_batched.interpret_only = _interpret
 
 
 def bsr_spmv(vals: jax.Array, col_idx: jax.Array, x: jax.Array,
@@ -44,6 +71,40 @@ def bsr_spmv(vals: jax.Array, col_idx: jax.Array, x: jax.Array,
     if n is not None:
         y = y[:n]
     return y[:, 0] if squeeze else y
+
+
+def bsr_spmv_batched(vals: jax.Array, col_idx: jax.Array, xs: jax.Array,
+                     shape_key: tuple | None = None) -> jax.Array:
+    """Batched ELL-BSR SpMV/SpMM via the batch-grid kernel.
+
+    vals (B, n_rb, nbr, bs, bs); xs (B, n) or (B, n, f); returns the same
+    leading charge length as the XLA batched backends (sliced to n).
+    Tile sizes (row-superblock, slot-chunk, feature tile) come from the
+    hardware config via ``costmodel.choose_tiles``.
+    """
+    B, n_rb, nbr, bs, _ = vals.shape
+    squeeze = xs.ndim == 2
+    if squeeze:
+        xs = xs[..., None]
+    n = xs.shape[1]
+    f = xs.shape[-1]
+    # pad charges out to the plan's full column-block range (capacity may
+    # exceed the live charge length on capacity-padded plans)
+    n_cb = max((n + bs - 1) // bs,
+               shape_key[4] if shape_key is not None else 0)
+    pad = n_cb * bs - n
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+    if shape_key is None:
+        shape_key = (n, bs, 8, n_rb, n_cb, nbr)
+    rbs, chunk, fc = choose_tiles(shape_key, f)
+    y = _bsr.bsr_spmv_batched(vals.astype(jnp.float32),
+                              col_idx.astype(jnp.int32),
+                              xs.astype(jnp.float32),
+                              rbs=rbs, chunk=chunk, fc=fc,
+                              interpret=_interpret())
+    y = y[:, :n]
+    return y[..., 0] if squeeze else y
 
 
 def block_attention(q, k_sorted, v_sorted, kpos, qpos, idx, *, bq, bk,
@@ -73,28 +134,41 @@ def block_attention(q, k_sorted, v_sorted, kpos, qpos, idx, *, bq, bk,
 
 
 def gamma_exact(rows: jax.Array, cols: jax.Array, sigma: float,
-                bn: int = 256) -> jax.Array:
-    """Exact Eq. 4 via the tiled Pallas kernel; pads with far-away points."""
+                bn: int = 256,
+                weights: jax.Array | None = None) -> jax.Array:
+    """Exact Eq. 4 via the tiled Pallas kernel.
+
+    Pads the coordinate list to a tile multiple with zero-weight entries
+    (exactly inert — no far-sentinel correction) and exploits pair
+    symmetry to skip the upper tile triangle. ``weights`` supports
+    weighted patterns (streaming tombstones carry weight 0)."""
     nnz = rows.shape[0]
     coords = jnp.stack([rows, cols], 1).astype(jnp.float32)
+    w = (jnp.ones((nnz,), jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
     pad = (-nnz) % bn
     if pad:
-        far = jnp.full((pad, 2), 1e9, jnp.float32) \
-            + jnp.arange(pad, dtype=jnp.float32)[:, None] * 1e6
-        coords = jnp.concatenate([coords, far])
-    total = _gs.gamma_pairs(coords, sigma, bn, interpret=_interpret())
-    total = total - pad  # each far point contributes exactly its self-pair
-    return total / (sigma * nnz)
+        coords = jnp.concatenate([coords, jnp.zeros((pad, 2), jnp.float32)])
+        w = jnp.concatenate([w, jnp.zeros((pad,), jnp.float32)])
+    total = _gs.gamma_pairs(coords, sigma, bn, weights=w, symmetric=True,
+                            interpret=_interpret())
+    denom = jnp.float32(nnz) if weights is None else jnp.sum(w)
+    return total / (sigma * denom)
 
 
 def tsne_force(p_vals: jax.Array, col_idx: jax.Array, y: jax.Array,
                n: int | None = None) -> jax.Array:
-    """Blockwise t-SNE attractive force via the Pallas kernel."""
+    """Blockwise t-SNE attractive force via the Pallas kernel (fused
+    gather, row-superblocked per the hardware config)."""
     from repro.kernels import tsne_force as _tf
     n_rb, nbr, bs, _ = p_vals.shape
     pad = n_rb * bs - y.shape[0]
     yp = jnp.pad(y, ((0, max(pad, 0)), (0, 0))) if pad > 0 else y
+    n_cb = yp.shape[0] // bs
+    rbs, _, _ = choose_tiles((yp.shape[0], bs, 8, n_rb, n_cb, nbr),
+                             f=y.shape[-1])
     f = _tf.tsne_force(p_vals.astype(jnp.float32),
                        col_idx.astype(jnp.int32),
-                       yp.astype(jnp.float32), interpret=_interpret())
+                       yp.astype(jnp.float32), rbs=rbs,
+                       interpret=_interpret())
     return f[:n] if n is not None else f

@@ -2,12 +2,16 @@
 
 The paper's iterative hot loop: F_i = sum_j p_ij q_ij (y_i - y_j) with
 q_ij = 1/(1 + |y_i - y_j|^2) over the kNN pattern. Values q are recomputed
-DENSE per kept tile from the current embedding — per grid step the kernel
-stages one (bs, bs) P tile, the target segment and the scalar-prefetched
-source segment of y into VMEM, forms the (bs, bs, d) pairwise differences,
-and accumulates the (bs, d) force tile. This is the TPU-native replacement
-for the per-edge gather loop (DESIGN.md §2): indirect addressing moves to
-the index_map, arithmetic is dense.
+DENSE per kept tile from the current embedding — the TPU-native
+replacement for the per-edge gather loop (DESIGN.md §2).
+
+Same batch-grid shape as ``bsr_spmv.bsr_spmv_batched``: the whole (padded)
+embedding stays resident in VMEM and the kernel body cuts both the target
+and the scalar-prefetched source segments straight out of it with ``pl.ds``
+(fused gather — segments never round-trip HBM between gather and the dense
+pairwise arithmetic), while ``rbs`` row blocks ride one grid step to
+amortize grid overhead. Rows padded up to the superblock carry zero P
+tiles, so their force contributions vanish.
 """
 from __future__ import annotations
 
@@ -19,45 +23,56 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(idx_ref, p_ref, yt_ref, ys_ref, f_ref):
+def _kernel(idx_ref, p_ref, y_ref, f_ref, *, rbs, bs):
+    i = pl.program_id(0)
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
         f_ref[...] = jnp.zeros_like(f_ref)
 
-    p = p_ref[0, 0].astype(jnp.float32)           # (bs_t, bs_s)
-    yt = yt_ref[...].astype(jnp.float32)          # (bs_t, d)
-    ys = ys_ref[...].astype(jnp.float32)          # (bs_s, d)
-    diff = yt[:, None, :] - ys[None, :, :]        # (bs_t, bs_s, d)
-    q = 1.0 / (1.0 + jnp.sum(diff * diff, axis=-1))
-    w = p * q
-    f_ref[...] += jnp.einsum("ts,tsd->td", w, diff,
-                             preferred_element_type=jnp.float32)
+    for r in range(rbs):
+        p = p_ref[r, 0].astype(jnp.float32)           # (bs, bs)
+        rb = i * rbs + r
+        yt = y_ref[pl.ds(rb * bs, bs), :].astype(jnp.float32)
+        ys = y_ref[pl.ds(idx_ref[rb, j] * bs, bs), :].astype(jnp.float32)
+        diff = yt[:, None, :] - ys[None, :, :]        # (bs, bs, d)
+        q = 1.0 / (1.0 + jnp.sum(diff * diff, axis=-1))
+        w = p * q
+        f_ref[pl.ds(r * bs, bs), :] += jnp.einsum(
+            "ts,tsd->td", w, diff, preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("rbs", "interpret"))
 def tsne_force(p_vals: jax.Array, col_idx: jax.Array, y: jax.Array,
-               *, interpret: bool = False) -> jax.Array:
+               *, rbs: int = 1, interpret: bool = False) -> jax.Array:
     """p_vals (n_rb, nbr, bs, bs); col_idx (n_rb, nbr) int32;
     y (n_cb*bs, d) current embedding (padded to block multiple).
-    Returns F (n_rb*bs, d)."""
+    Returns F (n_rb*bs, d). ``rbs`` row blocks share one grid step."""
     n_rb, nbr, bs, _ = p_vals.shape
-    d = y.shape[-1]
+    n, d = y.shape
+
+    pad_rb = (-n_rb) % rbs
+    if pad_rb:   # zero P tiles: padded rows contribute zero force
+        p_vals = jnp.pad(p_vals, ((0, pad_rb), (0, 0), (0, 0), (0, 0)))
+        col_idx = jnp.pad(col_idx, ((0, pad_rb), (0, 0)))
+    n_rb_p = n_rb + pad_rb
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(n_rb, nbr),
+        grid=(n_rb_p // rbs, nbr),
         in_specs=[
-            pl.BlockSpec((1, 1, bs, bs), lambda i, j, idx: (i, j, 0, 0)),
-            pl.BlockSpec((bs, d), lambda i, j, idx: (i, 0)),
-            pl.BlockSpec((bs, d), lambda i, j, idx: (idx[i, j], 0)),
+            pl.BlockSpec((rbs, 1, bs, bs), lambda i, j, idx: (i, j, 0, 0)),
+            # the whole embedding stays resident; both segments are cut
+            # from it inside the body
+            pl.BlockSpec((n, d), lambda i, j, idx: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((bs, d), lambda i, j, idx: (i, 0)),
+        out_specs=pl.BlockSpec((rbs * bs, d), lambda i, j, idx: (i, 0)),
     )
-    return pl.pallas_call(
-        _kernel,
+    f = pl.pallas_call(
+        functools.partial(_kernel, rbs=rbs, bs=bs),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n_rb * bs, d), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n_rb_p * bs, d), jnp.float32),
         interpret=interpret,
-    )(col_idx, p_vals, y, y)
+    )(col_idx, p_vals, y)
+    return f[:n_rb * bs]

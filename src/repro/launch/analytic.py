@@ -18,12 +18,16 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.configs.base import SHAPES, ModelConfig, get_config
+from repro.core.costmodel import get_hardware
 from repro.models import model_api
 
-# TPU v5e-like constants (per chip), from the brief
-PEAK_FLOPS = 197e12          # bf16
-HBM_BW = 819e9               # bytes/s
-LINK_BW = 50e9               # bytes/s per ICI link
+# per-chip constants from the knob-based hardware config (defaults are the
+# TPU v5e-like numbers from the brief; override with REPRO_HW_CONFIG /
+# costmodel.set_hardware before import)
+_HW = get_hardware()
+PEAK_FLOPS = _HW.peak_flops  # bf16
+HBM_BW = _HW.hbm_bw          # bytes/s
+LINK_BW = _HW.link_bw        # bytes/s per ICI link
 
 
 def _attn_flops_per_layer(cfg: ModelConfig, s: int, backend: str,

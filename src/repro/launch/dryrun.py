@@ -163,12 +163,17 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              expert_parallel: bool = False,
              param_dtype: str | None = None,
              remat: str | None = None) -> dict:
+    from repro.core.costmodel import make_report
+
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     t0 = time.time()
-    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
-           "status": "error", "layout": layout, "ep": expert_parallel,
-           "microbatch": microbatch, "param_dtype": param_dtype,
-           "remat": remat}
+    # repro.cost/v1 envelope merged flat (schema/kind/hardware keys) so
+    # readers keyed on rec["status"]/rec["arch"] keep working unchanged
+    rec = make_report("dryrun", {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "error", "layout": layout, "ep": expert_parallel,
+        "microbatch": microbatch, "param_dtype": param_dtype,
+        "remat": remat})
     try:
         fn, args, mesh, backend = build_cell(arch, shape_name, multi_pod,
                                              backend, microbatch, layout,

@@ -22,6 +22,7 @@ import json
 from pathlib import Path
 
 from repro.configs import SHAPES, get_config
+from repro.core.costmodel import make_report
 from repro.launch.analytic import (HBM_BW, LINK_BW, PEAK_FLOPS,
                                    analytic_collectives, cell_model,
                                    n_active_params, n_params)
@@ -114,8 +115,11 @@ def main():
         rows.append(analyse(rec))
 
     rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    RESULTS.mkdir(parents=True, exist_ok=True)
     out = RESULTS / (f"roofline{('_' + args.tag) if args.tag else ''}.json")
-    out.write_text(json.dumps(rows, indent=2))
+    # same repro.cost/v1 envelope as the autotune cost model reports
+    out.write_text(json.dumps(make_report("roofline", {"rows": rows}),
+                              indent=2))
 
     hdr = (f"{'arch':28s} {'shape':12s} {'mesh':10s} {'backend':9s} "
            f"{'compute':>9s} {'memory':>9s} {'collect':>9s} {'dom':>7s} "

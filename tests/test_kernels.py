@@ -4,10 +4,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import api
 from repro.core.blocksparse import random_bsr
+from repro.core.interact import spmv_bsr_ml_batched
 from repro.kernels import ops, ref
 from repro.kernels.block_attention import block_attention as ba_kernel
 from repro.kernels.bsr_spmv import bsr_spmv as bsr_kernel
+from repro.kernels.bsr_spmv import bsr_spmv_batched as batch_kernel
 from repro.kernels.gamma_score import gamma_pairs
 
 
@@ -92,6 +95,96 @@ def test_gamma_pairs_shapes(nnz, bn):
     got = float(gamma_pairs(padded, 7.0, bn, interpret=True)) - pad
     want = float(ref.gamma_pairs_ref(coords, 7.0))
     assert got == pytest.approx(want, rel=1e-4)
+
+
+# -- batch-grid kernel: edge shapes, all bit-matching bsr_ml batched --------
+
+
+def _random_batch(B, n_cb, bs, nbr, seed=0):
+    vals, idxs = [], []
+    for b in range(B):
+        bsr = random_bsr(seed + b, n_cb * bs, bs, nbr)
+        vals.append(np.asarray(bsr.vals))
+        idxs.append(np.asarray(bsr.col_idx))
+    return (jnp.asarray(np.stack(vals), jnp.float32),
+            jnp.asarray(np.stack(idxs), jnp.int32))
+
+
+@pytest.mark.parametrize("B,n_cb,bs,nbr,f,rbs,fc", [
+    (1, 8, 16, 4, 1, 1, None),     # degenerate single member
+    (3, 8, 16, 4, 1, 4, None),     # row-superblocked, scalar charges
+    (3, 8, 16, 4, 3, 2, 2),        # f not a multiple of the feature tile
+    (2, 8, 16, 4, 5, 3, 4),        # rbs not dividing n_rb (row padding)
+])
+def test_batch_kernel_bit_matches_bsr_ml(B, n_cb, bs, nbr, f, rbs, fc):
+    vals, col_idx = _random_batch(B, n_cb, bs, nbr)
+    rng = np.random.default_rng(9)
+    shape = (B, n_cb * bs) if f == 1 else (B, n_cb * bs, f)
+    xs = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    got = batch_kernel(vals, col_idx, xs, rbs=rbs, fc=fc, interpret=True)
+    want = spmv_bsr_ml_batched(vals, col_idx, xs, 8)
+    assert got.dtype == want.dtype and got.shape == want.shape
+    assert bool(jnp.array_equal(got, want))      # bitwise, not approx
+
+
+def _holey_batch():
+    """Pow2-padded capacity with interleaved streaming holes and ELL
+    padding slots (ell_slack widens max_nbr beyond the live columns)."""
+    rng = np.random.default_rng(3)
+    xs = [rng.standard_normal((120, 8)).astype(np.float32)
+          for _ in range(3)]
+    pb = api.build_plan_batch(xs, k=8, bs=16, sb=4, backend="bsr",
+                              ell_slack=4, capacity=128)
+    kills = [rng.choice(120, 17, replace=False) for _ in range(3)]
+    return pb.delete(kills)
+
+
+def test_batch_backend_holes_and_padding_bit_match():
+    pb = _holey_batch()
+    rng = np.random.default_rng(4)
+    for shape in [(pb.batch, pb.capacity), (pb.batch, pb.capacity, 3)]:
+        xs = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        want = api._batch_apply_kernel(pb.spec, pb.data, xs, "bsr_ml",
+                                       "apply")
+        got = api._batch_apply_kernel(pb.spec, pb.data, xs, "pallas",
+                                      "apply")
+        assert bool(jnp.array_equal(got, want))
+
+
+def test_single_plan_pallas_dead_slots_stay_zero():
+    """The pallas single-plan backend handles capacity-padded plans with
+    streaming holes: dead-slot rows carry zero tiles, so their output rows
+    must be exactly zero (and live rows must match the bsr path)."""
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((120, 8)).astype(np.float32)
+    plan = api.build_plan(jnp.asarray(x), k=8, bs=16, sb=4, backend="bsr",
+                          capacity=128)
+    plan = plan.delete(rng.choice(120, 13, replace=False))
+    for shape in [(plan.n,), (plan.n, 4)]:
+        q = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        y_pl = np.asarray(plan.apply(q, backend="pallas"))
+        y_ref = np.asarray(plan.apply(q, backend="bsr"))
+        np.testing.assert_allclose(y_pl, y_ref, rtol=1e-5, atol=1e-5)
+        dead = ~plan.permute(plan.alive)
+        assert dead.any()
+        assert not np.any(y_pl[dead])            # exactly zero, no residue
+
+
+def test_batched_pallas_64_members_one_kernel():
+    """64-member PlanBatch matvec: ONE compiled kernel (trace-counted) and
+    bit-identical to the bsr_ml batched backend."""
+    rng = np.random.default_rng(6)
+    xs = [rng.standard_normal((64, 8)).astype(np.float32)
+          for _ in range(64)]
+    pb = api.build_plan_batch(xs, k=6, bs=16, sb=4, backend="bsr")
+    x = jnp.asarray(rng.standard_normal((64, pb.capacity)), jnp.float32)
+    ops.PALLAS_TRACE_COUNTS["batched"] = 0
+    got = pb.matvec(x, backend="pallas")
+    for _ in range(2):                           # re-dispatch, no re-trace
+        got = pb.matvec(x, backend="pallas")
+    assert ops.PALLAS_TRACE_COUNTS["batched"] == 1
+    want = pb.matvec(x, backend="bsr_ml")
+    assert bool(jnp.array_equal(got, want))
 
 
 @pytest.mark.parametrize("n,bs,k,d", [(256, 16, 6, 2), (512, 32, 10, 3)])
