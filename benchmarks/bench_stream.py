@@ -17,12 +17,18 @@ churn shapes, mirroring bench_refresh's coherent/uniform split:
               fresh build's
   uniform     churn scattered over the whole cloud — the in-place tiers'
               worst case (every row-block holds some edge of some
-              deleted point, so the policy restripes the storage
-              wholesale); reported, not asserted
+              deleted point). Served through
+              ``core.doublebuf.DoubleBufferedPlan``: the in-place tiers
+              run on-device on the critical path while γ-rebuckets and
+              compactions build on a background thread and swap in
+              atomically (ISSUE 8 acceptance: mean per-step wall time
+              within ``GATE_UNIFORM``x of the coherent scenario's)
 
 Also asserted in-suite: after an explicit compact, matvec is bit-exact
-against a fresh build over the surviving points; and on a >=2-device
-mesh the same streamed sequence applied through ``ShardedPlan.update``
+against a fresh build over the surviving points; every background swap
+the uniform scenario adopted is bit-identical to re-running the same
+layout repair synchronously on its snapshot; and on a >=2-device mesh
+the same streamed sequence applied through ``ShardedPlan.update``
 matches the single-device result.
 
   PYTHONPATH=src:. python benchmarks/run.py --only bench_stream
@@ -37,6 +43,7 @@ import numpy as np
 
 from benchmarks.common import timeit
 from repro import api
+from repro.core.doublebuf import DoubleBufferedPlan
 
 N, K, D = 16384, 16, 32
 N_CLUSTERS = 16
@@ -45,6 +52,7 @@ STEPS = 12
 WARM = 6
 GATE_SPEEDUP = 3.0
 GATE_GAMMA = 0.05
+GATE_UNIFORM = 1.5     # uniform churn (double-buffered) vs coherent
 
 
 class _Stream:
@@ -143,6 +151,69 @@ def _stream_scenario(shape: str, steps: int, sharded_too: bool):
     return plan, sharded, t_step
 
 
+def _dbp_scenario(steps: int):
+    """Uniform churn served through the double buffer: in-place tiers on
+    the timed path, layout repairs (γ-rebucket / compact) on the daemon
+    thread.
+
+    The timed section of each step is the streaming update alone —
+    apples-to-apples with the coherent scenario, which also times
+    updates only. Steps right after a background build lands also pay
+    the swap adoption and the queued-update replay inside that timed
+    section, so the mean amortizes the whole maintenance protocol
+    except the background build itself. An *untimed* serving matvec
+    paces every step, so builds overlap real serving work and a
+    mid-build matvec exercises the frozen old generation.
+
+    Liveness is tracked from ``dbp.events`` — an ``("apply", ids)``
+    extends the known-live set with the inserted physical slots, a
+    compact ``("swap", ...)`` remaps it through ``compact_map`` — rather
+    than from the plan's alive mask, which is frozen at the build's
+    snapshot while a repair is in flight.
+    """
+    feed = _Stream(seed=2)
+    x0, _ = feed.initial()
+    # uniform churn scatters inserts over every row-block, so ELL slack —
+    # not locality — is what absorbs them: slack 12 keeps overflow
+    # restripes (synchronous by necessity) rare, and a looser γ tolerance
+    # amortizes background rebuckets over several steps instead of
+    # re-arming one per applied update
+    plan = api.build_plan(x0, k=K, bs=32, sb=8, backend="bsr",
+                          ell_slack=12, gamma_tol=0.06,
+                          capacity=int(N * 1.125))
+    _ = plan.gamma                     # score once: arms the γ-drift guard
+    dbp = DoubleBufferedPlan(plan)
+    live = np.arange(N)
+    cursor = 0
+    m = int(N * CHURN)
+    counts = {"applied": 0, "queued": 0}
+
+    def step():
+        nonlocal live, cursor
+        kill = feed.rng.choice(live, m, replace=False)
+        xin = feed.arrivals(int(feed.rng.integers(0, N_CLUSTERS)), m)
+        t0 = time.perf_counter()
+        counts[dbp.update(insert=xin, delete=kill)] += 1
+        dt = time.perf_counter() - t0
+        # untimed serving tick: paces the loop while the build runs
+        xv = jnp.asarray(feed.rng.standard_normal(dbp.plan.n), jnp.float32)
+        jax.block_until_ready(dbp.matvec(xv))
+        live = np.setdiff1d(live, kill, assume_unique=False)
+        for ev in dbp.events[cursor:]:
+            if ev[0] == "apply" and ev[1] is not None:
+                live = np.concatenate([live, np.asarray(ev[1])])
+            elif ev[0] == "swap" and ev[2] is not None:
+                live = ev[2][live]     # compact renumbered the slots
+        cursor = len(dbp.events)
+        assert live.size and (live >= 0).all()
+        return dt
+
+    for _ in range(WARM):
+        step()
+    times = [step() for _ in range(steps)]
+    return dbp, float(np.mean(times)), counts
+
+
 def run(emit) -> None:
     rng = np.random.default_rng(1)
 
@@ -195,13 +266,40 @@ def run(emit) -> None:
     else:
         emit("bench_stream/sharded,skipped,reason=single_device")
 
-    # -- uniform churn: worst case, reported not asserted ------------------
-    plan_u, _, t_step_u = _stream_scenario("uniform", 6,
-                                           sharded_too=False)
+    # -- uniform churn through the double buffer ---------------------------
+    dbp, t_step_u, counts = _dbp_scenario(STEPS)
+    plan_u = dbp.flush()
+    if dbp.last_swap is None:          # quiet run: force one compact swap
+        live_u = np.nonzero(plan_u.alive)[0]
+        dbp.update(delete=live_u[: int(0.30 * live_u.size)])
+        plan_u = dbp.flush()
     st_u = plan_u.refresh_stats
-    emit(f"bench_stream/uniform_n{N}_step,{t_step_u*1e6:.0f},"
-         f"speedup={t_build/t_step_u:.2f}x;restripes={st_u.restripes};"
-         f"rebuckets={st_u.rebuckets};compactions={st_u.compactions}")
+    n_swaps = sum(1 for e in dbp.events if e[0] == "swap")
+    emit(f"bench_stream/uniform_dbp_n{N}_step,{t_step_u*1e6:.0f},"
+         f"ratio_vs_coherent={t_step_u/t_step:.2f};"
+         f"applied={counts['applied']};queued={counts['queued']};"
+         f"generations={dbp.generation};swaps={n_swaps};"
+         f"rebuckets={st_u.rebuckets};compactions={st_u.compactions};"
+         f"restripes={st_u.restripes}")
+
+    # ISSUE 8 acceptance: with layout maintenance off the critical path,
+    # the worst-case churn shape stays within GATE_UNIFORM of coherent
+    assert t_step_u <= GATE_UNIFORM * t_step, (
+        f"uniform (double-buffered) step {t_step_u*1e3:.1f}ms exceeds "
+        f"{GATE_UNIFORM}x the coherent step {t_step*1e3:.1f}ms")
+
+    # swap bit-exactness: re-running the adopted repair synchronously on
+    # its snapshot must reproduce the swapped-in successor exactly
+    snapshot, successor, kind = dbp.last_swap
+    redo = api.apply_pending_layout(snapshot)
+    assert np.array_equal(np.asarray(successor.bsr.vals),
+                          np.asarray(redo.bsr.vals)), (
+        f"background {kind} swap diverged from the synchronous repair")
+    xu = jnp.asarray(rng.standard_normal(successor.n), jnp.float32)
+    assert np.array_equal(np.asarray(successor.matvec(xu)),
+                          np.asarray(redo.matvec(xu))), (
+        f"background {kind} swap matvec diverged")
+    emit(f"bench_stream/uniform_swap_{kind},,bit_exact=1")
 
 
 if __name__ == "__main__":

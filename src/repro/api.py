@@ -116,7 +116,8 @@ from repro.core.shardplan import ShardedPlan, shard  # noqa: F401
 __all__ = [
     "PlanConfig", "PlanSpec", "PlanData", "InteractionPlan", "PlanBatch",
     "RefreshStats", "build_plan", "build_plan_batch", "refresh_plan",
-    "update_plan", "cluster_order", "shard", "ShardedPlan", "ORDERINGS",
+    "update_plan", "apply_pending_layout", "cluster_order", "shard",
+    "ShardedPlan", "ORDERINGS",
     "register_backend", "register_batched_backend", "backend_names",
     "get_backend", "get_batched_backend",
 ]
@@ -328,6 +329,10 @@ class _PlanHost:
     last_patch_rb: Optional[np.ndarray] = None  # row-blocks the last patch
     #   tier touched (None once the ordering changed) — ShardedPlan.refresh
     #   patches exactly these shards instead of re-sharding
+    pending_layout: Optional[str] = None  # layout tier a defer_layout
+    #   update recorded instead of running ("rebucket" | "compact"):
+    #   apply_pending_layout runs it — typically on a background thread
+    #   behind core.doublebuf.DoubleBufferedPlan
     shard_cache: dict = dataclasses.field(default_factory=dict)
     # ^ ShardedPlan per (n_dev, axis) for the "dist" backend; entries are
     #   validated by BSR identity, so a refreshed lineage re-shards lazily
@@ -346,7 +351,21 @@ def _symmetrize_pattern(rows: np.ndarray, cols: np.ndarray,
 
 
 class InteractionPlan:
-    """Planner object owning ordering, storage, and compute backend."""
+    """Planner object owning ordering, storage, and compute backend.
+
+    One plan = the pipeline's artifacts over one point set: the
+    principal-axis embedding frame, the 2^d-tree ordering
+    (``pi``/``inv``), the γ profile score, and the two-level ELL-BSR
+    storage, plus the host-side state the lifecycle tiers maintain
+    (COO edges, validity mask, refresh telemetry). Compute
+    (:meth:`matvec`/:meth:`apply`) dispatches through the backend
+    registry (``docs/backends.md``); lifecycle methods
+    (:meth:`refresh`, :meth:`insert`/:meth:`delete`/:meth:`update`,
+    :meth:`compact`, :meth:`shard`) all return *new* plans — a plan is
+    never mutated, which is what makes double-buffered maintenance
+    (:class:`repro.core.doublebuf.DoubleBufferedPlan`) and async
+    checkpointing safe. ``docs/architecture.md`` maps the lifecycle.
+    """
 
     def __init__(self, config: PlanConfig, n: int, bsr: Optional[BSR],
                  pi: jax.Array, inv: jax.Array, host: _PlanHost):
@@ -504,10 +523,14 @@ class InteractionPlan:
 
     @property
     def tree(self) -> Optional[Tree]:
+        """The 2^d hierarchy the ordering was derived from (``None``
+        after streaming steps that invalidated it)."""
         return self.host.tree
 
     @property
     def embedding(self) -> Optional[np.ndarray]:
+        """Principal-axis embedding of the points (n, d) — the image the
+        tree ordered (§2.2)."""
         return self.host.embedding
 
     @property
@@ -574,10 +597,14 @@ class InteractionPlan:
 
     @property
     def fill(self) -> Optional[float]:
+        """Dense-entry fraction of the kept ELL tiles (``None`` for
+        profile-only plans)."""
         return self.bsr.fill if self.bsr is not None else None
 
     @property
     def stats(self) -> dict:
+        """One-call telemetry: live count, capacity, dead fraction, γ,
+        fill, kept tiles, ELL width, and the resolved backend."""
         kept = (int(np.asarray(self.bsr.nbr_mask).sum())
                 if self.bsr is not None else 0)
         return {"n": self.n_alive, "capacity": self.capacity,
@@ -729,6 +756,8 @@ class InteractionPlan:
 
     @property
     def refresh_stats(self) -> RefreshStats:
+        """Lifecycle counters for this plan lineage (patches, rebuckets,
+        restripes, compactions, last action...)."""
         return self.host.refresh
 
     def gamma_drift(self) -> float:
@@ -824,6 +853,16 @@ def build_plan(x, *, k: int = 16, ordering: str = "dual_tree", bs: int = 32,
     ``plan.insert`` claims them, so a known insert rate can be absorbed
     without any reallocation (§streaming; requires ``with_bsr=True``
     semantics to matter but is accepted for profile-only plans too).
+
+    Example:
+        >>> import numpy as np
+        >>> from repro import api
+        >>> x = np.random.default_rng(0).standard_normal((64, 8))
+        >>> plan = api.build_plan(x, k=4, bs=8, sb=2, backend="bsr")
+        >>> plan.n, plan.bsr.bs
+        (64, 8)
+        >>> plan.matvec(np.ones(64, np.float32)).shape
+        (64,)
     """
     if config is None:
         config = PlanConfig(k=k, ordering=ordering, bs=bs, sb=sb,
@@ -1413,13 +1452,9 @@ def _adopt_arrivals(r2, c2, v2, rn, cn, d2_fwd, host, x, pi, C,
 def _stream_rebucket(pi, codes, r2, c2, C: int):
     """Stable re-sort of the physical slots by their maintained Morton
     codes; relabels the cluster-space COO to match. Points (and holes)
-    with unchanged codes keep their relative order."""
-    old_pi = pi
-    order = np.argsort(codes[pi], kind="stable")
-    pi2 = pi[order]
-    inv2 = np.empty_like(pi2)
-    inv2[pi2] = np.arange(C)
-    return pi2, inv2, inv2[old_pi[r2]], inv2[old_pi[c2]]
+    with unchanged codes keep their relative order (see
+    :func:`repro.core.ordering.stream_rebucket`)."""
+    return ordering_mod.stream_rebucket(pi, codes, r2, c2, C)
 
 
 def _spread_holes(plan: InteractionPlan) -> InteractionPlan:
@@ -1544,7 +1579,8 @@ def _grow_plan(plan: InteractionPlan, capacity: int) -> InteractionPlan:
 
 
 def update_plan(plan: InteractionPlan, *, insert=None, delete=None,
-                policy: Optional[str] = None) -> InteractionPlan:
+                policy: Optional[str] = None,
+                defer_layout: bool = False) -> InteractionPlan:
     """One streaming step: delete ``delete`` (physical row indices), then
     insert ``insert`` (m, D) new points, escalating through the streaming
     tiers of the drift policy:
@@ -1586,6 +1622,39 @@ def update_plan(plan: InteractionPlan, *, insert=None, delete=None,
     new plan; the input is never mutated. The inserted points' physical
     row indices land in ``host.last_inserted_idx`` (see
     :meth:`InteractionPlan.insert`).
+
+    ``defer_layout=True`` keeps the step on the in-place tiers: the
+    *optional* layout repairs (γ-drift rebucket, debris/fill-drift
+    compaction) are detected but not run — the tier that fired is
+    recorded in ``host.pending_layout`` for :func:`apply_pending_layout`
+    to execute later, typically on a background thread behind
+    :class:`repro.core.doublebuf.DoubleBufferedPlan`. An ELL overflow
+    still restripes synchronously (the storage would otherwise be out of
+    sync with the maintained COO); an explicit ``policy="compact"`` also
+    still runs synchronously.
+
+    Example:
+        >>> import numpy as np
+        >>> from repro import api
+        >>> x = np.random.default_rng(0).standard_normal((64, 8))
+        >>> plan = api.build_plan(x, k=4, bs=8, sb=2, backend="bsr")
+        >>> p2 = api.update_plan(plan, delete=[3, 11])
+        >>> p2.n_alive, p2.refresh_stats.last_action
+        (62, 'tombstone')
+        >>> api.update_plan(p2, insert=x[:2]).n_alive   # reuses the holes
+        64
+        >>> p3 = api.update_plan(plan, delete=list(range(24)),
+        ...                      defer_layout=True)     # past max_dead_frac
+        >>> p3.host.pending_layout
+        'compact'
+        >>> api.apply_pending_layout(p3).n_alive
+        40
+
+    Raises:
+        ValueError: on a non-streamable plan, out-of-range/already-dead
+            delete indices, mis-shaped inserts, too few surviving points
+            (``<= k``), an unknown ``policy``, or an ELL overflow under a
+            forced in-place policy.
     """
     if policy not in (None, "auto", "append", "tombstone", "compact"):
         raise ValueError(f"unknown streaming policy {policy!r}; expected "
@@ -1776,10 +1845,14 @@ def update_plan(plan: InteractionPlan, *, insert=None, delete=None,
     peak = max(host.peak_alive or 0, prev_alive, n_alive_now)
     debris_frac = (peak - n_alive_now) / max(C, 1)
     force_inplace = policy in ("append", "tombstone")
+    pending = host.pending_layout if defer_layout else None
     if (policy == "compact" or debris_frac > cfg.max_dead_frac) \
             and not force_inplace:
-        return _compact_plan(plan, alive, x, stats, n_ins, n_del,
-                             inserted_phys, grows)
+        if defer_layout and policy != "compact":
+            pending = "compact"   # hygiene, not correctness: defer it
+        else:
+            return _compact_plan(plan, alive, x, stats, n_ins, n_del,
+                                 inserted_phys, grows)
 
     # γ-drift guard (armed once the lineage holds a γ reference — score
     # the plan once to opt in): displaced inserts decay the *ordering*,
@@ -1789,7 +1862,6 @@ def update_plan(plan: InteractionPlan, *, insert=None, delete=None,
     # bookkeeping is refreshed)
     g_now = None
     rebucketed = False
-    restriped_wide = False
     alive_sorted = alive[pi]
     if bsr is not None and n_ins and not force_inplace:
         ref = stats.gamma0
@@ -1808,6 +1880,13 @@ def update_plan(plan: InteractionPlan, *, insert=None, delete=None,
             rebucketed = measures.gamma_drift(ref, g_now) > cfg.gamma_tol
 
     gamma0_next = stats.gamma0
+    if rebucketed and (defer_layout or pending == "compact"):
+        # drift detected but the repair is deferred (a pending compact
+        # subsumes it — the rebuild re-derives the ordering anyway); the
+        # step stays on the in-place patch below, and the reference is
+        # kept so the guard keeps firing until the repair lands
+        pending = pending or "rebucket"
+        rebucketed = False
     if rebucketed:
         pi, inv, r2, c2 = _stream_rebucket(pi, codes, r2, c2, C)
         bsr = build_bsr(r2, c2, v2, C, bs=cfg.bs, sb=cfg.sb,
@@ -1817,28 +1896,25 @@ def update_plan(plan: InteractionPlan, *, insert=None, delete=None,
         g_now = _guard_gamma(r2, c2, alive[pi], host.sigma, C)
         gamma0_next = g_now
     elif bsr is not None and touched_parts and ins is not None:
+        # in-place: delete- and insert-touched blocks re-dressed in ONE
+        # patch pass (pure deletes were patched by tombstone_rows). The
+        # tiles are scattered on device, so even scattered churn touching
+        # most row-blocks stays cheaper than a restripe — and, unlike a
+        # restripe, keeps the ELL layout (and every compiled consumer)
+        # intact.
         touched_now = np.unique(np.concatenate(touched_parts))
-        if touched_now.size > bsr.n_rb // 2:
-            # scattered churn touching most row-blocks: re-dressing the
-            # storage outright from the host COO (one upload, vectorized)
-            # beats scattering a near-complete update through the device
-            # tile tensor — same restripe primitive the overflow path uses
-            bsr = build_bsr(r2, c2, v2, C, bs=cfg.bs, sb=cfg.sb,
-                            slack=cfg.ell_slack)
-            restriped_wide = True
-        else:
-            # in-place: delete- and insert-touched blocks re-dressed in
-            # ONE patch pass (pure deletes were patched by tombstone_rows)
-            try:
-                bsr = patch_bsr(bsr, r2, c2, v2, touched_now)
-            except ValueError:
-                overflow = True   # pinned ELL width exhausted
+        try:
+            bsr = patch_bsr(bsr, r2, c2, v2, touched_now)
+        except ValueError:
+            overflow = True   # pinned ELL width exhausted
 
-    restriped = restriped_wide or restriped_del
+    restriped = restriped_del
     if overflow:
         # restripe: rebuild the *storage only* from the maintained COO —
         # ordering, permutation, kNN rows all kept — re-deriving the ELL
-        # width (plus fresh slack) at build_bsr cost, not the pipeline's
+        # width (plus fresh slack) at build_bsr cost, not the pipeline's.
+        # Never deferred: the patch failed, so the stored tiles no longer
+        # match the maintained COO.
         if force_inplace:
             raise ValueError(
                 "streamed insert overflowed the pinned ELL width under "
@@ -1849,8 +1925,11 @@ def update_plan(plan: InteractionPlan, *, insert=None, delete=None,
         restriped = True
         if measures.fill_drift(stats.fill0, bsr.fill) > cfg.drift_tol:
             # the restriped layout shows real locality decay: escalate
-            return _compact_plan(plan, alive, x, stats, n_ins, n_del,
-                                 inserted_phys, grows)
+            if defer_layout:
+                pending = "compact"
+            else:
+                return _compact_plan(plan, alive, x, stats, n_ins, n_del,
+                                     inserted_phys, grows)
 
     layout_changed = rebucketed or restriped
     stats2 = dataclasses.replace(
@@ -1883,11 +1962,82 @@ def update_plan(plan: InteractionPlan, *, insert=None, delete=None,
         code_lo=code_lo if codes is not None else host.code_lo,
         code_hi=code_hi if codes is not None else host.code_hi,
         refresh=stats2, last_patch_rb=touched, peak_alive=peak,
-        last_inserted_idx=inserted_phys, compact_map=None, shard_cache={})
+        last_inserted_idx=inserted_phys, compact_map=None,
+        pending_layout=pending, shard_cache={})
     new_dev = C != plan.n or rebucketed
     pi_dev = jnp.asarray(pi, jnp.int32) if new_dev else plan.pi
     inv_dev = jnp.asarray(inv, jnp.int32) if new_dev else plan.inv
     return InteractionPlan(cfg, C, bsr, pi_dev, inv_dev, host2)
+
+
+def _apply_stream_rebucket(plan: InteractionPlan) -> InteractionPlan:
+    """Run the streaming rebucket tier on ``plan`` as it stands: stable
+    re-sort of the physical slots by their maintained Morton codes, then
+    a restripe of the storage under the repaired ordering. Pure function
+    of the input plan — safe to run on a snapshot from another thread."""
+    host, cfg, C = plan.host, plan.config, plan.n
+    stats = host.refresh
+    codes, lo, hi = _stream_codes(host, cfg)
+    r2, c2, v2 = host.coo
+    pi, inv, r2n, c2n = _stream_rebucket(host.pi, codes, r2, c2, C)
+    bsr = (build_bsr(r2n, c2n, v2, C, bs=cfg.bs, sb=cfg.sb,
+                     slack=cfg.ell_slack)
+           if plan.bsr is not None else None)
+    alive = np.ones(C, bool) if host.alive is None else host.alive
+    gamma0 = stats.gamma0
+    if gamma0 is not None:
+        # keep the guard armed with the repaired ordering's own score
+        gamma0 = _guard_gamma(r2n, c2n, alive[pi], host.sigma, C)
+    stats2 = dataclasses.replace(
+        stats, rebuckets=stats.rebuckets + 1, last_action="rebucket",
+        fill0=bsr.fill if bsr is not None else stats.fill0,
+        gamma0=gamma0)
+    host2 = dataclasses.replace(
+        host, pi=pi, inv=inv, coo=(r2n, c2n, v2), coo_dev=None,
+        gamma=None, tree=None, codes=codes, code_lo=lo, code_hi=hi,
+        refresh=stats2, last_patch_rb=None, pending_layout=None,
+        shard_cache={})
+    return InteractionPlan(cfg, C, bsr, jnp.asarray(pi, jnp.int32),
+                           jnp.asarray(inv, jnp.int32), host2)
+
+
+def apply_pending_layout(plan: InteractionPlan) -> InteractionPlan:
+    """Run the layout tier a ``defer_layout`` update recorded.
+
+    A streaming step under ``update_plan(..., defer_layout=True)`` stays
+    on the in-place tiers and records the layout repair it *would* have
+    escalated to in ``host.pending_layout``:
+
+      ``"rebucket"``  γ drifted past ``PlanConfig.gamma_tol`` — re-sort
+                      the slots by their maintained Morton codes and
+                      restripe the storage under the repaired ordering
+      ``"compact"``   tombstone debris or fill drift — full rebuild on
+                      the survivors, bit-identical to a fresh
+                      ``build_plan`` over them (``host.compact_map``
+                      maps old physical slots to new indices)
+
+    This function executes that repair synchronously and returns the
+    successor plan (the input is never mutated, and keeps serving valid
+    results while this runs — the double-buffer property
+    :class:`repro.core.doublebuf.DoubleBufferedPlan` builds on). A plan
+    with nothing pending is returned unchanged.
+
+    Returns:
+        The repaired :class:`InteractionPlan` (``pending_layout`` is
+        cleared), or ``plan`` itself when nothing was pending.
+    """
+    kind = plan.host.pending_layout
+    if kind is None:
+        return plan
+    if kind == "rebucket":
+        return _apply_stream_rebucket(plan)
+    if kind == "compact":
+        host, stats = plan.host, plan.host.refresh
+        alive = (np.ones(plan.n, bool) if host.alive is None
+                 else host.alive)
+        return _compact_plan(plan, alive, host.x, stats, 0, 0, None,
+                             stats.grows)
+    raise ValueError(f"unknown pending layout tier {kind!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -2097,10 +2247,12 @@ class PlanBatch:
 
     @property
     def batch(self) -> int:
+        """Number of stacked members (the leading data axis B)."""
         return len(self.hosts)
 
     @property
     def capacity(self) -> int:
+        """Shared physical capacity every member is padded to."""
         return self.spec.capacity
 
     @property
@@ -2112,6 +2264,8 @@ class PlanBatch:
 
     @property
     def stats(self) -> dict:
+        """Batch telemetry: size, shared layout, per-member live counts,
+        mean fill, and the tuned backend."""
         return {"batch": self.batch, "capacity": self.capacity,
                 "max_nbr": self.spec.max_nbr,
                 "n_alive": self.n_alive.tolist(),
@@ -2304,6 +2458,7 @@ class PlanBatch:
 
     @property
     def refresh_stats(self) -> List[RefreshStats]:
+        """Per-member lifecycle counters, in batch order."""
         return [h.refresh for h in self.hosts]
 
 
@@ -2329,6 +2484,18 @@ def build_plan_batch(xs, *, k: int = 16, ordering: str = "dual_tree",
     backend for the whole batch on first use, probing the batched kernel
     itself (memoized structurally, so spec-identical batches never
     re-probe).
+
+    Example:
+        >>> import numpy as np
+        >>> from repro import api
+        >>> rng = np.random.default_rng(0)
+        >>> xs = [rng.standard_normal((48, 8)), rng.standard_normal((40, 8))]
+        >>> batch = api.build_plan_batch(xs, k=4, bs=8, sb=2, backend="bsr")
+        >>> batch.batch, batch.capacity       # pow2-quantized shared spec
+        (2, 64)
+        >>> batch.matvec(batch.pad_charges(
+        ...     [np.ones(48, np.float32), np.ones(40, np.float32)])).shape
+        (2, 64)
     """
     if values is not None and not callable(values):
         raise ValueError(

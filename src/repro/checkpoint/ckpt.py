@@ -231,6 +231,23 @@ def _read_batch_dir(d: Path, m: dict):
 
 
 class Checkpointer:
+    """Atomic, async, elastic checkpointing of model trees and plans.
+
+    ``save(step, tree)`` host-gathers the pytree and writes it on a
+    background thread (``wait()`` joins; the next ``save`` joins
+    automatically, so training never blocks on I/O). Writes land in a
+    ``.tmp`` directory renamed at the end, so a crash mid-save never
+    corrupts the latest complete step. ``restore`` re-``device_put``s
+    arrays with whatever sharding the *current* mesh prescribes —
+    resume on a different pod count works by construction.
+    ``save_plan``/``restore_plan`` persist
+    :class:`~repro.api.InteractionPlan` / ``PlanBatch`` lineages
+    (storage, ordering, streaming state, refresh telemetry) so serving
+    restarts skip the embed → tree → order → compress pipeline;
+    ``restore_plan(refresh_with=x)`` re-validates the stored ordering
+    against current points. The last ``keep`` steps are retained.
+    """
+
     def __init__(self, directory: str | Path, keep: int = 3):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)

@@ -15,11 +15,53 @@ numerator/denominator for this (uniform-grid) covering — reported as
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def _pad_edges(rb, slot, rloc, cloc, vals, n_rb: int):
+    """Pow2-quantize the edge count for the device tile scatters.
+
+    Padding entries target the out-of-bounds row-block ``n_rb`` and are
+    dropped by the scatter (``mode="drop"``), so every nnz inside a pow2
+    bucket hits the same compiled kernel — streaming steps with a
+    drifting edge count never retrace."""
+    e = len(rb)
+    pad = (1 << max(e - 1, 0).bit_length()) - e
+
+    def _p(a, fill, dt):
+        a = np.asarray(a, dt)
+        return a if pad == 0 else np.concatenate(
+            [a, np.full(pad, fill, dt)])
+
+    return (jnp.asarray(_p(rb, n_rb, np.int32)),
+            jnp.asarray(_p(slot, 0, np.int32)),
+            jnp.asarray(_p(rloc, 0, np.int32)),
+            jnp.asarray(_p(cloc, 0, np.int32)),
+            jnp.asarray(_p(vals, 0.0, np.float32)))
+
+
+@partial(jax.jit, static_argnames=("n_rb", "m", "bs"))
+def _dress_tiles(rb, slot, rloc, cloc, vals, *, n_rb, m, bs):
+    """Scatter a COO's edges into a fresh tile tensor, entirely on
+    device: only the O(nnz) 1-D index/value arrays cross the host
+    boundary, never the (n_rb, m, bs, bs) tensor."""
+    dense = jnp.zeros((n_rb, m, bs, bs), jnp.float32)
+    return dense.at[rb, slot, rloc, cloc].add(vals, mode="drop")
+
+
+@jax.jit
+def _patch_tiles(vals, ti, rb, slot, rloc, cloc, v):
+    """Re-dress ``ti`` row-blocks of the device tile tensor: zero the
+    touched rows, then scatter their edges. Row padding repeats a real
+    touched block (idempotent zero-write); edge padding is out-of-bounds
+    sentinels (dropped)."""
+    vals = vals.at[ti].set(0.0)
+    return vals.at[rb, slot, rloc, cloc].add(v, mode="drop")
 
 
 @dataclass
@@ -123,16 +165,21 @@ def build_bsr(rows: np.ndarray, cols: np.ndarray, vals: Optional[np.ndarray],
     col_idx[urow, uslot] = ucol
     nbr_mask[urow, uslot] = True
 
-    dense = np.zeros((n_rb, m, bs, bs), np.float32)
+    # dress the tiles on device: the (n_rb, m, bs, bs) tensor is never
+    # materialized on the host (the host round-trip used to dominate
+    # every streaming restripe) — only the edge index/value arrays are
+    # uploaded, pow2-padded so restripes over a drifting nnz reuse one
+    # compiled scatter
     pos = np.searchsorted(uniq, rb.astype(np.int64) * span + skey)
-    np.add.at(dense, (rb, uslot[pos], rows % bs, cols % bs), vals)
+    dense = _dress_tiles(*_pad_edges(rb, uslot[pos], rows % bs, cols % bs,
+                                     vals, n_rb), n_rb=n_rb, m=m, bs=bs)
 
     # mask-consistency invariants the multi-level (bsr_ml) schedule relies
-    # on: padded slots carry column 0 and zero tiles, and within every row
-    # the kept columns are superblock-major sorted (so a superblock's tiles
-    # are contiguous in the ELL slot axis).
+    # on: padded slots carry column 0 and zero tiles (the scatter only
+    # writes (urow, uslot) cells, which are exactly the masked ones), and
+    # within every row the kept columns are superblock-major sorted (so a
+    # superblock's tiles are contiguous in the ELL slot axis).
     assert not col_idx[~nbr_mask].any(), "padded slots must point at column 0"
-    assert not dense[~nbr_mask].any(), "padded slots must carry zero tiles"
     sb_of = col_idx // sb
     keyed = np.where(nbr_mask, sb_of * np.int64(n_cb) + col_idx,
                      np.iinfo(np.int64).max)
@@ -143,7 +190,7 @@ def build_bsr(rows: np.ndarray, cols: np.ndarray, vals: Optional[np.ndarray],
     fill = nnz / max(kept * bs * bs, 1)
     return BSR(bs=bs, sb=sb, n=n, n_rb=n_rb, n_cb=n_cb,
                col_idx=jnp.asarray(col_idx), nbr_mask=jnp.asarray(nbr_mask),
-               vals=jnp.asarray(dense), fill=fill, max_nbr=m)
+               vals=dense, fill=fill, max_nbr=m)
 
 
 def patch_bsr(bsr: BSR, rows: np.ndarray, cols: np.ndarray,
@@ -180,7 +227,6 @@ def patch_bsr(bsr: BSR, rows: np.ndarray, cols: np.ndarray,
     slot_of_rb[touched] = np.arange(touched.size)
     col_rows = np.zeros((touched.size, m), np.int32)
     mask_rows = np.zeros((touched.size, m), bool)
-    val_rows = np.zeros((touched.size, m, bs, bs), np.float32)
 
     # unique tiles keyed (row-block, superblock-major column): np.unique
     # yields every touched row's tile list already in schedule order
@@ -200,10 +246,10 @@ def patch_bsr(bsr: BSR, rows: np.ndarray, cols: np.ndarray,
     mask_rows[urow, uslot] = True
 
     # route every selected edge to its tile's slot by bisecting the
-    # sorted unique-tile keys (no per-edge python)
+    # sorted unique-tile keys (no per-edge python); the tiles themselves
+    # are dressed on device below — no host tile staging
     pos = np.searchsorted(uniq, rb.astype(np.int64) * span + skey)
-    np.add.at(val_rows, (slot_of_rb[rb], uslot[pos], r_t % bs, c_t % bs),
-              v_t)
+    edges = _pad_edges(rb, uslot[pos], r_t % bs, c_t % bs, v_t, bsr.n_rb)
 
     kept_new = int(mask_rows.sum())
     mask_host = np.asarray(bsr.nbr_mask)
@@ -223,15 +269,15 @@ def patch_bsr(bsr: BSR, rows: np.ndarray, cols: np.ndarray,
         rep = (t_pad - t, 1)
         col_rows = np.concatenate([col_rows, np.tile(col_rows[-1:], rep)])
         mask_rows = np.concatenate([mask_rows, np.tile(mask_rows[-1:], rep)])
-        val_rows = np.concatenate(
-            [val_rows, np.tile(val_rows[-1:], (t_pad - t, 1, 1, 1))])
 
-    # scatter the patched rows on device: the big tile array is updated
-    # in place (no host round-trip of untouched rows)
+    # re-dress the patched rows on device: zero the touched row-blocks of
+    # the resident tile tensor and scatter their edges into it — the
+    # untouched rows (and the touched tiles themselves) never visit the
+    # host
     ti = jnp.asarray(ti_scatter)
     col_idx = bsr.col_idx.at[ti].set(jnp.asarray(col_rows))
     nbr_mask = bsr.nbr_mask.at[ti].set(jnp.asarray(mask_rows))
-    new_vals = bsr.vals.at[ti].set(jnp.asarray(val_rows))
+    new_vals = _patch_tiles(bsr.vals, ti, *edges)
 
     kept = kept_prev - kept_touched_prev + kept_new
     fill = nnz / max(kept * bs * bs, 1)

@@ -232,8 +232,14 @@ def _bsr_ml_backend(plan, x: jax.Array, **_kw) -> jax.Array:
 def spmv(bsr: BSR, x: jax.Array, path: str = "bsr") -> jax.Array:
     """Deprecated shim: string-dispatched SpMV over a bare BSR.
 
-    Use ``repro.api.build_plan(...).apply(x, backend=...)`` — any registered
-    backend name works here too (``csr`` excepted: a bare BSR has no COO).
+    Use ``repro.api.build_plan(...).matvec(x, backend=...)`` instead —
+    plans carry the COO, host state, and autotune context this shim
+    cannot reconstruct. ``path`` accepts any name in
+    ``core.registry.backend_names()`` (``csr``/``bsr``/``bsr_ml``/
+    ``pallas``/``dist``), but only the pure-storage paths work on a bare
+    BSR: ``csr`` needs the plan's COO, ``dist`` needs a mesh-sharded
+    plan, and ``backend="auto"`` needs the plan's structural key — all
+    raise or misbehave here. See ``docs/backends.md``.
     """
     warnings.warn("interact.spmv(bsr, x, path) is deprecated; use "
                   "repro.api plans and the backend registry",

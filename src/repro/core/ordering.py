@@ -80,6 +80,24 @@ def stable_partial_reorder(pi_old: np.ndarray,
     return pi_old[order]
 
 
+def stream_rebucket(pi: np.ndarray, codes: np.ndarray, rows: np.ndarray,
+                    cols: np.ndarray, n: int):
+    """Streaming rebucket: stable re-sort of the physical slots by their
+    maintained Morton ``codes`` (indexed by physical slot), relabeling
+    the cluster-space COO to match.
+
+    Points (and holes) whose code did not change keep their relative
+    order, so the reordering perturbs only what actually drifted. Pure —
+    ``api.apply_pending_layout`` runs it on background-thread snapshots.
+    Returns ``(pi2, inv2, rows2, cols2)``.
+    """
+    old_pi = np.asarray(pi)
+    pi2 = stable_partial_reorder(old_pi, codes)
+    inv2 = np.empty_like(pi2)
+    inv2[pi2] = np.arange(n)
+    return pi2, inv2, inv2[old_pi[rows]], inv2[old_pi[cols]]
+
+
 def claim_free_slots(free_pos: np.ndarray,
                      targets: np.ndarray) -> np.ndarray:
     """Assign each target position the nearest remaining free slot.

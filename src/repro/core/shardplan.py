@@ -492,6 +492,21 @@ class ShardedPlan:
                             policy=policy),
             ("append", "tombstone"))
 
+    def absorb(self, new_plan) -> "ShardedPlan":
+        """Absorb an externally-updated successor of the wrapped plan —
+        the shard-local half of a double-buffer swap.
+
+        ``repro.core.doublebuf.DoubleBufferedPlan`` maintains the host
+        plan (in-place tiers on the caller thread, layout repairs on a
+        background thread); after a swap, the sharded view absorbs the
+        successor here. In-place steps (append/tombstone/patch, recorded
+        ``last_patch_rb`` at an unchanged layout) scatter only the
+        touched shards; a swapped-in rebucket/compact re-shards — on the
+        same mesh, carrying the compiled matvec when the shard spec is
+        unchanged (shard-local swap, no recompilation).
+        """
+        return self._absorb(new_plan, ("append", "tombstone", "patch"))
+
     def insert(self, x_new, *, policy: Optional[str] = None):
         """Streamed insert; returns ``(sharded_plan, physical_indices)``."""
         sp = self.update(insert=x_new, policy=policy)

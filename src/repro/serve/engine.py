@@ -130,6 +130,10 @@ class ClusterKVEngine(Engine):
             self._tier_totals = {"appends": 0, "tombstones": 0,
                                  "rebuckets": 0, "grows": 0,
                                  "compactions": 0}
+            # per-slot plan generation: bumped whenever a session's plan
+            # objects are replaced (trim/rebucket/restore — the engine's
+            # swaps); every inserter claim is validated against it
+            self._plan_gen = [0] * slots
             self.inserter = LockstepInserter(
                 self.L, slots, self.Hkv, max_seq, self.dh,
                 self.cfg.clusterkv.embed_dim, knn)
@@ -199,7 +203,8 @@ class ClusterKVEngine(Engine):
             "cent": self.pstate["cent"].at[:, s].set(jnp.asarray(cent)),
         }
         self._pend_phys[:, s] = -1
-        self.inserter.attach(s, plans)
+        self._plan_gen[s] = 0
+        self.inserter.attach(s, plans, generation=0)
         sess = Session(rid=req.rid, slot=s, blen=blen, plans=plans)
         self.store.admit(sess)
         self._slot_sess[s] = sess
@@ -277,7 +282,9 @@ class ClusterKVEngine(Engine):
         nxt = np.asarray(jnp.argmax(logits, -1))
         # stream this tick's keys into the session plans: the host claims
         # each one's Morton-leaf slot now; the device lands it next tick
-        phys = self.inserter.insert(active, nk)
+        phys = self.inserter.insert(
+            active, nk,
+            generations={s: self._plan_gen[s] for s in active})
         self._pend_phys = phys
         self._pend_k, self._pend_v = nk, nv
         self._pend_pos = self.slot_pos.copy()
@@ -321,7 +328,9 @@ class ClusterKVEngine(Engine):
                 plan_rows[l, h] = pb.hosts[h].inv[del_rows[l, h]]
             new_plans.append(pb)
         sess.plans = new_plans
-        self.inserter.attach(s, new_plans)     # hosts were replaced
+        self._plan_gen[s] += 1                 # hosts were replaced:
+        self.inserter.attach(s, new_plans,     # swap in a new generation
+                             generation=self._plan_gen[s])
         self.pstate = _device_trim(self.pstate, jnp.asarray(plan_rows),
                                    s, self.bk)
         self.store.counters["deletes"] += del_rows.shape[-1]
@@ -363,7 +372,8 @@ class ClusterKVEngine(Engine):
                     cfg, S, None, jnp.asarray(pi2), jnp.asarray(inv2), host))
             new_plans.append(api.PlanBatch.from_plans(members, capacity=S))
         sess.plans = new_plans
-        self.inserter.attach(s, new_plans)
+        self._plan_gen[s] += 1
+        self.inserter.attach(s, new_plans, generation=self._plan_gen[s])
         self.pstate = _device_regather(self.pstate, jnp.asarray(gathers),
                                        s, self.bk)
         self.store.counters["rebuckets"] += 1
@@ -443,7 +453,8 @@ class ClusterKVEngine(Engine):
                           output=[int(t) for t in aux["output"]])
             self.slot_req[s] = req
             self._slot_sess[s] = sess
-            self.inserter.attach(s, sess.plans)
+            self._plan_gen[s] = 0              # restored plans: fresh
+            self.inserter.attach(s, sess.plans, generation=0)
 
     # -- telemetry ----------------------------------------------------------
 

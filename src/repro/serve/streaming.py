@@ -161,14 +161,25 @@ class LockstepInserter:
         # (slot, layer, head) -> list of (phys, nbr_idx, nbr_d2)
         self._buf: Dict[Tuple[int, int, int], list] = {}
         self._bits: Optional[int] = None
+        # plan generation each slot was attached at: claims mutate the
+        # member hosts in place, which is only sound against the exact
+        # plan objects staged at attach time — a double-buffer swap (or
+        # trim/rebucket/restore) replaces them and must re-attach with
+        # the incoming generation
+        self._gen: List[int] = [0] * slots
 
     # -- session lifecycle --------------------------------------------------
 
-    def attach(self, slot: int, plans: list) -> None:
+    def attach(self, slot: int, plans: list, generation: int = 0) -> None:
         """Bind a session's per-layer plan batches to an engine slot and
-        stage their frames/points into the device mirrors. Re-attach after
-        any operation that replaced the member hosts (trim, rebucket,
-        restore)."""
+        stage their frames/points into the device mirrors.
+
+        Re-attach after any operation that replaced the member hosts
+        (trim, rebucket, restore, a double-buffer swap), passing the
+        plans' current ``generation`` — later claims are validated
+        against it, so an insert streamed at a stale generation raises
+        instead of silently mutating hosts the serving plan no longer
+        reads."""
         from repro import api
 
         cfg = plans[0].spec.config
@@ -196,6 +207,11 @@ class LockstepInserter:
         self._x = self._x.at[:, slot].set(jnp.asarray(xs))
         self._alive = self._alive.at[:, slot].set(jnp.asarray(alv))
         self._plans[slot] = plans
+        self._gen[slot] = generation
+
+    def generation(self, slot: int) -> int:
+        """The plan generation ``slot`` was last attached at."""
+        return self._gen[slot]
 
     def detach(self, slot: int) -> None:
         self._plans[slot] = None
@@ -205,14 +221,30 @@ class LockstepInserter:
 
     # -- the per-tick insert ------------------------------------------------
 
-    def insert(self, active: List[int], k_new) -> np.ndarray:
+    def insert(self, active: List[int], k_new,
+               generations: Optional[Dict[int, int]] = None) -> np.ndarray:
         """Stream one key per (layer, head) member of every active slot.
 
         ``k_new`` (L, B, H, dh) device array (inactive lanes ignored).
         Claims a plan slot per member via the exact update_plan placement,
         mutates the member hosts in place, buffers the arrivals' kNN
         edges, and refreshes the device mirrors. Returns the claimed
-        PHYSICAL rows (L, B, H) int64, -1 on inactive lanes."""
+        PHYSICAL rows (L, B, H) int64, -1 on inactive lanes.
+
+        ``generations`` (slot -> caller's current plan generation)
+        validates each claim against the generation the slot was attached
+        at: after a double-buffer swap replaced a session's plans, a
+        claim against the stale attachment raises ``RuntimeError``
+        instead of mutating hosts the serving plan no longer reads —
+        re-attach with the incoming generation first."""
+        if generations is not None:
+            for s in active:
+                got = generations.get(s, self._gen[s])
+                if got != self._gen[s]:
+                    raise RuntimeError(
+                        f"slot {s} plans are at generation {got} but the "
+                        f"inserter was attached at {self._gen[s]}; "
+                        "re-attach after a plan swap before streaming")
         y, nidx, nd2 = _embed_knn(k_new, self._mean, self._axes,
                                   self._x, self._alive, self.knn)
         y_np = np.asarray(y, np.float32)

@@ -1,0 +1,72 @@
+"""Docs hygiene: every relative link in docs/*.md and README.md points
+at a real file, every ``#anchor`` matches a heading in its target, and
+the docs tree is reachable from the README."""
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = sorted((ROOT / "docs").glob("*.md")) + [ROOT / "README.md"]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def _strip_fences(text: str) -> str:
+    return _FENCE.sub("", text)
+
+
+def _slugify(heading: str) -> str:
+    """GitHub's heading -> anchor rule: lowercase, drop punctuation,
+    spaces to dashes."""
+    h = heading.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def _anchors(path: Path) -> set:
+    text = _strip_fences(path.read_text())
+    return {_slugify(m.group(1))
+            for m in re.finditer(r"^#{1,6}\s+(.+)$", text, re.MULTILINE)}
+
+
+def _links(path: Path):
+    text = _strip_fences(path.read_text())
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        yield target
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_relative_links_resolve(doc):
+    missing = []
+    for target in _links(doc):
+        file_part, _, anchor = target.partition("#")
+        dest = (doc.parent / file_part).resolve() if file_part else doc
+        if not dest.exists():
+            missing.append(f"{target} -> {dest} (missing file)")
+            continue
+        if anchor and dest.suffix == ".md" and anchor not in _anchors(dest):
+            missing.append(f"{target} (no heading for #{anchor} in "
+                           f"{dest.name}; have {sorted(_anchors(dest))})")
+    assert not missing, f"{doc.name}: broken links:\n  " + \
+        "\n  ".join(missing)
+
+
+def test_docs_guides_linked_from_readme():
+    readme = (ROOT / "README.md").read_text()
+    for guide in sorted((ROOT / "docs").glob("*.md")):
+        assert f"docs/{guide.name}" in readme, (
+            f"{guide.name} exists but README.md never links it")
+
+
+def test_readme_examples_and_tests_exist():
+    # backtick-quoted repo paths the README promises (examples/, docs/)
+    readme = (ROOT / "README.md").read_text()
+    for m in re.finditer(r"`((?:examples|docs|benchmarks)/[\w./]+)`",
+                         readme):
+        assert (ROOT / m.group(1)).exists(), (
+            f"README references {m.group(1)} which does not exist")

@@ -1,6 +1,8 @@
 """Streaming point sets (ISSUE 4): capacity vs logical n, insert/delete
 tombstones, amortized compaction, placement, sharded composition, and
 checkpoint round-trip of the capacity/tombstone state."""
+import threading
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,6 +11,7 @@ import pytest
 from repro import api
 from repro.checkpoint.ckpt import Checkpointer
 from repro.core import blocksparse, hierarchy, measures
+from repro.core.doublebuf import DoubleBufferedPlan
 from repro.core.ordering import claim_free_slots
 from repro.data.pipeline import feature_mixture
 
@@ -403,3 +406,129 @@ def test_checkpoint_roundtrip_streaming_state(plan, tmp_path):
     live = np.nonzero(r.alive)[0]
     r2 = r.delete(live[:5])
     assert r2.n_alive == p3.n_alive - 5
+
+# ---------------------------------------------------------------------------
+# deferred layout + the double buffer (async maintenance)
+# ---------------------------------------------------------------------------
+
+
+def test_defer_layout_records_pending_and_stays_inplace(plan):
+    rng = np.random.default_rng(12)
+    kill = rng.choice(N, int(0.30 * N), replace=False)  # past max_dead_frac
+    p2 = api.update_plan(plan, delete=kill, defer_layout=True)
+    assert p2.host.pending_layout == "compact"
+    assert p2.refresh_stats.compactions == 0
+    assert p2.refresh_stats.last_action == "tombstone"
+    assert p2.n == plan.n                       # layout untouched
+    xv = rng.standard_normal(p2.n).astype(np.float32)
+    dense = _masked_dense_matvec(p2, xv)
+    np.testing.assert_allclose(np.asarray(p2.matvec(jnp.asarray(xv))),
+                               dense, atol=1e-3)
+    # a synchronous follow-up step clears the marker by escalating
+    p3 = api.update_plan(p2, delete=np.nonzero(p2.alive)[0][:1])
+    assert p3.host.pending_layout is None
+    assert p3.refresh_stats.compactions == 1
+
+
+def test_streamed_then_swapped_equals_fresh_build(plan):
+    rng = np.random.default_rng(13)
+    kill = rng.choice(N, int(0.30 * N), replace=False)
+    p2 = api.update_plan(plan, delete=kill, defer_layout=True)
+    assert p2.host.pending_layout == "compact"
+    swapped = api.apply_pending_layout(p2)
+    assert swapped.host.pending_layout is None
+    assert swapped.refresh_stats.last_action == "compact"
+    fresh = api.build_plan(p2.host.x[p2.alive], config=plan.config)
+    np.testing.assert_array_equal(np.asarray(swapped.bsr.col_idx),
+                                  np.asarray(fresh.bsr.col_idx))
+    np.testing.assert_array_equal(np.asarray(swapped.bsr.vals),
+                                  np.asarray(fresh.bsr.vals))
+    xv = jnp.asarray(rng.standard_normal(swapped.n), jnp.float32)
+    assert np.array_equal(np.asarray(swapped.matvec(xv)),
+                          np.asarray(fresh.matvec(xv)))
+
+
+def test_doublebuffer_midbuild_matvec_is_old_generation(points, monkeypatch):
+    plan = api.build_plan(points, k=K, bs=16, sb=4, backend="bsr",
+                          ell_slack=8, capacity=N + 64, gamma_tol=1e-4)
+    _ = plan.gamma                       # arm the drift guard
+    gate = threading.Event()
+    real = api.apply_pending_layout
+
+    def gated(p):
+        gate.wait(30)
+        return real(p)
+
+    monkeypatch.setattr(api, "apply_pending_layout", gated)
+    dbp = DoubleBufferedPlan(plan)
+    rng = np.random.default_rng(14)
+    step = 0
+    while not dbp.building:
+        assert step < 20, "expected the gamma guard to defer a rebucket"
+        kill = rng.choice(np.nonzero(dbp.plan.alive)[0], 8, replace=False)
+        dbp.update(insert=_fresh_points(8, seed=20 + step), delete=kill)
+        step += 1
+    snap = dbp.plan
+    xv = jnp.asarray(rng.standard_normal(snap.n), jnp.float32)
+    y0 = np.asarray(snap.matvec(xv))
+    # updates arriving mid-build queue; the serving buffer is frozen, so
+    # a mid-build matvec returns the old generation's result bit-exactly
+    assert dbp.update(insert=_fresh_points(4, seed=99)) == "queued"
+    assert dbp.plan is snap
+    assert np.array_equal(np.asarray(dbp.matvec(xv)), y0)
+    gen0 = dbp.generation
+    gate.set()
+    dbp.wait()
+    assert dbp.generation == gen0 + 1
+    assert dbp.queued == 0               # the queued insert replayed
+    # the swapped-in successor is bit-identical to running the same
+    # repair synchronously on the snapshot
+    snapshot, successor, kind = dbp.last_swap
+    assert kind == "rebucket"
+    redo = real(snapshot)
+    np.testing.assert_array_equal(np.asarray(successor.bsr.vals),
+                                  np.asarray(redo.bsr.vals))
+    dbp.flush()
+
+
+def test_doublebuffer_compact_swap_remaps_queued_deletes(points, monkeypatch):
+    plan = api.build_plan(points, k=K, bs=16, sb=4, backend="bsr",
+                          ell_slack=8)
+    gate = threading.Event()
+    real = api.apply_pending_layout
+
+    def gated(p):
+        gate.wait(30)
+        return real(p)
+
+    monkeypatch.setattr(api, "apply_pending_layout", gated)
+    dbp = DoubleBufferedPlan(plan)
+    rng = np.random.default_rng(15)
+    kill = rng.choice(N, int(0.30 * N), replace=False)
+    assert dbp.update(delete=kill) == "applied"
+    assert dbp.building                  # compact launched in background
+    live = np.nonzero(dbp.plan.alive)[0]
+    assert dbp.update(delete=live[:10]) == "queued"
+    gate.set()
+    final = dbp.flush()
+    # the compact renumbered the physical slots; the queued delete was
+    # remapped through compact_map and applied cleanly after the swap
+    assert final.n_alive == N - kill.size - 10
+    swaps = [e for e in dbp.events if e[0] == "swap"]
+    assert swaps and swaps[0][1] == "compact" and swaps[0][2] is not None
+
+
+def test_sharded_absorb_swap(plan):
+    sp = api.shard(plan)
+    p2 = api.update_plan(plan, delete=np.arange(160), defer_layout=True)
+    assert p2.host.pending_layout == "compact"
+    sp = sp.absorb(p2)                   # in-place tier: shard-local patch
+    assert sp.plan is p2
+    swapped = api.apply_pending_layout(p2)
+    sp2 = sp.absorb(swapped)             # layout swap: re-shard, same mesh
+    assert sp2.reshards == sp.reshards + 1
+    rng = np.random.default_rng(16)
+    xv = jnp.asarray(rng.standard_normal(swapped.n), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(sp2.matvec(xv)),
+        np.asarray(swapped.matvec(xv, backend="bsr")), atol=1e-3)
