@@ -17,6 +17,14 @@ GATES (ISSUE 6): with >= 8 concurrent sessions under churn,
   - the service compiles exactly ONE decode kernel across all admissions
     (trace count asserted, not eyeballed).
 
+GATE (ISSUE 9): the vectorized host claim pass (``claim_slots_batched``
+over all L*B*H members, with the inserter's maintained block maxima)
+is >= 5x faster than the per-member ``claim_slot`` loop it replaced, at
+the serve shape (8 sessions x max_seq 8192). The plan-mode report also
+splits each tick into ``device_tick_s`` (jitted decode+land dispatch)
+vs ``host_claim_s`` (inserter claim-and-mutate) so the kernel-bound
+claim is measurable, not asserted from vibes.
+
   PYTHONPATH=src:. python benchmarks/run.py --only bench_serve
 """
 from __future__ import annotations
@@ -32,6 +40,7 @@ MAX_SEQ = 8192        # percall pays O(S) sort+permute+centroids per tick;
                       # the service's decode cost is capacity-independent
 MAX_NEW = 64
 GATE_SPEEDUP = 3.0
+GATE_CLAIM = 5.0      # batched host claim vs the per-member loop
 
 
 def _requests(cfg, rng, rid0=0):
@@ -59,10 +68,77 @@ def _drive(cfg, params, mode):
         engine.submit(r)
     engine.run()
     engine.tokens_out, engine._tick_time = 0, 0.0   # keep traces, drop warmup
+    engine._claim_time = engine._device_time = 0.0
     for r in _requests(cfg, rng, rid0=N_REQ):
         engine.submit(r)
     engine.run()
     return engine.report()
+
+
+def _claim_bench(emit) -> None:
+    """ISSUE 9 gate: the stacked claim pass vs the per-member loop it
+    replaced, exercised exactly as the inserter drives it (in-order
+    code/alive mirrors plus maintained block maxima) under tick churn at
+    the serve shape."""
+    import time
+
+    from repro.serve.streaming import (CLAIM_BLOCK, claim_slot,
+                                       claim_slots_batched)
+
+    layers, heads, ticks = 2, 2, 64
+    m = layers * SLOTS * heads
+    rng = np.random.default_rng(0)
+    base_codes = np.sort(
+        rng.integers(0, 1 << 30, (m, MAX_SEQ)).astype(np.uint64), axis=1)
+    base_alive = rng.random((m, MAX_SEQ)) < 0.5
+    arrivals = rng.integers(0, 1 << 30, (ticks, m)).astype(np.uint64)
+
+    class _Host:                       # claim_slot's duck-typed host view
+        __slots__ = ("pi", "codes", "alive")
+
+    hosts = []
+    for i in range(m):
+        h = _Host()
+        h.pi = np.arange(MAX_SEQ)
+        h.codes = base_codes[i].copy()
+        h.alive = base_alive[i].copy()
+        hosts.append(h)
+    t0 = time.time()
+    loop_phys = np.zeros((ticks, m), np.int64)
+    for t in range(ticks):
+        for i, h in enumerate(hosts):
+            p = claim_slot(h, arrivals[t, i])
+            h.alive[p] = True
+            h.codes[p] = arrivals[t, i]
+            loop_phys[t, i] = p
+    t_loop = time.time() - t0
+
+    ci, ai = base_codes.copy(), base_alive.copy()
+    bm = ci.reshape(m, -1, CLAIM_BLOCK).max(axis=2)
+    rows = np.arange(m)
+    t0 = time.time()
+    vec_phys = np.zeros((ticks, m), np.int64)
+    for t in range(ticks):
+        pos = claim_slots_batched(ci, ai, arrivals[t], block_max=bm)
+        ai[rows, pos] = True
+        ci[rows, pos] = arrivals[t]
+        blk = pos // CLAIM_BLOCK
+        seg = ci[rows[:, None],
+                 (blk * CLAIM_BLOCK)[:, None] + np.arange(CLAIM_BLOCK)]
+        bm[rows, blk] = seg.max(axis=1)
+        vec_phys[t] = pos
+    t_vec = time.time() - t0
+
+    assert (vec_phys == loop_phys).all(), (
+        "batched claims diverged from the per-member claim_slot loop")
+    ratio = t_loop / max(t_vec, 1e-9)
+    emit(f"bench_serve/host_claim_m{m}_cap{MAX_SEQ},"
+         f"{t_vec / ticks * 1e6:.0f},"
+         f"loop_us={t_loop / ticks * 1e6:.0f};speedup={ratio:.1f}x")
+    assert ratio >= GATE_CLAIM, (
+        f"batched host claim {ratio:.2f}x < {GATE_CLAIM}x over the "
+        f"per-member loop ({t_vec * 1e3:.1f}ms vs {t_loop * 1e3:.1f}ms "
+        f"for {ticks} ticks x {m} members)")
 
 
 def run(emit) -> None:
@@ -93,6 +169,13 @@ def run(emit) -> None:
     emit(f"bench_serve/service_speedup,{0:.0f},"
          f"speedup={speedup:.2f}x;admits={plan['counters']['admits']};"
          f"appends={plan['insert_tiers']['appends']}")
+    ticks = max(plan["ticks"], 1)
+    emit(f"bench_serve/plan_tick_split,"
+         f"{plan['device_tick_s'] / ticks * 1e6:.0f},"
+         f"device_s={plan['device_tick_s']:.3f};"
+         f"host_claim_s={plan['host_claim_s']:.3f};"
+         f"claim_us_per_tick={plan['host_claim_s'] / ticks * 1e6:.0f}")
+    _claim_bench(emit)
 
     # ISSUE 6 acceptance gates
     assert plan["counters"]["admits"] == 2 * N_REQ and SLOTS >= 8

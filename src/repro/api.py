@@ -119,7 +119,7 @@ __all__ = [
     "update_plan", "apply_pending_layout", "cluster_order", "shard",
     "ShardedPlan", "ORDERINGS",
     "register_backend", "register_batched_backend", "backend_names",
-    "get_backend", "get_batched_backend",
+    "get_backend", "get_batched_backend", "edge_values",
 ]
 
 
@@ -995,10 +995,17 @@ def _knn_subset(x_new: np.ndarray, rows_idx: np.ndarray,
     return np.repeat(rows_idx, k), idx.reshape(-1), d2.reshape(-1)
 
 
-def _edge_values(host: _PlanHost, rows, cols, d2) -> np.ndarray:
+def edge_values(host: _PlanHost, rows, cols, d2) -> np.ndarray:
+    """Edge weights for a batch of (row, col, squared-distance) triples
+    under the host's values mode — the single place interaction strengths
+    are computed, shared by plan construction, migration patching, and
+    the serve-tier streaming inserter's deferred COO folds."""
     if host.values_mode == "fn":
         return np.asarray(host.values_fn(rows, cols, d2), np.float32)
     return np.ones(len(rows), np.float32)
+
+
+_edge_values = edge_values  # pre-promotion private name, kept for callers
 
 
 def _patch_pattern(host: _PlanHost, cfg: PlanConfig, n: int,

@@ -68,6 +68,8 @@ class ClusterKVConfig:
     decode_clusters: int = 16          # top-c clusters gathered at decode
     use_pallas: bool = False           # kernels/block_attention for the tiles
                                        # (interpret-mode on CPU; Mosaic on TPU)
+    decode_backend: str = "auto"       # plan-decode attend: "xla" | "pallas"
+                                       # | "auto" (cost-model pick)
 
 
 @dataclass(frozen=True)

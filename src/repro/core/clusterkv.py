@@ -35,6 +35,54 @@ from repro.core.hierarchy import morton_codes
 NEG_INF = -1e30
 
 
+def masked_softmax(logit: jax.Array, mask: jax.Array) -> jax.Array:
+    """Softmax over the last axis with a guarded normalizer.
+
+    Bitwise-identical to ``jax.nn.softmax`` whenever at least one column
+    of ``mask`` is live — masked entries carry ``NEG_INF`` logits whose
+    ``exp`` underflows to exactly ``+0.0`` — but returns exact zeros
+    instead of a uniform row when EVERY column is masked (an
+    early-position decode whose selected tiles are all holes/future:
+    ``exp(NEG_INF - NEG_INF) == 1`` would weight garbage rows uniformly).
+    The guard is ``sparse_block_attention``'s ``jnp.maximum(l, 1e-30)``
+    applied to the flat-softmax form."""
+    logit = jnp.where(mask, logit, NEG_INF)
+    m = jnp.max(logit, axis=-1, keepdims=True)
+    e = jnp.exp(logit - jax.lax.stop_gradient(m))
+    e = jnp.where(mask, e, 0.0)
+    return e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+
+
+def decode_logits(qh: jax.Array, ksel: jax.Array) -> jax.Array:
+    """Scaled q·k logits for one (batch, kv-head) slice: qh (g,dh) float32,
+    ksel (c,dh) float32 -> (g,c).
+
+    The form is conditioned on the STATIC group size because the decode
+    bitwise gate compares a per-slice kernel against the vmapped XLA
+    reference: an M=1 dot is strength-reduced by XLA:CPU into a fused
+    multiply+reduce whose rounding depends on the surrounding fusion
+    context, so no per-slice form can reproduce it stably. Padding the
+    single query row to M=2 keeps the contraction a real materialized
+    GEMM — bit-stable between the per-slice and vmapped lowerings — at
+    the cost of one duplicated row of a tiny matvec. g >= 2 is already
+    a real matmul and hits the MXU unchanged."""
+    scale = jnp.sqrt(jnp.asarray(qh.shape[-1], jnp.float32))
+    if qh.shape[0] == 1:
+        q2 = jnp.concatenate([qh, qh], axis=0)
+        return (q2 @ ksel.T)[:1] / scale
+    return qh @ ksel.T / scale
+
+
+def decode_combine(w: jax.Array, vsel: jax.Array) -> jax.Array:
+    """Weighted value combine w (g,c) @ vsel (c,dv) float32 -> (g,dv),
+    with the same static g == 1 row-padding as :func:`decode_logits`
+    (the output dot is M=1 there too)."""
+    if w.shape[0] == 1:
+        w2 = jnp.concatenate([w, w], axis=0)
+        return (w2 @ vsel)[:1]
+    return w @ vsel
+
+
 # ---------------------------------------------------------------------------
 # per-head orderings as a PlanBatch (the plan API as the ordering asset)
 # ---------------------------------------------------------------------------
@@ -235,7 +283,11 @@ def decode_select(q: jax.Array, centroids: jax.Array, n_sel: int) -> jax.Array:
     b, hq, dh = q.shape
     hkv = centroids.shape[1]
     qg = q.reshape(b, hkv, hq // hkv, dh).mean(axis=2)
-    scores = jnp.einsum("bhd,bhkd->bhk", qg, centroids)
+    # multiply+reduce, not einsum: the grouped query is a single row per
+    # kv head, and an M=1 contraction is strength-reduced shape-dependently
+    # by XLA:CPU — the elementwise form scores identically per-slice and
+    # batched, which the fused decode kernel's bitwise gate relies on
+    scores = jnp.sum(qg[:, :, None, :] * centroids, -1)
     _, idx = jax.lax.top_k(scores, n_sel)
     return idx.astype(jnp.int32)
 
@@ -264,11 +316,12 @@ def decode_attend(q: jax.Array, k: jax.Array, v: jax.Array,
         ksel = kt[it].reshape(-1, dh)          # (c*bk, dh)
         vsel = vt[it].reshape(-1, dv)
         psel = pt[it].reshape(-1)
-        logit = (qh.astype(jnp.float32) @ ksel.astype(jnp.float32).T
-                 / jnp.sqrt(jnp.asarray(dh, jnp.float32)))
-        logit = jnp.where(psel[None, :] <= qpos, logit, NEG_INF)
-        w = jax.nn.softmax(logit, axis=-1)
-        return (w @ vsel.astype(jnp.float32)).astype(q.dtype)
+        logit = decode_logits(qh.astype(jnp.float32),
+                              ksel.astype(jnp.float32))
+        # guarded: an early-position decode can select only holes/future
+        # tiles, and an unguarded softmax would weight them uniformly
+        w = masked_softmax(logit, psel[None, :] <= qpos)
+        return decode_combine(w, vsel.astype(jnp.float32)).astype(q.dtype)
 
     out = jax.vmap(jax.vmap(per_bh))(
         q.reshape(b, hkv, g, dh), kb, vb, pb, idx)

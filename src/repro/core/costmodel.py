@@ -267,6 +267,117 @@ def rank_backends(feat: CostFeatures, names: Iterable[str], *,
 
 
 # ---------------------------------------------------------------------------
+# decode-attention pricing (serve tick: models.attention decode backends)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DecodeFeatures:
+    """Structural features of one plan-decode step (whole batch).
+
+    ``s`` is the plan capacity (padded cache length), ``bk`` the tile
+    edge, ``n_sel`` the top-c tiles attended per head. The work is
+    identical across backends — what differs is how often the selected
+    tiles cross HBM and how many launches a tick pays."""
+    batch: int
+    hq: int
+    hkv: int
+    s: int
+    dh: int
+    dv: int
+    bk: int
+    n_sel: int
+
+
+def decode_cost(feat: DecodeFeatures, backend: str,
+                hw: Optional[HardwareConfig] = None, *,
+                interpret: bool = False) -> dict:
+    """Closed-form flops / HBM bytes / seconds for one decode backend.
+
+    Both paths score every centroid and attend the same ``n_sel * bk``
+    selected rows per (member, kv head). The unfused ``xla`` path pays
+    three dispatches (select top-k, gather, attend) and its vmapped tile
+    gather is irregular (``gather_penalty``) AND materializes the
+    selection back through HBM before the attend re-reads it. The fused
+    ``pallas`` kernel is one launch and DMAs each selected tile from HBM
+    exactly once, straight into VMEM scratch — but under ``interpret=True``
+    (the CPU container) it eats ``interpret_penalty``, which is why
+    ``"auto"`` keeps the service on ``xla`` in CI and flips to the kernel
+    on a real MXU.
+    """
+    hw = hw or get_hardware()
+    bh = feat.batch * feat.hkv
+    nkb = max(feat.s // max(feat.bk, 1), 1)
+    sel_rows = bh * feat.n_sel * feat.bk
+    sel_bytes = sel_rows * (feat.dh + feat.dv) * _ELEM
+    cent_bytes = bh * nkb * feat.dh * _ELEM
+    ps_bytes = bh * feat.s * _IDX
+    q_bytes = feat.batch * feat.hq * feat.dh * _ELEM
+    out_bytes = feat.batch * feat.hq * feat.dv * _ELEM
+    flops = 2.0 * bh * nkb * feat.dh \
+        + 2.0 * feat.batch * feat.hq * feat.n_sel * feat.bk \
+        * (feat.dh + feat.dv)
+    base = cent_bytes + ps_bytes + q_bytes + out_bytes
+    if backend == "pallas":
+        hbm = base + sel_bytes
+        launches = 1.0
+    else:
+        # gather round-trip: irregular read, HBM write-back of the
+        # gathered tiles, then the attend streams them back in
+        hbm = base + hw.gather_penalty * sel_bytes + 2 * sel_bytes
+        launches = 3.0
+    seconds = max(flops / hw.peak_flops, hbm / hw.hbm_bw) \
+        + launches * hw.launch_overhead
+    if backend == "pallas" and interpret:
+        seconds *= hw.interpret_penalty
+    return {"backend": backend, "flops": flops, "hbm_bytes": hbm,
+            "launches": launches, "seconds": seconds}
+
+
+def rank_decode_backends(feat: DecodeFeatures,
+                         names: Iterable[str] = ("xla", "pallas"), *,
+                         hw: Optional[HardwareConfig] = None,
+                         interpret: bool = False) -> dict:
+    """Analytic ranking of decode backends on ``feat`` — the same
+    ``repro.cost/v1`` envelope as :func:`rank_backends`, so plan-mode
+    backend choice is inspectable with the SpMV tooling."""
+    hw = hw or get_hardware()
+    costs: Dict[str, dict] = {}
+    predicted: Dict[str, float] = {}
+    for name in names:
+        c = decode_cost(feat, name, hw, interpret=interpret)
+        costs[name] = c
+        predicted[name] = c["seconds"]
+    ranking = sorted(predicted, key=predicted.get)
+    return make_report("decode_rank", {
+        "features": dataclasses.asdict(feat),
+        "costs": costs,
+        "predicted_s": predicted,
+        "ranking": ranking,
+        "winner": ranking[0] if ranking else None,
+    }, hw)
+
+
+_DECODE_CHOICE: Dict[Tuple, str] = {}
+
+
+def choose_decode_backend(feat: DecodeFeatures, *,
+                          interpret: bool = False,
+                          hw: Optional[HardwareConfig] = None) -> str:
+    """The model's winner for one decode shape, memoized per (shape,
+    interpret, hardware) — the serve loop calls this every tick and the
+    answer must not cost a ranking each time."""
+    hw = hw or get_hardware()
+    key = (feat, bool(interpret), hw)
+    got = _DECODE_CHOICE.get(key)
+    if got is None:
+        got = rank_decode_backends(feat, hw=hw,
+                                   interpret=interpret)["winner"]
+        _DECODE_CHOICE[key] = got
+    return got
+
+
+# ---------------------------------------------------------------------------
 # exchange pricing (core.shardplan halo-vs-ring-vs-allgather)
 # ---------------------------------------------------------------------------
 

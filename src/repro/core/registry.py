@@ -27,11 +27,17 @@ from typing import Callable, Dict, Tuple
 
 _BACKENDS: Dict[str, Callable] = {}
 _BATCHED: Dict[str, Callable] = {}
+_DECODE: Dict[str, Callable] = {}
 _DEFAULTS_LOADED = False
+_DECODE_LOADED = False
 
 # modules that register the built-in backends at import time
 _DEFAULT_PROVIDERS = ("repro.core.interact", "repro.kernels.ops",
                       "repro.core.dist")
+# modules that register the built-in DECODE backends; a separate latch so
+# importing the SpMV providers never drags the model stack in, and vice
+# versa
+_DECODE_PROVIDERS = ("repro.models.attention", "repro.kernels.ops")
 
 
 def register_backend(name: str, fn: Callable | None = None, *,
@@ -122,3 +128,72 @@ def get_backend(name: str) -> Callable:
 def backend_names() -> Tuple[str, ...]:
     _ensure_defaults()
     return tuple(sorted(_BACKENDS))
+
+
+# ---------------------------------------------------------------------------
+# decode-attention backends (the serve tick's per-token attend)
+# ---------------------------------------------------------------------------
+#
+# A decode backend is
+#
+#     fn(q, ks, vs, ps, cent, qpos, cfg, *, k_self=None, v_self=None) -> out
+#
+# computing ``clusterkv_plan_decode``'s contract over plan-ordered caches
+# (see models.attention). Built-ins:
+#
+#   xla      unfused top-k select + vmapped tile gather + attend
+#   pallas   fused Mosaic kernel (kernels.decode_attend) — selection,
+#            gather, and softmax in one launch, tiles stream HBM once
+#
+# ``cfg.decode_backend == "auto"`` resolves through
+# ``core.costmodel.choose_decode_backend`` against the same
+# ``repro.cost/v1`` model that ranks the SpMV backends.
+
+
+def register_decode_backend(name: str, fn: Callable | None = None, *,
+                            overwrite: bool = False):
+    """Register ``fn`` as decode-attention backend ``name`` (decorator-friendly)."""
+
+    def _register(f: Callable) -> Callable:
+        prev = _DECODE.get(name)
+        if prev is not None and prev is not f and not overwrite:
+            raise ValueError(
+                f"decode backend {name!r} is already registered "
+                f"({prev.__module__}.{prev.__qualname__}); pass "
+                "overwrite=True to replace it deliberately")
+        _DECODE[name] = f
+        return f
+
+    return _register if fn is None else _register(fn)
+
+
+def _ensure_decode_defaults() -> None:
+    global _DECODE_LOADED
+    if _DECODE_LOADED:
+        return
+    import importlib
+
+    for mod in _DECODE_PROVIDERS:
+        importlib.import_module(mod)
+    _DECODE_LOADED = True
+
+
+def get_decode_backend(name: str) -> Callable:
+    _ensure_decode_defaults()
+    try:
+        return _DECODE[name]
+    except KeyError:
+        import difflib
+
+        close = difflib.get_close_matches(name, decode_backend_names(), n=1,
+                                          cutoff=0.5)
+        hint = f" — did you mean {close[0]!r}?" if close else ""
+        raise ValueError(
+            f"unknown decode backend {name!r}{hint}; "
+            f"registered: {decode_backend_names()}"
+        ) from None
+
+
+def decode_backend_names() -> Tuple[str, ...]:
+    _ensure_decode_defaults()
+    return tuple(sorted(_DECODE))

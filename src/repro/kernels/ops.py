@@ -15,14 +15,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.costmodel import choose_tiles
-from repro.core.registry import register_backend, register_batched_backend
+from repro.core.registry import (register_backend, register_batched_backend,
+                                 register_decode_backend)
 from repro.kernels import block_attention as _ba
 from repro.kernels import bsr_spmv as _bsr
+from repro.kernels import decode_attend as _da
 from repro.kernels import gamma_score as _gs
 
-# traces of the batched pallas backend — one per compiled kernel, since the
-# backend body only runs while `_batch_apply_kernel` is being traced
-PALLAS_TRACE_COUNTS = {"batched": 0}
+# traces of the pallas backends — one per compiled kernel, since the
+# backend bodies only run while the enclosing jit is being traced
+PALLAS_TRACE_COUNTS = {"batched": 0, "decode": 0}
 
 
 def _interpret() -> bool:
@@ -131,6 +133,52 @@ def block_attention(q, k_sorted, v_sorted, kpos, qpos, idx, *, bq, bk,
 
     out = jax.vmap(one)(qg, kf, vf, pf, idxf)
     return out.reshape(b, hq, s, -1)
+
+
+def decode_attend_fused(q, k, v, pos, cent, qpos, *, n_sel, bk):
+    """Fused single-token cluster decode (plain caches).
+
+    Bitwise-identical to ``core.clusterkv.decode_select`` +
+    ``decode_attend`` — selection, tile gather, and the guarded softmax
+    run in ONE kernel and each selected tile streams HBM exactly once.
+    q (B,Hq,dh); k/v (B,Hkv,S,dh|dv); pos (B,Hkv,S); cent (B,Hkv,S/bk,dh);
+    qpos scalar or (B,)."""
+    PALLAS_TRACE_COUNTS["decode"] += 1
+    b, _, dh = q.shape
+    hkv = k.shape[1]
+    qp = jnp.broadcast_to(jnp.asarray(qpos, jnp.int32), (b,))
+    zk = jnp.zeros((b, hkv, dh), k.dtype)
+    zv = jnp.zeros((b, hkv, v.shape[-1]), v.dtype)
+    return _da.decode_attend_fused(q, k, v, pos, cent, qp, zk, zv,
+                                   n_sel=n_sel, bk=bk,
+                                   interpret=_interpret())
+
+
+@register_decode_backend("pallas")
+def _pallas_plan_decode(q, ks, vs, ps, cent, qpos, cfg, *,
+                        k_self=None, v_self=None):
+    """Plan-ordered decode service attend via the fused Mosaic kernel.
+
+    Same contract as the registered ``xla`` decode backend
+    (``models.attention._plan_decode_xla``): hole tiles masked out of
+    selection, local-window recency boost, optional always-visible self
+    column."""
+    PALLAS_TRACE_COUNTS["decode"] += 1
+    b, _, dh = q.shape
+    hkv, s = ks.shape[1], ks.shape[2]
+    bk = min(cfg.block_k, s)
+    has_self = k_self is not None
+    if not has_self:
+        k_self = jnp.zeros((b, hkv, dh), ks.dtype)
+        v_self = jnp.zeros((b, hkv, vs.shape[-1]), vs.dtype)
+    return _da.decode_attend_fused(
+        q, ks, vs, ps, cent, qpos.astype(jnp.int32), k_self, v_self,
+        n_sel=min(cfg.decode_clusters, s // bk), bk=bk,
+        plan_mode=True, has_self=has_self,
+        window=cfg.local_window_blocks * bk, interpret=_interpret())
+
+
+_pallas_plan_decode.interpret_only = _interpret
 
 
 def gamma_exact(rows: jax.Array, cols: jax.Array, sigma: float,

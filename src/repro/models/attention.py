@@ -24,6 +24,7 @@ from repro.compat import shard_map
 
 from repro.configs.base import ClusterKVConfig
 from repro.core import clusterkv as ckv
+from repro.core.registry import register_decode_backend
 
 NEG_INF = -1e30
 
@@ -238,7 +239,12 @@ def _tile_attention(q, k_s, v_s, pos_s, qpos, idx, bq, bk, causal,
 
 
 def clusterkv_decode(q, k, v, kpos, qpos, cfg: ClusterKVConfig):
-    """Single-token decode: top-c tiles by centroid score, gathered attend."""
+    """Single-token decode: top-c tiles by centroid score, gathered attend.
+
+    ``cfg.use_pallas`` routes the select+gather+attend chain through the
+    fused Mosaic kernel (``kernels/decode_attend.py``) instead of the two
+    unfused XLA ops — bitwise-identical output, selected tiles stream
+    from HBM exactly once."""
     b, hq, dh = q.shape
     hkv, s = k.shape[1], k.shape[2]
     bk = min(cfg.block_k, s)
@@ -252,6 +258,10 @@ def clusterkv_decode(q, k, v, kpos, qpos, cfg: ClusterKVConfig):
     if kpos.ndim == 1:
         kpos = jnp.broadcast_to(kpos, (b, hkv, kpos.shape[0]))
     cent = ckv.block_centroids(k, bk)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        return kops.decode_attend_fused(q, k, v, kpos, cent, qpos,
+                                        n_sel=n_sel, bk=bk)
     idx = ckv.decode_select(q.astype(jnp.float32), cent.astype(jnp.float32),
                             n_sel)
     return ckv.decode_attend(q, k, v, kpos, qpos, idx, bk)
@@ -274,7 +284,39 @@ def clusterkv_plan_decode(q, ks, vs, ps, cent, qpos, cfg: ClusterKVConfig, *,
 
     No embed/sort/full-centroid work happens here — that is the point:
     everything order-derived is serving state, this is pure gather+attend.
+
+    Dispatches through the decode-backend registry: ``cfg.decode_backend``
+    names ``"xla"`` (the unfused select/gather/attend below) or
+    ``"pallas"`` (the fused Mosaic kernel); ``"auto"`` asks the analytic
+    cost model (``core.costmodel.choose_decode_backend``) — the same
+    ``repro.cost/v1`` model that ranks the SpMV backends — which prices
+    the fused kernel's single launch and once-only tile traffic against
+    the XLA path's gather round-trip (and its interpret-mode slowdown on
+    CPU, where the XLA path keeps winning).
     """
+    from repro.core.registry import get_decode_backend
+
+    name = cfg.decode_backend
+    if name == "auto":
+        from repro.core import costmodel
+        from repro.kernels import ops as kops
+
+        b, hq, dh = q.shape
+        hkv, s = ks.shape[1], ks.shape[2]
+        bk = min(cfg.block_k, s)
+        feat = costmodel.DecodeFeatures(
+            batch=b, hq=hq, hkv=hkv, s=s, dh=dh, dv=vs.shape[-1], bk=bk,
+            n_sel=min(cfg.decode_clusters, s // bk))
+        name = costmodel.choose_decode_backend(
+            feat, interpret=kops._interpret())
+    return get_decode_backend(name)(q, ks, vs, ps, cent, qpos, cfg,
+                                    k_self=k_self, v_self=v_self)
+
+
+@register_decode_backend("xla")
+def _plan_decode_xla(q, ks, vs, ps, cent, qpos, cfg: ClusterKVConfig, *,
+                     k_self=None, v_self=None):
+    """The unfused reference: top-k select, vmapped tile gather, attend."""
     b, hq, dh = q.shape
     hkv, s = ks.shape[1], ks.shape[2]
     g = hq // hkv
@@ -289,7 +331,9 @@ def clusterkv_plan_decode(q, ks, vs, ps, cent, qpos, cfg: ClusterKVConfig, *,
     live = pt <= qp[:, None, None, None]              # causal AND not-a-hole
     tile_has = live.any(-1)                           # (B,Hkv,nkb)
     qg = q.reshape(b, hkv, g, dh).mean(axis=2).astype(jnp.float32)
-    scores = jnp.einsum("bhd,bhkd->bhk", qg, cent.astype(jnp.float32))
+    # multiply+reduce, not einsum: batching-stable M=1 contraction (see
+    # ckv.decode_select) so the fused kernel scores bitwise-identically
+    scores = jnp.sum(qg[:, :, None, :] * cent.astype(jnp.float32), -1)
     scores = jnp.where(tile_has, scores, NEG_INF)
     recent = jnp.where(live, pt, -1).max(-1)
     near = recent >= (qp[:, None, None] - cfg.local_window_blocks * bk)
@@ -310,11 +354,12 @@ def clusterkv_plan_decode(q, ks, vs, ps, cent, qpos, cfg: ClusterKVConfig, *,
         ksel = jnp.concatenate([kt[it].reshape(-1, dh), ksf[None, :]], 0)
         vsel = jnp.concatenate([vt[it].reshape(-1, dv), vsf[None, :]], 0)
         psel = jnp.concatenate([pt_[it].reshape(-1), spos[None]], 0)
-        logit = (qh.astype(jnp.float32) @ ksel.astype(jnp.float32).T
-                 / jnp.sqrt(jnp.asarray(dh, jnp.float32)))
-        logit = jnp.where(psel[None, :] <= qp_, logit, NEG_INF)
-        w = jax.nn.softmax(logit, axis=-1)
-        return (w @ vsel.astype(jnp.float32)).astype(q.dtype)
+        logit = ckv.decode_logits(qh.astype(jnp.float32),
+                                  ksel.astype(jnp.float32))
+        # guarded (see ckv.masked_softmax): a just-admitted slot can select
+        # nothing but holes when no self column rides along
+        w = ckv.masked_softmax(logit, psel[None, :] <= qp_)
+        return ckv.decode_combine(w, vsel.astype(jnp.float32)).astype(q.dtype)
 
     out = jax.vmap(jax.vmap(per_h, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, None)),
                    in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0))(

@@ -100,6 +100,11 @@ class ClusterKVEngine(Engine):
         self.decode_traces = 0
         self.tokens_out = 0
         self._tick_time = 0.0
+        # plan-mode tick split: jitted decode+land dispatch vs the host
+        # inserter's claim-and-mutate pass (bench_serve gates on the host
+        # share staying small — the tick should be kernel-bound)
+        self._device_time = 0.0
+        self._claim_time = 0.0
         self._pf_plan: Dict[int, callable] = {}
         backend = "clusterkv" if mode == "percall" else "flash"
         super().__init__(cfg, params, slots=slots, max_seq=max_seq,
@@ -276,15 +281,19 @@ class ClusterKVEngine(Engine):
         pend = {"k": self._pend_k, "v": self._pend_v,
                 "slot": jnp.asarray(self._pend_slots()),
                 "pos": jnp.asarray(self._pend_pos)}
+        t0 = time.time()
         logits, self.pstate, nk, nv = self._plan_decode(
             self.params, self.pstate, pend, jnp.asarray(tokens),
             jnp.asarray(self.slot_pos))
         nxt = np.asarray(jnp.argmax(logits, -1))
+        self._device_time += time.time() - t0
         # stream this tick's keys into the session plans: the host claims
         # each one's Morton-leaf slot now; the device lands it next tick
+        t0 = time.time()
         phys = self.inserter.insert(
             active, nk,
             generations={s: self._plan_gen[s] for s in active})
+        self._claim_time += time.time() - t0
         self._pend_phys = phys
         self._pend_k, self._pend_v = nk, nv
         self._pend_pos = self.slot_pos.copy()
@@ -468,6 +477,8 @@ class ClusterKVEngine(Engine):
                                if self._tick_time else 0.0),
             "decode_traces": self.decode_traces,
             "prefill_traces": len(self._prefills) + len(self._pf_plan),
+            "host_claim_s": self._claim_time,
+            "device_tick_s": self._device_time,
         }
         if self.mode == "plan":
             rep.update(self.store.report())

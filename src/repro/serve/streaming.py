@@ -9,8 +9,10 @@ a whole tick of insertions costs:
 
   one jitted batched call     embed + live-candidate kNN for every
                               (layer, slot, head) member at once
-  a few numpy ops per member  the Morton-leaf slot claim — the exact
-                              ``update_plan`` placement arithmetic
+  one stacked numpy pass      the Morton-leaf slot claims for ALL
+                              L*B*H members (``claim_slots_batched`` —
+                              the exact ``update_plan`` placement
+                              arithmetic, vectorized over members)
   one jitted scatter          fold the landed rows into the mirrors
 
 Host plan state (``alive``/``codes``/coordinates/refresh telemetry) is
@@ -38,7 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -100,7 +102,11 @@ def claim_slot(host, code: np.uint64) -> int:
     """Claim the free plan slot nearest a single arrival's Morton leaf —
     ``update_plan``'s ``insertion_positions`` + ``claim_free_slots``
     arithmetic specialized to one insert (no list churn). Returns the
-    claimed PHYSICAL row."""
+    claimed PHYSICAL row.
+
+    Reference semantics for :func:`claim_slots_batched` (which the
+    per-tick insert path uses — one call for all L*B*H members instead
+    of one Python claim per member); kept for tests and benchmarks."""
     in_order = host.codes[host.pi]
     free_pos = np.nonzero(~host.alive[host.pi])[0]
     if free_pos.size == 0:
@@ -113,6 +119,82 @@ def claim_slot(host, code: np.uint64) -> int:
     elif j > 0 and t - free_pos[j - 1] <= free_pos[j] - t:
         j -= 1
     return int(host.pi[free_pos[j]])
+
+
+CLAIM_BLOCK = 128        # block-maxima granularity of the two-level search
+
+
+def claim_slots_batched(codes_io: np.ndarray, alive_io: np.ndarray,
+                        codes: np.ndarray,
+                        block_max: np.ndarray | None = None) -> np.ndarray:
+    """Vectorized :func:`claim_slot` over M stacked members.
+
+    ``codes_io``/``alive_io`` (M, C) are each member's codes/liveness IN
+    PLAN ORDER (``host.codes[host.pi]`` / ``host.alive[host.pi]``);
+    ``codes`` (M,) the arrival Morton codes. Returns the claimed IN-ORDER
+    positions (M,) int64 — callers map to physical rows via ``host.pi``.
+    ``block_max`` (M, C/CLAIM_BLOCK), if given, is the per-block maximum
+    of ``codes_io`` — a mirror the streaming inserter maintains
+    incrementally so the search never rescans the full code arrays.
+
+    Exactly the scalar arithmetic, restructured so the per-tick cost is
+    far below M scalar claims:
+
+    * the sorted-envelope ``searchsorted`` needs no cumulative max at
+      all — ``env[j] < code`` iff every code through ``j`` is below it,
+      so the target ``t`` is just the FIRST in-order position whose code
+      is ``>= code`` (one stacked comparison + argmax, no per-member
+      gather of ``host.codes[host.pi]``);
+    * the nearest-free bisect only ever resolves within ``t``'s
+      neighborhood, so the free mask is gathered in a +-W window around
+      ``t``. A window miss on a side can never flip the scalar
+      tie-break (the in-window candidate is closer by construction than
+      anything beyond the window), and members with no free slot within
+      the window at all — vanishingly rare at serving occupancies —
+      fall back to the scalar bisect.
+
+    Each member is an independent host, so one tick's claims never
+    interact and the batch is exact."""
+    m, c = codes_io.shape
+    free = ~alive_io
+    if not free.any(axis=1).all():
+        raise ValueError("no free plan slots; session outgrew its capacity")
+    rows = np.arange(m)
+    bs = CLAIM_BLOCK
+    if c % bs == 0 and c >= 2 * bs:
+        # two-level: per-block maxima narrow the first >= code to one
+        # block per member, so only that block's codes are compared
+        bm = (block_max if block_max is not None
+              else codes_io.reshape(m, c // bs, bs).max(axis=2))
+        gb = bm >= codes[:, None]
+        blk = gb.argmax(axis=1)
+        ge = codes_io[rows[:, None],
+                      blk[:, None] * bs + np.arange(bs)] >= codes[:, None]
+        t = blk * bs + ge.argmax(axis=1)
+        t = np.where(gb[rows, blk], t, c).astype(np.int64)
+    else:
+        ge = codes_io >= codes[:, None]
+        t = ge.argmax(axis=1).astype(np.int64)
+        t = np.where(ge[rows, t], t, c)            # all-below rows -> c
+    w = min(128, c)
+    cols = t[:, None] + np.arange(-w, w)           # positions t-w .. t+w-1
+    fw = (free[rows[:, None], np.clip(cols, 0, c - 1)]
+          & (cols >= 0) & (cols < c))
+    fl, fr = fw[:, :w], fw[:, w:]
+    has_l, has_r = fl.any(axis=1), fr.any(axis=1)
+    pf = np.where(has_l, t - 1 - np.argmax(fl[:, ::-1], axis=1), -1)
+    nf = np.where(has_r, t + np.argmax(fr, axis=1), c)
+    use_pf = (nf >= c) | ((pf >= 0) & (t - pf <= nf - t))
+    chosen = np.where(use_pf, pf, nf)
+    for i in np.nonzero(~(has_l | has_r))[0]:      # no free within +-w
+        fp = np.nonzero(free[i])[0]
+        j = int(np.searchsorted(fp, t[i]))
+        if j == len(fp):
+            j -= 1
+        elif j > 0 and t[i] - fp[j - 1] <= fp[j] - t[i]:
+            j -= 1
+        chosen[i] = fp[j]
+    return chosen.astype(np.int64)
 
 
 @functools.partial(jax.jit, static_argnames=("knn",))
@@ -157,9 +239,26 @@ class LockstepInserter:
         # per-member frozen quantization boxes (host-side, tiny)
         self._lo = np.zeros((self.L, self.B, self.H, embed_d), np.float32)
         self._hi = np.ones((self.L, self.B, self.H, embed_d), np.float32)
+        # host-side stacked claim state, IN PLAN ORDER per member — the
+        # inputs of claim_slots_batched. Staged at attach, updated in
+        # place on every claim so they stay exact mirrors of
+        # host.codes[host.pi] / host.alive[host.pi] / host.pi.
+        self._pi_io = np.zeros((self.L, self.B, self.H, capacity), np.int64)
+        self._codes_io = np.zeros((self.L, self.B, self.H, capacity),
+                                  np.uint64)
+        self._alive_io = np.zeros((self.L, self.B, self.H, capacity), bool)
+        # incrementally-maintained per-block code maxima (the two-level
+        # claim search's upper tier); None when capacity doesn't tile
+        self._bmax_io = (
+            np.zeros((self.L, self.B, self.H, capacity // CLAIM_BLOCK),
+                     np.uint64)
+            if capacity % CLAIM_BLOCK == 0 and capacity >= 2 * CLAIM_BLOCK
+            else None)
         self._plans: List[Optional[list]] = [None] * slots
-        # (slot, layer, head) -> list of (phys, nbr_idx, nbr_d2)
-        self._buf: Dict[Tuple[int, int, int], list] = {}
+        # slot -> list of per-tick records ((L,H) phys, (L,H,knn) nbr_idx,
+        # (L,H,knn) nbr_d2); one append per slot per tick, folded by flush
+        # in a single concatenation pass
+        self._buf: Dict[int, list] = {}
         self._bits: Optional[int] = None
         # plan generation each slot was attached at: claims mutate the
         # member hosts in place, which is only sound against the exact
@@ -202,6 +301,12 @@ class LockstepInserter:
                 alv[l, h] = host.alive
                 self._lo[l, slot, h] = host.code_lo
                 self._hi[l, slot, h] = host.code_hi
+                self._pi_io[l, slot, h] = host.pi
+                self._codes_io[l, slot, h] = host.codes[host.pi]
+                self._alive_io[l, slot, h] = host.alive[host.pi]
+                if self._bmax_io is not None:
+                    self._bmax_io[l, slot, h] = self._codes_io[
+                        l, slot, h].reshape(-1, CLAIM_BLOCK).max(axis=1)
         self._mean = self._mean.at[:, slot].set(jnp.asarray(mean))
         self._axes = self._axes.at[:, slot].set(jnp.asarray(axes))
         self._x = self._x.at[:, slot].set(jnp.asarray(xs))
@@ -216,8 +321,8 @@ class LockstepInserter:
     def detach(self, slot: int) -> None:
         self._plans[slot] = None
         self._alive = self._alive.at[:, slot].set(False)
-        for key in [k for k in self._buf if k[0] == slot]:
-            del self._buf[key]
+        self._alive_io[:, slot] = False
+        self._buf.pop(slot, None)
 
     # -- the per-tick insert ------------------------------------------------
 
@@ -245,6 +350,9 @@ class LockstepInserter:
                         f"slot {s} plans are at generation {got} but the "
                         f"inserter was attached at {self._gen[s]}; "
                         "re-attach after a plan swap before streaming")
+        for s in active:
+            if self._plans[s] is None:
+                raise ValueError(f"slot {s} has no attached session")
         y, nidx, nd2 = _embed_knn(k_new, self._mean, self._axes,
                                   self._x, self._alive, self.knn)
         y_np = np.asarray(y, np.float32)
@@ -253,13 +361,39 @@ class LockstepInserter:
         codes = morton_codes_boxes(y_np, self._lo, self._hi, self._bits)
 
         phys = np.full((self.L, self.B, self.H), -1, np.int64)
+        if active:
+            # one stacked claim pass for every (layer, slot, head) member
+            sl = np.asarray(active, np.int64)
+            m = self.L * len(active) * self.H
+            chosen = claim_slots_batched(
+                self._codes_io[:, sl].reshape(m, self.C),
+                self._alive_io[:, sl].reshape(m, self.C),
+                codes[:, sl].reshape(m),
+                block_max=(None if self._bmax_io is None else
+                           self._bmax_io[:, sl].reshape(m, -1)))
+            li, si, hi = [ix.reshape(m) for ix in np.meshgrid(
+                np.arange(self.L), sl, np.arange(self.H), indexing="ij")]
+            p_all = self._pi_io[li, si, hi, chosen]
+            phys[li, si, hi] = p_all
+            # keep the in-order mirrors exact: the claimed position turns
+            # alive and takes the arrival's code (host.codes[p] below is
+            # the same mutation seen through host.pi)
+            self._alive_io[li, si, hi, chosen] = True
+            self._codes_io[li, si, hi, chosen] = codes[li, si, hi]
+            if self._bmax_io is not None:
+                # overwriting a hole's seed code can RAISE OR LOWER its
+                # block max; recompute just the touched blocks
+                blk = chosen // CLAIM_BLOCK
+                seg = self._codes_io[
+                    li[:, None], si[:, None], hi[:, None],
+                    (blk * CLAIM_BLOCK)[:, None] + np.arange(CLAIM_BLOCK)]
+                self._bmax_io[li, si, hi, blk] = seg.max(axis=1)
+
         for s in active:
             plans = self._plans[s]
-            if plans is None:
-                raise ValueError(f"slot {s} has no attached session")
             for l, pb in enumerate(plans):
                 for h, host in enumerate(pb.hosts):
-                    p = claim_slot(host, codes[l, s, h])
+                    p = int(phys[l, s, h])
                     prev = int(host.alive.sum())
                     host.alive[p] = True
                     host.x[p] = k_np[l, s, h]
@@ -277,9 +411,8 @@ class LockstepInserter:
                         appends=host.refresh.appends + 1,
                         inserted_total=host.refresh.inserted_total + 1,
                         last_action="append")
-                    self._buf.setdefault((s, l, h), []).append(
-                        (p, nidx_np[l, s, h], nd2_np[l, s, h]))
-                    phys[l, s, h] = p
+            self._buf.setdefault(s, []).append(
+                (phys[:, s].copy(), nidx_np[:, s], nd2_np[:, s]))
 
         sentinel = np.where(phys < 0, self.C, phys).astype(np.int32)
         self._x, self._alive = _land(self._x, self._alive, k_new,
@@ -292,30 +425,38 @@ class LockstepInserter:
         """Fold the slot's buffered kNN edges into each member's host COO
         (cluster space, current ordering). Call before anything that reads
         or rewrites the COO: trim, rebucket, checkpoint. Returns the number
-        of edges folded."""
+        of edges folded.
+
+        The buffer holds one record per tick; stacking them gives each
+        member its whole backlog as one (T*knn,) slab, so the fold is a
+        single concatenation pass per member instead of per-tick list
+        churn."""
         from repro import api
 
         plans = self._plans[slot]
+        ticks = self._buf.pop(slot, [])
+        if not ticks or plans is None:
+            return 0
+        phys = np.stack([t[0] for t in ticks])      # (T, L, H)
+        nidx = np.stack([t[1] for t in ticks])      # (T, L, H, knn)
+        nd2 = np.stack([t[2] for t in ticks])
         folded = 0
-        for (s, l, h) in [k for k in self._buf if k[0] == slot]:
-            buf = self._buf.pop((s, l, h))
-            if not buf or plans is None:
-                continue
-            host = plans[l].hosts[h]
-            rows = np.repeat([e[0] for e in buf], self.knn)
-            cols = np.concatenate([e[1] for e in buf])
-            d2 = np.concatenate([e[2] for e in buf])
-            keep = host.alive[cols]          # neighbors trimmed since claim
-            rows, cols, d2 = rows[keep], cols[keep], d2[keep]
-            if rows.size == 0:
-                continue
-            vals = api._edge_values(host, rows, cols, d2)
-            r2, c2, v2 = host.coo
-            host.coo = (np.concatenate([r2, host.inv[rows]]),
-                        np.concatenate([c2, host.inv[cols]]),
-                        np.concatenate([v2, vals]))
-            host.coo_dev = None
-            folded += int(rows.size)
+        for l, pb in enumerate(plans):
+            for h, host in enumerate(pb.hosts):
+                rows = np.repeat(phys[:, l, h], self.knn)
+                cols = nidx[:, l, h].reshape(-1)
+                d2 = nd2[:, l, h].reshape(-1)
+                keep = host.alive[cols]      # neighbors trimmed since claim
+                rows, cols, d2 = rows[keep], cols[keep], d2[keep]
+                if rows.size == 0:
+                    continue
+                vals = api.edge_values(host, rows, cols, d2)
+                r2, c2, v2 = host.coo
+                host.coo = (np.concatenate([r2, host.inv[rows]]),
+                            np.concatenate([c2, host.inv[cols]]),
+                            np.concatenate([v2, vals]))
+                host.coo_dev = None
+                folded += int(rows.size)
         return folded
 
     def flush_all(self) -> int:

@@ -279,3 +279,34 @@ def test_select_blocks_never_selects_pure_future_tiles():
         assert (idx[:, :, qt] == qt).any(axis=-1).all()
         if qt >= 1:
             assert (idx[:, :, qt] == qt - 1).any(axis=-1).all()
+
+
+def test_masked_softmax_guard():
+    """Bitwise jax.nn.softmax while any column is live; exact zeros (not
+    a uniform garbage row) when the whole selection is masked."""
+    rng = np.random.default_rng(21)
+    logit = jnp.asarray(rng.standard_normal((4, 7)), jnp.float32)
+    mask = jnp.asarray(rng.random((4, 7)) < 0.5)
+    mask = mask.at[:, 0].set(True)                 # >= 1 live per row
+    got = jax.jit(ckv.masked_softmax)(logit, mask)
+    want = jax.jit(lambda x: jax.nn.softmax(x, axis=-1))(
+        jnp.where(mask, logit, ckv.NEG_INF))
+    assert bool(jnp.array_equal(got, want))
+    dead = jax.jit(ckv.masked_softmax)(logit, jnp.zeros((4, 7), bool))
+    assert bool(jnp.all(dead == 0.0))
+
+
+def test_decode_attend_empty_selection_is_zero():
+    """Early-position decode whose selected tiles are ALL unfilled or
+    future must return exact zeros — previously the all-masked softmax
+    weighted the garbage rows uniformly."""
+    rng = np.random.default_rng(22)
+    B, hq, hkv, S, dh, bk = 1, 2, 1, 64, 16, 16
+    q = jnp.asarray(rng.standard_normal((B, hq, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, hkv, S, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, hkv, S, dh)), jnp.float32)
+    pos = jnp.full((B, hkv, S), np.iinfo(np.int32).max, jnp.int32)
+    idx = jnp.zeros((B, hkv, 2), jnp.int32)
+    out = ckv.decode_attend(q, k, v, pos, 0, idx, bk)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert bool(jnp.all(out == 0.0))

@@ -180,3 +180,48 @@ def test_probe_backends_skips_interpret_pallas():
                                         iters=1, warmup=0,
                                         include_interpret=True)
     assert "pallas" in times_inc         # escape hatch still times it
+
+
+def _decode_feat(**kw):
+    base = dict(batch=8, hq=14, hkv=2, s=8192, dh=64, dv=64, bk=128,
+                n_sel=4)
+    base.update(kw)
+    return costmodel.DecodeFeatures(**base)
+
+
+def test_decode_cost_orderings():
+    """Compiled: the fused kernel's once-only tile traffic and single
+    launch beat the xla gather round-trip. Interpreted (the CPU CI
+    container): the kernel eats interpret_penalty and xla must win —
+    that asymmetry is what keeps "auto" correct on both targets."""
+    feat = _decode_feat()
+    xla = costmodel.decode_cost(feat, "xla")
+    pal = costmodel.decode_cost(feat, "pallas")
+    assert pal["hbm_bytes"] < xla["hbm_bytes"]
+    assert pal["launches"] < xla["launches"]
+    assert pal["seconds"] < xla["seconds"]
+    pal_i = costmodel.decode_cost(feat, "pallas", interpret=True)
+    assert pal_i["seconds"] > xla["seconds"]
+    assert costmodel.choose_decode_backend(feat) == "pallas"
+    assert costmodel.choose_decode_backend(feat, interpret=True) == "xla"
+
+
+def test_decode_rank_report_envelope():
+    rep = costmodel.rank_decode_backends(_decode_feat())
+    assert rep["schema"] == "repro.cost/v1"
+    assert rep["kind"] == "decode_rank"
+    assert rep["winner"] == rep["ranking"][0]
+    assert set(rep["costs"]) == {"xla", "pallas"}
+    assert rep["features"]["s"] == 8192
+    json.dumps(rep)                                  # JSON-safe
+
+
+def test_decode_choice_memoized():
+    feat = _decode_feat(batch=3)
+    costmodel._DECODE_CHOICE.clear()
+    a = costmodel.choose_decode_backend(feat)
+    assert len(costmodel._DECODE_CHOICE) == 1
+    b = costmodel.choose_decode_backend(feat)
+    assert a == b and len(costmodel._DECODE_CHOICE) == 1
+    costmodel.choose_decode_backend(feat, interpret=True)
+    assert len(costmodel._DECODE_CHOICE) == 2

@@ -209,3 +209,124 @@ def test_tsne_force_kernel(n, bs, k, d):
                                rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want_core),
                                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused decode attention (kernels/decode_attend.py)
+# ---------------------------------------------------------------------------
+#
+# The references are the JITTED pure-JAX ops: the decode service calls them
+# inside the engine's jitted tick, and on XLA:CPU an eagerly-executed dot
+# can round differently from its jitted fusion — jit is the contract.
+
+
+def _plain_decode_case(seed, B, hq, hkv, S, dh, bk, dtype):
+    from repro.core import clusterkv as ckv
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, hq, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, hkv, S, dh)),
+                    jnp.float32).astype(dtype)
+    v = jnp.asarray(rng.standard_normal((B, hkv, S, dh)),
+                    jnp.float32).astype(dtype)
+    pos = jnp.asarray(np.stack([np.stack([rng.permutation(S)
+                                          for _ in range(hkv)])
+                                for _ in range(B)]), jnp.int32)
+    cent = ckv.block_centroids(k, bk)
+    return q, k, v, pos, cent
+
+
+@pytest.mark.parametrize("hq,hkv,dtype", [
+    (1, 1, jnp.float32),           # g == 1: the strength-reduction trap
+    (4, 2, jnp.float32),
+    (8, 2, jnp.float32),
+    (4, 4, jnp.bfloat16),          # g == 1 again, bf16 cache
+    (6, 2, jnp.bfloat16),
+])
+def test_decode_fused_bitwise_plain(hq, hkv, dtype):
+    """Fused kernel == jitted decode_select + decode_attend, bitwise."""
+    from repro.core import clusterkv as ckv
+    S, dh, bk, n_sel = 128, 32, 32, 2
+    q, k, v, pos, cent = _plain_decode_case(11, 2, hq, hkv, S, dh, bk,
+                                            dtype)
+    for qpos in (S - 1, S // 3):
+        got = ops.decode_attend_fused(q, k, v, pos, cent, qpos,
+                                      n_sel=n_sel, bk=bk)
+        idx = ckv.decode_select(q, cent.astype(jnp.float32), n_sel)
+        want = ckv.decode_attend(q, k, v, pos, qpos, idx, bk)
+        assert got.dtype == want.dtype
+        assert bool(jnp.array_equal(got, want)), qpos
+
+
+@pytest.mark.parametrize("hq,hkv,has_self", [
+    (2, 2, True),                  # g == 1
+    (2, 2, False),
+    (4, 2, True),
+    (8, 2, False),
+    (8, 1, True),
+])
+def test_decode_fused_bitwise_plan_holey(hq, hkv, has_self):
+    """Plan mode vs the jitted xla decode backend over capacity-padded
+    caches: hole slots (pos == INT32_MAX) carry garbage k/v and must be
+    bitwise-invisible; the self column must ride along untouched."""
+    import functools
+
+    from repro.configs.base import ClusterKVConfig
+    from repro.models import attention as attn
+
+    B, S, dh, bk = 3, 128, 32, 32
+    cfg = ClusterKVConfig(enabled=True, block_k=bk, decode_clusters=2,
+                          decode_backend="pallas")
+    rng = np.random.default_rng(13)
+    big = np.iinfo(np.int32).max
+    q = jnp.asarray(rng.standard_normal((B, hq, dh)), jnp.bfloat16)
+    ks = jnp.asarray(rng.standard_normal((B, hkv, S, dh)), jnp.bfloat16)
+    vs = jnp.asarray(rng.standard_normal((B, hkv, S, dh)), jnp.bfloat16)
+    qpos = jnp.asarray(rng.integers(8, 96, (B,)), jnp.int32)
+    ps = np.full((B, hkv, S), big, np.int64)
+    for b in range(B):
+        live = int(qpos[b])                  # plan rows streamed so far
+        for h in range(hkv):
+            rows = rng.choice(S, live, replace=False)
+            ps[b, h, rows] = rng.permutation(live)
+    ps = jnp.asarray(ps, jnp.int32)
+    from repro.core import clusterkv as ckv
+    cent = ckv.block_centroids(ks.astype(jnp.float32), bk)
+    k_self = jnp.asarray(rng.standard_normal((B, hkv, dh)), jnp.bfloat16)
+    v_self = jnp.asarray(rng.standard_normal((B, hkv, dh)), jnp.bfloat16)
+
+    ref = jax.jit(functools.partial(attn._plan_decode_xla, cfg=cfg))
+    if has_self:
+        want = ref(q, ks, vs, ps, cent, qpos, k_self=k_self, v_self=v_self)
+        got = attn.clusterkv_plan_decode(q, ks, vs, ps, cent, qpos, cfg,
+                                         k_self=k_self, v_self=v_self)
+    else:
+        want = ref(q, ks, vs, ps, cent, qpos)
+        got = attn.clusterkv_plan_decode(q, ks, vs, ps, cent, qpos, cfg)
+    assert got.dtype == want.dtype
+    assert bool(jnp.array_equal(got, want))
+
+
+def test_decode_fused_one_trace():
+    """Re-dispatching the fused decode at a fixed shape must not re-trace
+    (the serve tick calls it every token)."""
+    q, k, v, pos, cent = _plain_decode_case(17, 2, 4, 2, 128, 32, 32,
+                                            jnp.float32)
+
+    @jax.jit
+    def tick(q, k, v, pos, cent, qpos):
+        return ops.decode_attend_fused(q, k, v, pos, cent, qpos,
+                                       n_sel=2, bk=32)
+
+    ops.PALLAS_TRACE_COUNTS["decode"] = 0
+    for qpos in (40, 50, 60):                # dynamic arg, same shape
+        tick(q, k, v, pos, cent, jnp.full((2,), qpos, jnp.int32)
+             ).block_until_ready()
+    assert ops.PALLAS_TRACE_COUNTS["decode"] == 1
+
+
+def test_decode_fused_rejects_ragged_cache():
+    q, k, v, pos, cent = _plain_decode_case(19, 1, 2, 1, 128, 32, 32,
+                                            jnp.float32)
+    with pytest.raises(ValueError, match="whole"):
+        ops.decode_attend_fused(q, k[:, :, :100], v[:, :, :100],
+                                pos[:, :, :100], cent, 99, n_sel=2, bk=32)

@@ -323,3 +323,76 @@ def test_session_store_bookkeeping():
     assert rep["counters"]["retires"] == 1
     assert rep["counters"]["evictions"] == 1
     assert rep["active_sessions"] == 0
+
+
+def test_inserter_batched_claims_agree_with_loop():
+    """claim_slots_batched == a per-member claim_slot loop under tick
+    churn (random occupancies, permuted physical layouts, with and
+    without the maintained block maxima)."""
+    from repro.serve.streaming import (CLAIM_BLOCK, claim_slot,
+                                       claim_slots_batched)
+
+    class _Host:
+        __slots__ = ("pi", "codes", "alive")
+
+    rng = np.random.default_rng(5)
+    for cap, m, ticks in [(64, 6, 12), (256, 4, 20), (512, 8, 8)]:
+        codes_io = rng.integers(0, 1 << 30, (m, cap)).astype(np.uint64)
+        codes_io.sort(axis=1)
+        alive_io = rng.random((m, cap)) < rng.uniform(0.1, 0.9)
+        hosts, pis = [], np.zeros((m, cap), np.int64)
+        for i in range(m):
+            h = _Host()
+            h.pi = rng.permutation(cap)
+            h.codes = np.empty(cap, np.uint64)
+            h.codes[h.pi] = codes_io[i]
+            h.alive = np.empty(cap, bool)
+            h.alive[h.pi] = alive_io[i]
+            hosts.append(h)
+            pis[i] = h.pi
+        use_bm = cap % CLAIM_BLOCK == 0 and cap >= 2 * CLAIM_BLOCK
+        bm = (codes_io.reshape(m, -1, CLAIM_BLOCK).max(axis=2)
+              if use_bm else None)
+        rows = np.arange(m)
+        for _ in range(ticks):
+            arr = rng.integers(0, 1 << 30, (m,)).astype(np.uint64)
+            want = np.array([claim_slot(h, arr[i])
+                             for i, h in enumerate(hosts)])
+            pos = claim_slots_batched(codes_io, alive_io, arr,
+                                      block_max=bm)
+            assert (pis[rows, pos] == want).all()
+            # churn: mutate exactly as the inserter does
+            for i, h in enumerate(hosts):
+                h.alive[want[i]] = True
+                h.codes[want[i]] = arr[i]
+            alive_io[rows, pos] = True
+            codes_io[rows, pos] = arr
+            if use_bm:
+                blk = pos // CLAIM_BLOCK
+                seg = codes_io[rows[:, None], (blk * CLAIM_BLOCK)[:, None]
+                               + np.arange(CLAIM_BLOCK)]
+                bm[rows, blk] = seg.max(axis=1)
+    full = np.ones((2, 32), bool)
+    with pytest.raises(ValueError, match="no free plan slots"):
+        claim_slots_batched(np.zeros((2, 32), np.uint64), full,
+                            np.zeros(2, np.uint64))
+
+
+def test_inserter_stale_generation_raises():
+    """An insert streamed against a stale attachment must raise, not
+    silently mutate hosts the serving plan no longer reads."""
+    from repro.core import clusterkv as ckv
+    from repro.serve.streaming import LockstepInserter
+
+    rng = np.random.default_rng(9)
+    hkv, s, cap, dh = 2, 32, 64, 16
+    keys = rng.normal(size=(hkv, s, dh)).astype(np.float32)
+    pb = ckv.kv_plan_batch(jnp.asarray(keys), knn=8, capacity=cap)
+    ins = LockstepInserter(n_layers=1, slots=1, n_heads=hkv, capacity=cap,
+                          head_dim=dh, embed_d=3, knn=8)
+    ins.attach(0, [pb], generation=2)
+    assert ins.generation(0) == 2
+    new = jnp.asarray(rng.normal(size=(1, 1, hkv, dh)), jnp.float32)
+    ins.insert([0], new, generations={0: 2})        # in sync: fine
+    with pytest.raises(RuntimeError, match="re-attach after a plan swap"):
+        ins.insert([0], new, generations={0: 3})    # plans swapped since
