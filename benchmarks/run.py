@@ -16,6 +16,8 @@ diff them — the bench trajectory convention is ``BENCH_plan.json``.
   bench_serve      beyond-paper  (decode service vs per-call Morton sort)
   bench_kernels    beyond-paper  (analytic cost model vs probe ranking,
                                   batched Pallas bit-parity)
+  bench_solvers    beyond-paper  (batched block-Jacobi CG vs plain CG
+                                  vs per-plan eager solve loop)
 
 Gated suites assert their acceptance in-suite; a failed gate is recorded
 per suite (the remaining suites still run, the JSON artifact carries the
@@ -84,8 +86,8 @@ def main() -> None:
 
     from benchmarks import (attention_bench, bench_batch, bench_kernels,
                             bench_refresh, bench_serve, bench_shard,
-                            bench_stream, fig1_orderings, fig3_throughput,
-                            micro_blas, table1_gamma)
+                            bench_solvers, bench_stream, fig1_orderings,
+                            fig3_throughput, micro_blas, table1_gamma)
     suites = {
         "fig1_orderings": fig1_orderings.run,
         "table1_gamma": table1_gamma.run,
@@ -98,6 +100,7 @@ def main() -> None:
         "bench_batch": bench_batch.run,
         "bench_serve": bench_serve.run,
         "bench_kernels": bench_kernels.run,
+        "bench_solvers": bench_solvers.run,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     unknown = [c for c in chosen if c not in suites]

@@ -1,0 +1,87 @@
+"""Kernel ridge regression through the plan operator, end to end.
+
+  PYTHONPATH=src python examples/krr.py [--n 2048]
+
+Fits ``(K + lam*I) alpha = y`` where ``K`` is the RBF kernel truncated to
+the plan's symmetrized kNN pattern — the solver never sees a matrix, only
+``plan.apply`` with the regularized diagonal folded in. Preconditioned CG
+(block-Jacobi from the plan's own diagonal BSR tiles) carries the solve;
+the fitted model predicts in-sample and at held-out points through the
+kNN-truncated cross kernel.
+
+On small problems the script also checks the matrix-free fit against a
+dense ``scipy.linalg.solve`` of the very same truncated kernel, so the
+output shows the solver agreeing with the reference to CG tolerance.
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro import api  # noqa: E402
+from repro.data.pipeline import feature_mixture  # noqa: E402
+from repro.solvers import RBFValues, krr_fit  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--d", type=int, default=16)
+    ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--lam", type=float, default=0.5)
+    ap.add_argument("--dense-check", type=int, default=2048,
+                    help="dense-reference check up to this n (0 disables)")
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    x = feature_mixture(args.n + 256, args.d, n_clusters=16, seed=0)
+    x_train, x_test = x[:args.n], x[args.n:]
+    w_true = rng.standard_normal(args.d).astype(np.float32)
+    y = np.tanh(x @ w_true).astype(np.float32)
+    y_train, y_test = y[:args.n], y[args.n:]
+
+    plan = api.build_plan(x_train, k=args.k, bs=32, sb=8, backend="bsr",
+                          symmetrize=True, values=RBFValues())
+    print(f"plan: {plan}")
+
+    t0 = time.perf_counter()
+    model = krr_fit(plan, y_train, lam=args.lam)
+    model.alpha.block_until_ready()
+    t1 = time.perf_counter()
+    res = model.result
+    print(f"fit: {int(res.iters)} CG iterations "
+          f"({'converged' if bool(res.converged) else 'NOT converged'}, "
+          f"final rel resid {float(res.resid / res.bnorm):.2e}) "
+          f"in {t1 - t0:.3f}s")
+
+    yhat = np.asarray(model.predict())
+    in_mse = float(np.mean((yhat - y_train) ** 2))
+    yhat_t = np.asarray(model.predict(x_test))
+    out_mse = float(np.mean((yhat_t - y_test) ** 2))
+    base = float(np.mean((y_test - y_train.mean()) ** 2))
+    print(f"train mse {in_mse:.4f} | test mse {out_mse:.4f} "
+          f"(predict-the-mean baseline {base:.4f})")
+
+    if args.dense_check and args.n <= args.dense_check:
+        from scipy.linalg import solve as dense_solve
+        dense = np.asarray(plan.bsr.to_dense())
+        # Gershgorin self weight (auto) + regularizer
+        shift = float(np.asarray(model.self_weight)) + args.lam
+        pi = np.asarray(plan.pi)
+        inv = np.asarray(plan.inv)
+        alpha_ref = dense_solve(
+            dense + shift * np.eye(plan.n), y_train[pi],
+            assume_a="sym")[inv]
+        err = (np.abs(np.asarray(model.alpha) - alpha_ref).max()
+               / np.abs(alpha_ref).max())
+        print(f"dense scipy reference: max rel err {err:.2e}")
+        assert err < 1e-3, "matrix-free fit disagrees with dense reference"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

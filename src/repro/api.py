@@ -109,8 +109,11 @@ from repro.core.embedding import apply_pca_map, embed, pca_map
 from repro.core.hierarchy import Tree, build_tree
 from repro.core.ordering import ORDERINGS  # noqa: F401  (re-export)
 from repro.core.registry import (backend_names, get_backend,  # noqa: F401
-                                 get_batched_backend, register_backend,
-                                 register_batched_backend)
+                                 get_batched_backend,
+                                 get_preconditioner, preconditioner_names,
+                                 register_backend,
+                                 register_batched_backend,
+                                 register_preconditioner)
 from repro.core.shardplan import ShardedPlan, shard  # noqa: F401
 
 __all__ = [
@@ -120,6 +123,7 @@ __all__ = [
     "ShardedPlan", "ORDERINGS",
     "register_backend", "register_batched_backend", "backend_names",
     "get_backend", "get_batched_backend", "edge_values",
+    "register_preconditioner", "preconditioner_names", "get_preconditioner",
 ]
 
 
@@ -159,6 +163,10 @@ class PlanConfig:
     gamma_tol: float = 0.05      # streamed-γ drift that triggers the
     #   rebucket guard (armed once the plan is γ-scored; distinct from
     #   drift_tol, which gates refresh/fill escalation)
+    # -- iterative solvers (repro.solvers: plan.solve / krr / spectral) ------
+    cg_tol: float = 1e-5         # relative residual target ||r|| <= tol ||b||
+    cg_maxiter: int = 256        # CG iteration cap (static: sizes telemetry)
+    precond: str = "block_jacobi"  # preconditioner registry name
 
     def __post_init__(self):
         if self.ell_slack < 0:
@@ -181,6 +189,20 @@ class PlanConfig:
         if self.grow_frac <= 0.0:
             raise ValueError(
                 f"grow_frac must be > 0, got {self.grow_frac}")
+        if not (isinstance(self.cg_tol, (int, float)) and self.cg_tol > 0):
+            raise ValueError(
+                f"cg_tol must be a positive relative tolerance, got "
+                f"{self.cg_tol!r}")
+        if not (isinstance(self.cg_maxiter, int) and self.cg_maxiter >= 1):
+            raise ValueError(
+                f"cg_maxiter must be an int >= 1, got {self.cg_maxiter!r}")
+        # lazy: the registry provider imports repro.solvers, which must
+        # not load during plain api import
+        from repro.core.registry import preconditioner_names
+        if self.precond not in preconditioner_names():
+            raise ValueError(
+                f"unknown preconditioner {self.precond!r}; registered: "
+                f"{preconditioner_names()}")
 
 
 @dataclass(frozen=True)
@@ -667,6 +689,33 @@ class InteractionPlan:
         """``y = A x`` in original order: unpermute ∘ apply ∘ permute."""
         self._reject_vmapped()
         return self.unpermute(self.apply(self.permute(x), backend, **kwargs))
+
+    # -- iterative solvers (repro.solvers rides the matvec) ----------------
+
+    def solve(self, b: jax.Array, *, shift: float = 0.0,
+              backend: Optional[str] = None, precond: Optional[str] = None,
+              tol: Optional[float] = None, maxiter: Optional[int] = None):
+        """Solve ``(A + shift*I) x = b`` by preconditioned CG on this
+        plan's matvec (original index order; symmetric pattern required).
+        Knobs default to the config's ``cg_tol``/``cg_maxiter``/
+        ``precond``; returns :class:`repro.solvers.CGResult` with
+        per-iteration telemetry. See ``docs/solvers.md``."""
+        from repro.solvers.krr import solve as _solve
+        return _solve(self, b, shift=shift, backend=backend,
+                      precond=precond, tol=tol, maxiter=maxiter)
+
+    def eigs(self, k: int = 6, *, m: int = 0, seed: int = 0,
+             backend: Optional[str] = None, largest: bool = True):
+        """Top (or bottom) ``k`` eigenpairs of the symmetric plan
+        operator by Lanczos on the matvec — ``(w, U)`` with ``U``
+        ``(capacity, k)`` in original index order."""
+        from repro.solvers.krr import _plan_backend
+        from repro.solvers.lanczos import lanczos_eigsh
+        self._require_bsr()
+        name = _plan_backend(self, None, backend)
+        w, U = lanczos_eigsh(lambda v: self.apply(v, backend=name),
+                             self.n, k, m=m, seed=seed, largest=largest)
+        return w, self.unpermute(U)
 
     # -- iterative value-update hooks (paper §3) ---------------------------
 
@@ -2387,6 +2436,19 @@ class PlanBatch:
         """Batched ``y_b = A_b x_b`` in original order (per-member
         permute/apply/unpermute fused into the same compiled kernel)."""
         return self._dispatch(xs, backend, "matvec", serial)
+
+    def solve(self, bs: jax.Array, *, shift: float = 0.0,
+              backend: Optional[str] = None, precond: Optional[str] = None,
+              tol: Optional[float] = None, maxiter: Optional[int] = None):
+        """Solve all B member systems ``(A_b + shift*I) x_b = b_b`` in
+        lockstep — ONE compiled CG kernel per spec (batched SpMV inside,
+        batched-Cholesky preconditioning, per-lane early freeze).
+        ``bs``: (B, capacity) or (B, capacity, t), original order, zeros
+        on hole slots. Returns :class:`repro.solvers.CGResult` with
+        per-lane telemetry."""
+        from repro.solvers.krr import solve as _solve
+        return _solve(self, bs, shift=shift, backend=backend,
+                      precond=precond, tol=tol, maxiter=maxiter)
 
     # -- lockstep streaming (per-member tiers, one shared re-spec) ---------
 

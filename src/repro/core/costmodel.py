@@ -267,6 +267,111 @@ def rank_backends(feat: CostFeatures, names: Iterable[str], *,
 
 
 # ---------------------------------------------------------------------------
+# iterative-solver pricing (repro.solvers: CG on the plan matvec)
+# ---------------------------------------------------------------------------
+
+
+def _precond_cost(feat: CostFeatures, precond: str,
+                  hw: HardwareConfig) -> Tuple[float, float, float, float]:
+    """(setup_flops, setup_bytes, apply_flops, apply_bytes) of one
+    preconditioner on one solve. Setup runs once per solve (inside the
+    solver kernel); apply runs every iteration."""
+    B, f = feat.batch, feat.f
+    vec = B * feat.capacity * f * _ELEM
+    if precond == "block_jacobi":
+        blocks = B * feat.n_rb
+        # extraction reads every ELL tile once; Cholesky is bs^3/3 per
+        # block; each apply is two triangular solves (bs^2 flops per rhs
+        # column) streaming the factors
+        setup_flops = blocks * feat.bs ** 3 / 3.0
+        setup_bytes = B * feat.n_rb * max(feat.max_nbr, 1) \
+            * feat.bs * feat.bs * _ELEM
+        apply_flops = 2.0 * blocks * feat.bs ** 2 * f
+        apply_bytes = blocks * feat.bs * feat.bs * _ELEM + 2 * vec
+        return setup_flops, setup_bytes, apply_flops, apply_bytes
+    if precond == "jacobi":
+        setup_bytes = B * feat.n_rb * max(feat.max_nbr, 1) \
+            * feat.bs * feat.bs * _ELEM        # diagonal still reads tiles
+        return 0.0, setup_bytes, B * feat.capacity * f, 3 * vec
+    # identity / unknown: free
+    return 0.0, 0.0, 0.0, 0.0
+
+
+def solver_cost(feat: CostFeatures, backend: str, *,
+                iters: int, precond: str = "block_jacobi",
+                hw: Optional[HardwareConfig] = None,
+                interpret: bool = False, n_dev: int = 1) -> dict:
+    """Closed-form cost of one (batched) CG solve: ``setup + iters *
+    per_iteration``.
+
+    Per iteration: one backend matvec (:func:`backend_cost` — the
+    dominant term, which is why solver backend choice is *inherited*
+    from :func:`rank_backends`), one preconditioner apply, and the CG
+    vector work (axpys + dots, ~10 streamed vector passes per
+    iteration). Setup: the preconditioner factorization. The ``iters``
+    estimate is the caller's (telemetry from a prior solve, or a bound
+    from the expected conditioning).
+    """
+    hw = hw or get_hardware()
+    mv = backend_cost(feat, backend, hw, interpret=interpret, n_dev=n_dev)
+    su_f, su_b, ap_f, ap_b = _precond_cost(feat, precond, hw)
+    vec = feat.batch * feat.capacity * feat.f * _ELEM
+    cg_bytes = 10.0 * vec                   # x/r/z/p updates + two dots
+    cg_flops = 10.0 * feat.batch * feat.capacity * feat.f
+    iter_s = mv["seconds"] \
+        + max(ap_f / hw.peak_flops, (ap_b + cg_bytes) / hw.hbm_bw)
+    setup_s = max(su_f / hw.peak_flops, su_b / hw.hbm_bw) \
+        + hw.launch_overhead
+    total = setup_s + iters * iter_s
+    return {"backend": backend, "precond": precond, "iters": iters,
+            "matvec": mv,
+            "setup_flops": su_f, "setup_bytes": su_b,
+            "iter_flops": mv["flops"] + ap_f + cg_flops,
+            "iter_bytes": mv["hbm_bytes"] + ap_b + cg_bytes,
+            "setup_seconds": setup_s, "iter_seconds": iter_s,
+            "seconds": total}
+
+
+def rank_solver_backends(feat: CostFeatures, names: Iterable[str], *,
+                         iters: int, precond: str = "block_jacobi",
+                         hw: Optional[HardwareConfig] = None,
+                         calibration: Optional[Mapping[str, float]] = None,
+                         interpret: bool = False, n_dev: int = 1) -> dict:
+    """Analytic solver-backend ranking — the ``repro.cost/v1`` envelope,
+    kind ``"solver_rank"``. The preconditioner and CG terms are
+    backend-independent, so the induced ranking matches
+    :func:`rank_backends` on the same features (the matvec owns the
+    iteration); what this report adds is honest absolute totals: setup
+    amortization and the per-iteration floor the solver pays on top of
+    the SpMV."""
+    hw = hw or get_hardware()
+    calibration = calibration or {}
+    costs: Dict[str, dict] = {}
+    predicted: Dict[str, float] = {}
+    for name in names:
+        ratio = float(calibration.get(name, 1.0))
+        if ratio != ratio or ratio == float("inf"):
+            continue
+        c = solver_cost(feat, name, iters=iters, precond=precond, hw=hw,
+                        interpret=interpret, n_dev=n_dev)
+        costs[name] = c
+        predicted[name] = c["setup_seconds"] \
+            + iters * (ratio * c["matvec"]["seconds"]
+                       + c["iter_seconds"] - c["matvec"]["seconds"])
+    ranking = sorted(predicted, key=predicted.get)
+    return make_report("solver_rank", {
+        "features": dataclasses.asdict(feat),
+        "iters": iters,
+        "precond": precond,
+        "costs": costs,
+        "calibration": {k: calibration.get(k) for k in predicted},
+        "predicted_s": predicted,
+        "ranking": ranking,
+        "winner": ranking[0] if ranking else None,
+    }, hw)
+
+
+# ---------------------------------------------------------------------------
 # decode-attention pricing (serve tick: models.attention decode backends)
 # ---------------------------------------------------------------------------
 

@@ -28,8 +28,10 @@ from typing import Callable, Dict, Tuple
 _BACKENDS: Dict[str, Callable] = {}
 _BATCHED: Dict[str, Callable] = {}
 _DECODE: Dict[str, Callable] = {}
+_PRECOND: Dict[str, Callable] = {}
 _DEFAULTS_LOADED = False
 _DECODE_LOADED = False
+_PRECOND_LOADED = False
 
 # modules that register the built-in backends at import time
 _DEFAULT_PROVIDERS = ("repro.core.interact", "repro.kernels.ops",
@@ -38,6 +40,9 @@ _DEFAULT_PROVIDERS = ("repro.core.interact", "repro.kernels.ops",
 # importing the SpMV providers never drags the model stack in, and vice
 # versa
 _DECODE_PROVIDERS = ("repro.models.attention", "repro.kernels.ops")
+# modules that register the built-in PRECONDITIONERS (repro.solvers); its
+# own latch keeps the solver subsystem out of plain SpMV imports
+_PRECOND_PROVIDERS = ("repro.solvers.precond",)
 
 
 def register_backend(name: str, fn: Callable | None = None, *,
@@ -197,3 +202,79 @@ def get_decode_backend(name: str) -> Callable:
 def decode_backend_names() -> Tuple[str, ...]:
     _ensure_decode_defaults()
     return tuple(sorted(_DECODE))
+
+
+# ---------------------------------------------------------------------------
+# preconditioners (repro.solvers: the iterative-solver subsystem)
+# ---------------------------------------------------------------------------
+#
+# A preconditioner is a FACTORY
+#
+#     fn(spec: PlanSpec, data: PlanData, shift: jax.Array) -> apply
+#
+# factoring an approximation of ``A' + shift*I`` (the plan operator in
+# cluster order, diagonal-shifted) and returning ``apply(r) -> z`` with
+# ``z ~= (A' + shift I)^-1 r`` over cluster-ordered residuals ``r`` of
+# shape (..., capacity) or (..., capacity, f). Factories are called
+# *inside* the jitted solver kernel — state (e.g. Cholesky factors of the
+# diagonal tiles) is traced, the factory itself is resolved by (static)
+# name, so one compiled solver serves a whole PlanBatch. Built-ins
+# (registered by ``repro.solvers.precond``):
+#
+#   identity      no preconditioning (z = r)
+#   jacobi        pointwise diagonal scaling
+#   block_jacobi  batched Cholesky of the dense diagonal BSR tiles
+#                 (dead/hole slots get identity rows, never singular ones)
+
+
+def register_preconditioner(name: str, fn: Callable | None = None, *,
+                            overwrite: bool = False):
+    """Register ``fn`` as preconditioner factory ``name`` (decorator-friendly).
+
+    Mirrors :func:`register_backend`: duplicate names raise unless
+    ``overwrite=True``; re-registering the same callable is a no-op.
+    """
+
+    def _register(f: Callable) -> Callable:
+        prev = _PRECOND.get(name)
+        if prev is not None and prev is not f and not overwrite:
+            raise ValueError(
+                f"preconditioner {name!r} is already registered "
+                f"({prev.__module__}.{prev.__qualname__}); pass "
+                "overwrite=True to replace it deliberately")
+        _PRECOND[name] = f
+        return f
+
+    return _register if fn is None else _register(fn)
+
+
+def _ensure_precond_defaults() -> None:
+    global _PRECOND_LOADED
+    if _PRECOND_LOADED:
+        return
+    import importlib
+
+    for mod in _PRECOND_PROVIDERS:
+        importlib.import_module(mod)
+    _PRECOND_LOADED = True
+
+
+def get_preconditioner(name: str) -> Callable:
+    _ensure_precond_defaults()
+    try:
+        return _PRECOND[name]
+    except KeyError:
+        import difflib
+
+        close = difflib.get_close_matches(name, preconditioner_names(), n=1,
+                                          cutoff=0.5)
+        hint = f" — did you mean {close[0]!r}?" if close else ""
+        raise ValueError(
+            f"unknown preconditioner {name!r}{hint}; "
+            f"registered: {preconditioner_names()}"
+        ) from None
+
+
+def preconditioner_names() -> Tuple[str, ...]:
+    _ensure_precond_defaults()
+    return tuple(sorted(_PRECOND))

@@ -358,6 +358,18 @@ class ShardedPlan:
         """``y = A x`` in original order (permute ∘ apply ∘ unpermute)."""
         return self.plan.unpermute(self.apply(self.plan.permute(x)))
 
+    def solve(self, b: jax.Array, *, shift: float = 0.0,
+              precond: "str | None" = None,
+              tol: "float | None" = None,
+              maxiter: "int | None" = None):
+        """CG on the sharded matvec: each iteration runs the compiled
+        halo-exchange SpMV, the dot products reduce over the device axis
+        (mesh-sharded arrays psum implicitly). 1-D right-hand sides only
+        (the sharded apply's contract); see ``docs/solvers.md``."""
+        from repro.solvers.krr import solve as _solve
+        return _solve(self, b, shift=shift, precond=precond, tol=tol,
+                      maxiter=maxiter)
+
     # -- introspection -----------------------------------------------------
 
     @property

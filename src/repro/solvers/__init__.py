@@ -1,0 +1,56 @@
+"""Matrix-free iterative solvers on the plan operator.
+
+The plan substrate (build -> order -> ELL-BSR -> batched/sharded matvec)
+is this subsystem's ONLY access to the interaction matrix: CG, Lanczos,
+kernel ridge regression, and spectral embedding all consume
+``InteractionPlan`` / ``PlanBatch`` / ``ShardedPlan`` through their
+matvecs. See ``docs/solvers.md``.
+
+  cg        batched preconditioned conjugate gradient (telemetry, early
+            exit, one ``lax.while_loop`` for every lane)
+  precond   preconditioner factories from the plan's own BSR diagonal
+            (block-Jacobi via batched Cholesky; registry-resolved)
+  krr       generic ``solve`` dispatch + kernel ridge regression
+  lanczos   tridiagonalization with full reorthogonalization
+  spectral  KDE similarity graph + normalized-Laplacian embedding
+
+``krr``/``spectral`` import ``repro.api`` and load lazily here so that
+``repro.core.registry``'s preconditioner provider import (which pulls
+this package in) never recurses into a partially-initialized ``api``.
+"""
+from __future__ import annotations
+
+from repro.solvers.cg import CGResult, cg
+from repro.solvers.lanczos import LanczosResult, lanczos, lanczos_eigsh
+from repro.solvers.precond import (block_jacobi, diag_tiles, diag_vector,
+                                   identity, jacobi)
+
+__all__ = [
+    "CGResult", "cg",
+    "LanczosResult", "lanczos", "lanczos_eigsh",
+    "block_jacobi", "diag_tiles", "diag_vector", "identity", "jacobi",
+    "KRRModel", "solve", "krr_fit", "krr_fit_batch",
+    "RBFValues", "similarity_plan", "redress_rbf", "normalized_operator",
+    "spectral_embedding",
+]
+
+_LAZY = {
+    "KRRModel": "repro.solvers.krr",
+    "solve": "repro.solvers.krr",
+    "krr_fit": "repro.solvers.krr",
+    "krr_fit_batch": "repro.solvers.krr",
+    "RBFValues": "repro.solvers.spectral",
+    "similarity_plan": "repro.solvers.spectral",
+    "redress_rbf": "repro.solvers.spectral",
+    "normalized_operator": "repro.solvers.spectral",
+    "spectral_embedding": "repro.solvers.spectral",
+}
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)

@@ -1,0 +1,158 @@
+"""Batched preconditioned conjugate gradient over matrix-free operators.
+
+The plan substrate turned the paper's near-neighbor pattern into a fast,
+batched, shardable symmetric operator; this module consumes it as one.
+``cg`` sees nothing but a callable ``A(x) -> y`` — a single
+``InteractionPlan.apply``, a ``PlanBatch`` batched kernel, or a
+``ShardedPlan`` halo-exchange matvec all fit — and runs every lane of a
+stacked right-hand side in lockstep inside ONE ``lax.while_loop``:
+
+  * early exit: the loop stops as soon as every lane's residual is under
+    its tolerance (or ``maxiter`` is reached) — converged lanes freeze
+    (their updates are masked out), they never drift or overflow while
+    slow lanes finish;
+  * telemetry: per-lane iteration counts and the full per-iteration
+    residual-norm history ride back on :class:`CGResult` (history entries
+    a lane never ran are NaN, so convergence curves plot honestly);
+  * preconditioning: ``M`` is any callable ``M(r) -> z`` approximating
+    ``A^-1 r`` (see ``repro.solvers.precond`` and the registry in
+    ``repro.core.registry``).
+
+Lane layout: the n-axis is ``axis`` (default last). ``b`` of shape
+``(n,)`` is one problem; ``(B, n)`` is B lockstep problems; ``(B, n, t)``
+with ``axis=-2`` is B problems with t right-hand sides each — exactly the
+charge layout the batched SpMV kernels take, so a whole ``PlanBatch`` KRR
+fit is one compiled solver kernel.
+
+Everything here traces cleanly: wrap ``cg`` in ``jax.jit`` with the
+operator closed over (``repro.solvers.krr`` does, one kernel per
+``PlanSpec``), or call it eagerly (the sharded path does — ``A`` then
+dispatches the compiled shard_map per iteration, and the dot products
+reduce over the device axis with a psum).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CGResult", "cg"]
+
+
+@dataclasses.dataclass
+class CGResult:
+    """Solution + convergence telemetry of one (batched) CG run.
+
+    ``x`` has ``b``'s shape. ``iters``/``converged``/``resid``/``bnorm``
+    have the lane shape (``b``'s shape with the n-axis removed);
+    ``history`` appends a trailing ``maxiter + 1`` axis to the lane
+    shape: ``history[..., j]`` is the residual 2-norm *after* j
+    iterations, NaN for iterations a lane never ran (it had already
+    converged, or the loop had exited). ``resid`` is each lane's final
+    residual norm; a lane ``converged`` iff ``resid <= tol * bnorm``.
+    """
+    x: jax.Array
+    iters: jax.Array
+    resid: jax.Array
+    bnorm: jax.Array
+    converged: jax.Array
+    history: jax.Array
+
+    def tree_flatten(self):
+        return ((self.x, self.iters, self.resid, self.bnorm,
+                 self.converged, self.history), None)
+
+    @classmethod
+    def tree_unflatten(cls, _aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    CGResult, CGResult.tree_flatten, CGResult.tree_unflatten)
+
+
+def _norm(v: jax.Array, axis: int) -> jax.Array:
+    """Lane-wise 2-norm, n-axis kept (size 1) for broadcasting."""
+    return jnp.sqrt(jnp.sum(v * v, axis=axis, keepdims=True))
+
+
+def _dot(u: jax.Array, v: jax.Array, axis: int) -> jax.Array:
+    return jnp.sum(u * v, axis=axis, keepdims=True)
+
+
+def cg(A: Callable, b: jax.Array, *,
+       M: Optional[Callable] = None,
+       tol: float = 1e-5,
+       maxiter: int = 256,
+       axis: int = -1,
+       x0: Optional[jax.Array] = None) -> CGResult:
+    """Preconditioned conjugate gradient on the symmetric operator ``A``.
+
+    Solves ``A x = b`` per lane to relative tolerance
+    ``||r|| <= tol * ||b||`` (lanes with ``||b|| == 0`` converge
+    immediately to ``x = 0``). ``A`` and ``M`` must accept/return arrays
+    of ``b``'s full shape. One ``lax.while_loop`` drives all lanes; see
+    the module docstring for layout and telemetry semantics.
+    """
+    if maxiter < 1:
+        raise ValueError(f"cg needs maxiter >= 1, got {maxiter}")
+    b = jnp.asarray(b)
+    ax = axis % b.ndim - b.ndim          # normalize to a negative axis
+    M = M if M is not None else (lambda r: r)
+
+    x = jnp.zeros_like(b) if x0 is None else jnp.asarray(x0)
+    r = b - A(x) if x0 is not None else b
+    z = M(r)
+    p = z
+    rz = _dot(r, z, ax)
+    bnorm = _norm(b, ax)
+    rnorm0 = _norm(r, ax)
+    target = tol * bnorm
+
+    lane_shape = rnorm0.shape            # n-axis collapsed to 1
+    # history rides with an explicit trailing axis; squeeze the kept
+    # n-axis out of the lane scalars when writing
+    hist = jnp.full(jnp.squeeze(rnorm0, ax).shape + (maxiter + 1,),
+                    jnp.nan, b.dtype)
+    hist = hist.at[..., 0].set(jnp.squeeze(rnorm0, ax))
+
+    active0 = rnorm0 > target
+    iters0 = jnp.zeros(lane_shape, jnp.int32)
+
+    def cond(state):
+        k, _x, _r, _z, _p, _rz, active, _it, _h = state
+        return jnp.logical_and(k < maxiter, jnp.any(active))
+
+    def body(state):
+        k, x, r, z, p, rz, active, iters, hist = state
+        Ap = A(p)
+        pAp = _dot(p, Ap, ax)
+        # frozen lanes take a zero step (guard the 0/0 of a finished lane)
+        alpha = jnp.where(active, rz / jnp.where(pAp == 0, 1.0, pAp), 0.0)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        z_new = M(r)
+        rz_new = _dot(r, z_new, ax)
+        beta = jnp.where(active, rz_new / jnp.where(rz == 0, 1.0, rz), 0.0)
+        p = jnp.where(active, z_new + beta * p, p)
+        rnorm = _norm(r, ax)
+        still = rnorm > target
+        iters = iters + active.astype(jnp.int32)
+        hist = hist.at[..., k + 1].set(
+            jnp.squeeze(jnp.where(active, rnorm, jnp.nan), ax))
+        return (k + 1, x, r, z_new, p,
+                jnp.where(active, rz_new, rz),
+                jnp.logical_and(active, still), iters, hist)
+
+    state = (jnp.asarray(0, jnp.int32), x, r, z, p, rz, active0, iters0,
+             hist)
+    _, x, r, _, _, _, _, iters, hist = jax.lax.while_loop(cond, body, state)
+    resid = _norm(r, ax)
+    return CGResult(x=x,
+                    iters=jnp.squeeze(iters, ax),
+                    resid=jnp.squeeze(resid, ax),
+                    bnorm=jnp.squeeze(bnorm, ax),
+                    converged=jnp.squeeze(resid <= target, ax),
+                    history=hist)

@@ -1,0 +1,315 @@
+"""Kernel ridge regression (and generic solves) on the plan operator.
+
+Rebrova et al. (1803.10274) drive CG for kernel ridge regression through
+a hierarchical kernel format; here the format is the plan's ELL-BSR and
+the solver never sees anything but matvecs. The regression system
+
+    (K + lam*I) alpha = y,     K = W + self_weight*I
+
+is solved matrix-free: ``W`` is the plan's dressed near-neighbor pattern
+(the kNN pattern excludes self-edges, so the kernel's diagonal rides as
+an explicit ``self_weight``) and the whole diagonal ``shift =
+self_weight + lam`` is folded into the operator — one fused
+``A(v) = plan_apply(v) + shift*v`` per CG iteration, no second kernel.
+
+One compiled solver per spec
+----------------------------
+
+``solve`` dispatches on the operator kind:
+
+  InteractionPlan  one jitted kernel per (spec, backend, precond,
+                   maxiter, rhs shape): permutation, preconditioner
+                   factorization, and the whole CG ``while_loop`` trace
+                   into a single XLA computation.
+  PlanBatch        the same kernel shape over stacked ``PlanData`` —
+                   B member systems solved in lockstep by ONE compiled
+                   trace per spec (the batched SpMV kernels do the B-way
+                   matvec, the batched Cholesky preconditions every
+                   lane), however many members ride the batch.
+  ShardedPlan      eager CG over the halo-exchange matvec: each
+                   iteration dispatches the compiled shard_map, and the
+                   CG dot products reduce over the device axis (psum
+                   under the hood — the arrays are mesh-sharded).
+
+Backends resolve through the plan's own autotune; host-bound paths
+(``csr`` reads host COO, ``dist`` issues collectives) cannot live inside
+the solver jit and fall back to ``bsr``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.core import knn
+from repro.core.registry import get_backend, get_preconditioner
+from repro.solvers.cg import CGResult, cg
+
+__all__ = ["KRRModel", "solve", "krr_fit", "krr_fit_batch"]
+
+# backends whose compute is pure device arrays and can be traced into the
+# solver kernel (csr reads host COO, dist runs collectives)
+_JIT_SAFE = ("bsr", "bsr_ml", "pallas")
+
+
+def _lane_shift(shift, ndim: int):
+    """Broadcast a scalar or per-lane ``(B,)`` shift against the operand
+    layout (lanes lead, the n/rhs axes trail)."""
+    s = jnp.asarray(shift)
+    return s.reshape(s.shape + (1,) * (ndim - s.ndim))
+
+
+def _solver_knobs(config, backend, precond, tol, maxiter):
+    """Per-call overrides fall back to the plan's configured solver
+    knobs (validated at PlanConfig construction)."""
+    return (backend,
+            precond if precond is not None else config.precond,
+            float(tol) if tol is not None else config.cg_tol,
+            int(maxiter) if maxiter is not None else config.cg_maxiter)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "backend", "precond", "maxiter"))
+def _solve_single_kernel(spec, data, b, shift, tol, backend: str,
+                         precond: str, maxiter: int) -> CGResult:
+    """One plan, one compiled solve: permute -> precondition -> CG ->
+    unpermute, all inside a single jit."""
+    axis = -1 if b.ndim == 1 else -2
+    b_cl = jnp.take(b, data.pi, axis=0)
+    M = get_preconditioner(precond)(spec, data, shift)
+    fn = get_backend(backend)
+    view = api.InteractionPlan.from_spec_data(spec, data)
+    sh = _lane_shift(shift, b.ndim)
+
+    def A(v):
+        return fn(view, v) + sh * v
+
+    res = cg(A, b_cl, M=lambda r: M(r, axis=axis), tol=tol,
+             maxiter=maxiter, axis=axis)
+    return dataclasses.replace(res, x=jnp.take(res.x, data.inv, axis=0))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "backend", "precond", "maxiter"))
+def _solve_batch_kernel(spec, data, b, shift, tol, backend: str,
+                        precond: str, maxiter: int) -> CGResult:
+    """Whole-batch solve under ONE jit: stacked permutations, batched
+    preconditioner factorization, lockstep CG on the batched SpMV."""
+    axis = -1 if b.ndim == 2 else -2
+    b_cl = api._batch_take(b, data.pi)
+    M = get_preconditioner(precond)(spec, data, shift)
+    sh = _lane_shift(shift, b.ndim)
+
+    def A(v):
+        return api._batch_apply_kernel(spec, data, v, backend,
+                                       "apply") + sh * v
+
+    res = cg(A, b_cl, M=lambda r: M(r, axis=axis), tol=tol,
+             maxiter=maxiter, axis=axis)
+    return dataclasses.replace(res, x=api._batch_take(res.x, data.inv))
+
+
+def _plan_backend(plan: "api.InteractionPlan", b, backend) -> str:
+    name = plan.resolve_backend(backend, x=None)
+    return name if name in _JIT_SAFE else "bsr"
+
+
+def solve(operator, b, *, shift: float = 0.0,
+          backend: Optional[str] = None,
+          precond: Optional[str] = None,
+          tol: Optional[float] = None,
+          maxiter: Optional[int] = None) -> CGResult:
+    """Solve ``(A + shift*I) x = b`` on a plan-shaped operator.
+
+    ``operator`` is an :class:`~repro.api.InteractionPlan`,
+    :class:`~repro.api.PlanBatch`, or
+    :class:`~repro.core.shardplan.ShardedPlan`; ``b`` is in ORIGINAL
+    index order — ``(capacity,)`` / ``(capacity, t)`` for single and
+    sharded plans, ``(B, capacity)`` / ``(B, capacity, t)`` for a batch
+    (zero-pad dead/hole slots; their solutions come back ``b/shift``,
+    i.e. zero). The stored pattern must be symmetric
+    (``symmetrize=True`` or symmetric values) — CG assumes it.
+    Solver knobs default to the plan's config (``cg_tol``,
+    ``cg_maxiter``, ``precond``); returns a :class:`CGResult` with
+    telemetry (see ``docs/solvers.md``).
+    """
+    if isinstance(operator, api.PlanBatch):
+        batch = operator
+        b = jnp.asarray(b)
+        if b.ndim not in (2, 3) or b.shape[0] != batch.batch \
+                or b.shape[1] != batch.capacity:
+            raise ValueError(
+                f"batched right-hand side must be (B={batch.batch}, "
+                f"capacity={batch.capacity}[, t]); got {b.shape}")
+        name = batch.resolve_backend(backend, x=b)
+        _, prec, tol, maxiter = _solver_knobs(batch.spec.config, name,
+                                              precond, tol, maxiter)
+        return _solve_batch_kernel(batch.spec, batch.data, b,
+                                   jnp.asarray(shift, jnp.float32),
+                                   jnp.float32(tol), name, prec, maxiter)
+    if isinstance(operator, api.ShardedPlan):
+        return _solve_sharded(operator, b, shift=shift, precond=precond,
+                              tol=tol, maxiter=maxiter)
+    plan = operator
+    plan._require_bsr()
+    b = jnp.asarray(b)
+    if b.shape[0] != plan.n:
+        raise ValueError(f"right-hand side has {b.shape[0]} rows, plan "
+                         f"capacity is {plan.n}")
+    name = _plan_backend(plan, b, backend)
+    _, prec, tol, maxiter = _solver_knobs(plan.config, name, precond, tol,
+                                          maxiter)
+    return _solve_single_kernel(plan.spec, plan.data, b,
+                                jnp.asarray(shift, jnp.float32),
+                                jnp.float32(tol), name, prec, maxiter)
+
+
+def _solve_sharded(sp, b, *, shift=0.0, precond=None, tol=None,
+                   maxiter=None) -> CGResult:
+    """CG over the halo-exchange matvec (1-D charges only — the sharded
+    apply's contract). The preconditioner factors from the *unsharded*
+    tiles the wrapped plan still owns and applies in cluster order."""
+    plan = sp.plan
+    b = jnp.asarray(b)
+    if b.ndim != 1:
+        raise ValueError("sharded solves take 1-D right-hand sides "
+                         f"(the sharded matvec contract); got {b.shape}")
+    _, prec, tol, maxiter = _solver_knobs(plan.config, None, precond, tol,
+                                          maxiter)
+    M_cl = get_preconditioner(prec)(plan.spec, plan.data,
+                                    jnp.float32(shift))
+
+    def A(v):
+        return sp.matvec(v) + shift * v
+
+    def M(r):
+        return plan.unpermute(M_cl(plan.permute(r), axis=-1))
+
+    return cg(A, b, M=M, tol=tol, maxiter=maxiter)
+
+
+# ---------------------------------------------------------------------------
+# kernel ridge regression
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class KRRModel:
+    """Fitted KRR weights + the solve's convergence telemetry.
+
+    ``alpha`` is in original index order (``(capacity[, t])`` or
+    ``(B, capacity[, t])``); dead/hole slots carry zeros. ``predict()``
+    with no argument is the in-sample fit ``K alpha``; ``predict(x_new)``
+    (single plans only) evaluates the cross-kernel sparsely through the
+    k nearest *training* neighbors of each test point — the same
+    near-neighbor truncation the training pattern uses.
+    """
+    operator: "Union[api.InteractionPlan, api.PlanBatch]"
+    alpha: jax.Array
+    lam: float
+    self_weight: "float | jax.Array"     # per-lane (B,) under "auto"
+    result: CGResult
+
+    def predict(self, x_new=None, *, k: Optional[int] = None) -> jax.Array:
+        if x_new is None:
+            sw = _lane_shift(self.self_weight, self.alpha.ndim)
+            return self.operator.matvec(self.alpha) + sw * self.alpha
+        op = self.operator
+        if isinstance(op, api.PlanBatch):
+            raise NotImplementedError(
+                "out-of-sample prediction is per-member: call "
+                "batch.member(i) and fit/predict on the member plan")
+        host = op.host
+        if host.x is None:
+            raise ValueError("plan carries no training coordinates "
+                             "(built from_coo without x); out-of-sample "
+                             "prediction needs them")
+        x_new = np.asarray(x_new, np.float32)
+        k = k or op.config.k
+        valid = None if host.alive is None else jnp.asarray(host.alive)
+        idx, d2 = knn.knn_graph(jnp.asarray(x_new), jnp.asarray(host.x),
+                                k, valid=valid)
+        idx, d2 = np.asarray(idx), np.asarray(d2)
+        m = x_new.shape[0]
+        w = api.edge_values(host, np.repeat(np.arange(m), k),
+                            idx.reshape(-1), d2.reshape(-1))
+        w = jnp.asarray(w.reshape(m, k))
+        anbr = jnp.take(jnp.asarray(self.alpha), jnp.asarray(idx), axis=0)
+        if anbr.ndim == 2:                      # (m, k) neighbor weights
+            return jnp.sum(w * anbr, axis=1)
+        return jnp.sum(w[..., None] * anbr, axis=1)   # multi-target
+
+
+def _auto_self_weight(op) -> jax.Array:
+    """Gershgorin diagonal shift: the max weighted degree of the stored
+    pattern (one matvec of ones on the already-compiled apply kernel).
+    ``W + deg_max*I`` is diagonally dominant, hence PSD, for NONNEGATIVE
+    edge weights — the kNN-truncated RBF kernel is indefinite in general
+    (truncation destroys positive definiteness; the example data shows
+    eigenvalues below -4), and this shift is what makes the KRR system
+    provably SPD whatever the data. Per-lane for a batch."""
+    if isinstance(op, api.PlanBatch):
+        ones = jnp.ones((op.batch, op.capacity), jnp.float32)
+        return jnp.max(op.apply(ones), axis=-1)          # (B,)
+    plan = op.plan if isinstance(op, api.ShardedPlan) else op
+    deg = op.apply(jnp.ones(plan.n, jnp.float32))
+    return jnp.max(deg)
+
+
+def _resolve_self_weight(op, self_weight):
+    if isinstance(self_weight, str):
+        if self_weight != "auto":
+            raise ValueError(f"self_weight must be a number or 'auto', "
+                             f"got {self_weight!r}")
+        return _auto_self_weight(op)
+    return self_weight
+
+
+def krr_fit(plan, y, lam: float, *,
+            self_weight: "float | str" = "auto",
+            backend: Optional[str] = None,
+            precond: Optional[str] = None,
+            tol: Optional[float] = None,
+            maxiter: Optional[int] = None) -> KRRModel:
+    """Fit ``(W + (self_weight + lam) I) alpha = y`` on one plan (or a
+    sharded plan). ``lam > 0`` is required: dead/hole rows contribute a
+    bare ``shift`` diagonal. ``self_weight="auto"`` (default) uses the
+    Gershgorin shift (see :func:`_auto_self_weight`) — the kNN-truncated
+    kernel is NOT positive definite on clustered data, so a fixed
+    ``self_weight=1.0`` (the classical RBF diagonal) only converges when
+    the truncation happens to stay definite. ``y``: ``(capacity,)`` or
+    ``(capacity, t)``."""
+    if lam <= 0:
+        raise ValueError(f"krr needs lam > 0, got {lam}")
+    sw = _resolve_self_weight(plan, self_weight)
+    res = solve(plan, y, shift=sw + lam, backend=backend, precond=precond,
+                tol=tol, maxiter=maxiter)
+    op = plan.plan if isinstance(plan, api.ShardedPlan) else plan
+    return KRRModel(operator=op, alpha=res.x, lam=lam,
+                    self_weight=sw, result=res)
+
+
+def krr_fit_batch(batch, ys, lam: float, *,
+                  self_weight: "float | str" = "auto",
+                  backend: Optional[str] = None,
+                  precond: Optional[str] = None,
+                  tol: Optional[float] = None,
+                  maxiter: Optional[int] = None) -> KRRModel:
+    """Fit B member systems in lockstep — ONE compiled solver trace per
+    spec however many members ride the batch (``self_weight="auto"``
+    adds one dispatch of the batched *apply* kernel for the per-lane
+    Gershgorin shift; the solver kernel still compiles once). ``ys``:
+    ``(B, capacity)`` or ``(B, capacity, t)`` (``batch.pad_charges``
+    packs ragged member targets)."""
+    if lam <= 0:
+        raise ValueError(f"krr needs lam > 0, got {lam}")
+    sw = _resolve_self_weight(batch, self_weight)
+    res = solve(batch, ys, shift=sw + lam, backend=backend,
+                precond=precond, tol=tol, maxiter=maxiter)
+    return KRRModel(operator=batch, alpha=res.x, lam=lam,
+                    self_weight=sw, result=res)

@@ -1,0 +1,174 @@
+"""Preconditioners factored from the plan's own block-sparse storage.
+
+The ELL-BSR already stores the near-field of the reordered operator as
+dense ``bs x bs`` tiles — and on a well-ordered plan (high γ) the
+*diagonal* tiles hold most of the interaction mass. Block-Jacobi exploits
+exactly that: slice the diagonal tile of every row-block straight out of
+the ELL slots (no densification of the off-diagonal storage, no host
+round-trip), shift by the solve's regularizer, Cholesky-factor all blocks
+in one batched call, and apply via two batched triangular solves per CG
+iteration.
+
+Factories follow the registry protocol (``repro.core.registry``):
+
+    factory(spec: PlanSpec, data: PlanData, shift) -> apply(r) -> z
+
+``spec``/``data`` are the plan's structure/array halves — a stacked
+``PlanBatch`` pair works unchanged (every batched op here broadcasts over
+leading axes), so one compiled solver kernel preconditions the whole
+batch. Factories run *inside* the solver's jit: resolved by static name,
+their state (factors) is traced per call.
+
+Dead slots (streaming tombstones, capacity-padding holes) contribute
+zero rows/columns to the operator; the extraction rewrites each dead
+slot's diagonal entry to 1 so the factored blocks stay SPD whatever the
+shift — the solve then returns ``b/shift``-style values on dead rows,
+which the callers zero-pad anyway.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from jax.scipy.linalg import cho_solve
+
+from repro.core.registry import register_preconditioner
+
+__all__ = ["diag_tiles", "diag_vector", "block_jacobi", "jacobi",
+           "identity"]
+
+
+def _bcast(shift, ndim: int):
+    """Broadcast a scalar or per-lane ``(B,)`` shift against an ``ndim``
+    array by appending singleton axes (lanes lead, structure trails)."""
+    s = jnp.asarray(shift)
+    return s.reshape(s.shape + (1,) * (ndim - s.ndim))
+
+
+def diag_tiles(spec, data) -> jax.Array:
+    """Dense diagonal tiles of the plan operator, in cluster order.
+
+    Returns ``(..., n_rb, bs, bs)`` — for each row-block, the kept ELL
+    tile whose column-block equals the row-block (zeros when a row-block
+    keeps no diagonal tile). Extraction is one masked reduction over the
+    ELL slots: the off-diagonal tiles are read, never materialized into
+    anything denser. Dead slots (``data.alive``) have their row/column
+    zeroed and their diagonal entry set to 1, so the blocks of
+    ``A' + shift*I`` are never singular.
+    """
+    if data.vals is None:
+        raise ValueError("profile-only plan (with_bsr=False) has no tiles "
+                         "to precondition from")
+    n_rb, bs = spec.n_rb, spec.bs
+    rb = jnp.arange(n_rb, dtype=data.col_idx.dtype)
+    on_diag = (data.col_idx == rb[:, None]) & data.nbr_mask
+    tiles = jnp.sum(
+        jnp.where(on_diag[..., None, None], data.vals, 0.0), axis=-3)
+    if data.alive is not None:
+        # alive is kept in ORIGINAL slot order (it rides the host mask);
+        # the tiles live in cluster order — permute, then pad the
+        # capacity -> n_rb*bs structural slots as dead
+        alive_cl = jnp.take_along_axis(data.alive, data.pi, axis=-1)
+        pad = n_rb * bs - spec.capacity
+        if pad:
+            alive_cl = jnp.pad(
+                alive_cl, [(0, 0)] * (alive_cl.ndim - 1) + [(0, pad)])
+        live = alive_cl.reshape(
+            alive_cl.shape[:-1] + (n_rb, bs)).astype(tiles.dtype)
+        tiles = tiles * live[..., :, None] * live[..., None, :]
+        tiles = tiles + (1.0 - live[..., :, None]) * jnp.eye(bs,
+                                                             dtype=tiles.dtype)
+    return tiles
+
+
+def diag_vector(spec, data) -> jax.Array:
+    """Pointwise diagonal of the plan operator ``(..., capacity)`` —
+    the diagonal of :func:`diag_tiles` flattened back to slot order."""
+    t = diag_tiles(spec, data)
+    d = jnp.diagonal(t, axis1=-2, axis2=-1)        # (..., n_rb, bs)
+    return d.reshape(d.shape[:-2] + (spec.n_rb * spec.bs,))[
+        ..., :spec.capacity]
+
+
+@register_preconditioner("block_jacobi")
+def block_jacobi(spec, data, shift=0.0):
+    """Block-Jacobi from the diagonal BSR tiles (batched Cholesky).
+
+    Factors ``D_rb + shift*I`` per row-block in ONE batched
+    ``jnp.linalg.cholesky`` over every (lane, row-block); ``apply`` runs
+    the paired triangular solves on residual segments reshaped to
+    blocks. Requires the tiles to be symmetric positive definite after
+    the shift (symmetrized pattern + RBF-style values + a positive
+    shift, the KRR setting); fall back to ``"jacobi"`` otherwise.
+    """
+    n_rb, bs, cap = spec.n_rb, spec.bs, spec.capacity
+    tiles = diag_tiles(spec, data)
+    shift = _bcast(shift, tiles.ndim).astype(tiles.dtype)
+    tiles = tiles + shift * jnp.eye(bs, dtype=tiles.dtype)
+    L = jnp.linalg.cholesky(tiles)                  # (..., n_rb, bs, bs)
+    # a heavily truncated kernel with a small shift can leave a diagonal
+    # block indefinite (no Cholesky factor -> NaN); degrade exactly those
+    # blocks to their pointwise-diagonal factor (Jacobi) instead of
+    # poisoning the whole solve
+    d = jnp.diagonal(tiles, axis1=-2, axis2=-1)
+    diag_L = jnp.sqrt(jnp.maximum(d, 1e-12))[..., :, None] \
+        * jnp.eye(bs, dtype=tiles.dtype)
+    bad = ~jnp.all(jnp.isfinite(L), axis=(-2, -1), keepdims=True)
+    L = jnp.where(bad, diag_L, L)
+    # invert ONCE at factor time: LAPACK triangular solves dispatch
+    # per block and would dominate every CG iteration; an explicit
+    # inverse turns the per-iteration apply into one batched matmul
+    # (symmetric, and preconditioner accuracy is not solution accuracy)
+    minv = cho_solve((L, True),
+                     jnp.broadcast_to(jnp.eye(bs, dtype=tiles.dtype),
+                                      tiles.shape))
+
+    def apply(r: jax.Array, axis: int = -1) -> jax.Array:
+        ax = axis % r.ndim - r.ndim
+        rr = jnp.moveaxis(r, ax, -1)                # (..., [f,] cap)
+        pad = n_rb * bs - cap
+        if pad:
+            rr = jnp.pad(rr, [(0, 0)] * (rr.ndim - 1) + [(0, pad)])
+        blocks = rr.reshape(rr.shape[:-1] + (n_rb, bs))
+        if ax == -1:
+            zz = jnp.einsum("...rij,...rj->...ri", minv, blocks)
+        else:
+            # (..., f, n_rb, bs): hit every right-hand side of a block
+            # with the same inverse in one contraction
+            zz = jnp.einsum("...rij,...frj->...fri", minv, blocks)
+        zz = zz.reshape(rr.shape)[..., :cap]
+        return jnp.moveaxis(zz, -1, ax)
+
+    return apply
+
+
+@register_preconditioner("jacobi")
+def jacobi(spec, data, shift=0.0):
+    """Pointwise diagonal scaling ``z = r / (diag(A') + shift)`` — the
+    plain fallback when the diagonal tiles are not SPD (or ``bs`` is
+    large enough that the block solves dominate an iteration)."""
+    dv = diag_vector(spec, data)
+    d = dv + _bcast(shift, dv.ndim).astype(dv.dtype)
+    d = jnp.where(d == 0, 1.0, d)
+
+    def apply(r: jax.Array, axis: int = -1) -> jax.Array:
+        ax = axis % r.ndim - r.ndim
+        if ax == -1:
+            return r / d
+        return r / jnp.expand_dims(d, -1)
+
+    return apply
+
+
+@register_preconditioner("identity")
+def identity(spec, data, shift=0.0):
+    """No preconditioning (plain CG)."""
+    del spec, data, shift
+
+    def apply(r: jax.Array, axis: int = -1) -> jax.Array:
+        del axis
+        return r
+
+    return apply
